@@ -1,0 +1,63 @@
+//! Fig 1 — gradient distributions for different neural networks.
+//!
+//! The paper's point: different models' gradients live at very different
+//! scales, so one global loss-scaling factor cannot fit all. We train
+//! each model a few steps and print the exponent histogram of all its
+//! gradients, plus the p5/p50/p95 exponents.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::aps::{SyncMethod, SyncOptions};
+use aps_cpd::coordinator::{Trainer, TrainerSetup};
+use aps_cpd::metrics::ExpHistogram;
+use aps_cpd::util::table::Table;
+use support::BenchEnv;
+
+fn main() {
+    support::header("Fig 1 — gradient distributions across models", "paper §3.1, Fig 1");
+    let env = BenchEnv::new();
+
+    let mut t = Table::new(&["model", "p5 exp", "p50 exp", "p95 exp", "spread (octaves)"]);
+    let mut medians = Vec::new();
+    for name in ["mlp", "davidnet", "resnet", "fcn", "transformer"] {
+        let model = env.model(name);
+        let mut setup = TrainerSetup::new(4, SyncOptions::new(SyncMethod::Fp32));
+        setup.epochs = 1;
+        setup.steps_per_epoch = 5;
+        let mut trainer = Trainer::new(&model, setup).expect("trainer");
+        let mut out = Default::default();
+        for s in 0..5 {
+            trainer.step(0, s, &mut out).expect("step");
+        }
+        let grads = trainer.snapshot_gradients(5).expect("grads");
+        let mut h = ExpHistogram::gradient_window();
+        for g in &grads {
+            h.add_all(g);
+        }
+        let (p5, p50, p95) =
+            (h.percentile_exp(5.0), h.percentile_exp(50.0), h.percentile_exp(95.0));
+        medians.push((name, p50));
+        t.row(&[
+            name.to_string(),
+            format!("2^{p5}"),
+            format!("2^{p50}"),
+            format!("2^{p95}"),
+            format!("{}", p95 - p5),
+        ]);
+        println!("--- {name} ---");
+        print!("{}", h.ascii(40));
+        println!();
+    }
+    t.print();
+
+    // Shape claim: the median gradient exponent differs across models.
+    let min = medians.iter().map(|s| s.1).min().unwrap();
+    let max = medians.iter().map(|s| s.1).max().unwrap();
+    assert!(
+        max - min >= 2,
+        "models' median gradient scales should differ by ≥ 2 octaves (got {min}..{max})"
+    );
+    println!("\nmedian gradient exponent spans 2^{min}..2^{max} across models —");
+    println!("no single loss-scaling constant fits all (the paper's Fig 1 argument) ✔");
+}

@@ -1,0 +1,79 @@
+//! Fig 4 — power-of-two vs non-power-of-two scaling factors.
+//!
+//! Scaling by 8 touches only the exponent field, so the wire value
+//! `Q(x·8)` is *exactly* `x·8` for every representable `x` — nothing is
+//! lost in the scaled communication. Scaling by 10 disturbs the mantissa:
+//! `Q(x·10) ≠ x·10`, i.e. the gradient that actually travels is wrong by
+//! up to half an ulp before the reduction even starts.
+//!
+//! We sweep factors 2..16 over every representable (5,2) magnitude (whose
+//! scaled value stays in range) and report the mean relative *wire* error
+//! `|Q(x·f) − x·f| / (x·f)`, plus the fraction of values represented
+//! inexactly.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::cpd::{quantize, FpFormat, Rounding};
+use aps_cpd::util::table::Table;
+
+const RNE: Rounding = Rounding::NearestEven;
+
+fn main() {
+    support::header("Fig 4 — power-of-two scaling is lossless on the wire", "paper §3.3.1, Fig 4");
+    let fmt = FpFormat::E5M2;
+    // Representable magnitudes whose ×16 stays finite and whose value is
+    // normal (subnormals lose mantissa bits by construction).
+    let vals: Vec<f32> = fmt
+        .enumerate_magnitudes()
+        .into_iter()
+        .filter(|&v| {
+            v >= fmt.min_normal() as f32 && (v as f64) * 16.0 <= fmt.max_value()
+        })
+        .collect();
+    assert!(vals.len() > 20);
+
+    let mut t = Table::new(&["factor", "inexact wire values", "mean |wire rel err|"]);
+    let mut pow2_clean = true;
+    let mut non_pow2_dirty = 0usize;
+    for factor in 2..=16u32 {
+        let f = factor as f32;
+        let mut inexact = 0usize;
+        let mut err = 0.0f64;
+        for &v in &vals {
+            let scaled = v as f64 * f as f64; // exact in f64
+            let wire = quantize(v * f, fmt, RNE) as f64;
+            if wire != scaled {
+                inexact += 1;
+                err += ((wire - scaled) / scaled).abs();
+            }
+        }
+        let is_pow2 = factor.is_power_of_two();
+        if is_pow2 && inexact > 0 {
+            pow2_clean = false;
+        }
+        if !is_pow2 && inexact > 0 {
+            non_pow2_dirty += 1;
+        }
+        t.row(&[
+            format!("{factor}{}", if is_pow2 { "  (2^k)" } else { "" }),
+            format!("{}/{}", inexact, vals.len()),
+            format!("{:.4}", err / vals.len() as f64),
+        ]);
+    }
+    t.print();
+
+    assert!(pow2_clean, "power-of-two factors must put exact values on the wire");
+    assert_eq!(non_pow2_dirty, 11, "every non-power factor must corrupt some values");
+    println!(
+        "\npower-of-two factors put the exact scaled value on the wire;\nevery non-power factor corrupts mantissas — the paper's Fig 4 argument ✔"
+    );
+
+    // The paper's concrete example: 8 is clean, 10 is not.
+    let x = 1.25f32;
+    println!("\nconcrete (5,2) example: x = {x}");
+    println!("  Q(x·8)  = {}   (= x·8 exactly)", quantize(x * 8.0, fmt, RNE));
+    println!("  Q(x·10) = {}   (x·10 = 12.5 is not representable)", quantize(x * 10.0, fmt, RNE));
+    assert_eq!(quantize(x * 8.0, fmt, RNE), 10.0);
+    assert_ne!(quantize(x * 10.0, fmt, RNE) as f64, 12.5);
+}

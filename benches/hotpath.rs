@@ -1,0 +1,67 @@
+//! Hot-path micro-benchmarks (§Perf): quantize throughput, all-reduce
+//! emulation throughput, APS end-to-end sync, and the PJRT train-step.
+//! Used by the performance pass in EXPERIMENTS.md §Perf.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::aps::{self, SyncMethod, SyncOptions};
+use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
+use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
+use aps_cpd::util::bench::Bench;
+
+fn main() {
+    support::header("hot-path microbenchmarks", "EXPERIMENTS.md §Perf");
+    let bench = Bench { warmup_iters: 2, samples: 9, iters_per_sample: 1 };
+    let n = 4 << 20; // 4 Mi elements ≈ ResNet-50-scale layer block
+    let xs: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 1e-3).collect();
+
+    // quantize (downcast) throughput
+    let m = bench.run("quantize_shifted_slice e5m2, 4Mi f32", || {
+        quantize_shifted_slice(&xs, 12, FpFormat::E5M2, Rounding::NearestEven)
+    });
+    println!("{}", m.report_throughput(4 * n as u64));
+
+    // ring all-reduce emulation, 8 workers
+    let world = 8;
+    let grads: Vec<Vec<f32>> = (0..world)
+        .map(|w| xs.iter().map(|&x| x * (1.0 + w as f32 * 0.01)).collect())
+        .collect();
+    let cluster = SimCluster::new(world);
+    for (label, fmt, kahan) in [
+        ("ring all-reduce fp32 (8w, 4Mi)", FpFormat::FP32, false),
+        ("ring all-reduce e5m2 (8w, 4Mi)", FpFormat::E5M2, false),
+        ("ring all-reduce e5m2+kahan (8w, 4Mi)", FpFormat::E5M2, true),
+    ] {
+        let m = bench.run(label, || {
+            cluster.all_reduce_sum(
+                &grads,
+                Topology::Ring,
+                ReduceOptions { fmt, mode: Rounding::NearestEven, kahan },
+            )
+        });
+        println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
+    }
+
+    // full APS synchronize (quantize + exponent phase + reduce + unscale)
+    let layered: Vec<Vec<Vec<f32>>> = grads.iter().map(|g| vec![g.clone()]).collect();
+    let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+    let m = bench.run("aps::synchronize e5m2 (8w, 1 layer × 4Mi)", || {
+        aps::synchronize(&cluster, &layered, &opts)
+    });
+    println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
+
+    // PJRT train step, if artifacts are present
+    if std::path::Path::new("artifacts/.stamp").exists() {
+        let engine = aps_cpd::runtime::Engine::cpu().expect("engine");
+        let model = engine.load_model("artifacts", "resnet").expect("model");
+        let params = model.initial_params().expect("init");
+        let b = model.spec.batch;
+        let x = vec![0.1f32; b * model.spec.x_elems_per_example()];
+        let y = vec![1i32; b];
+        let m = bench.run("PJRT train_step resnet (batch 16)", || {
+            model.train_step(&params, Some(&x), None, &y).expect("step")
+        });
+        println!("{}", m.report());
+    }
+}

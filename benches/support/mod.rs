@@ -1,0 +1,132 @@
+//! Shared plumbing for the table/figure reproduction benches.
+//!
+//! Every bench prints (a) the paper's reported numbers and (b) this
+//! repository's measured numbers side by side, then asserts the *shape*
+//! claims (who wins, roughly by how much) — see DESIGN.md §3 on why
+//! absolute values differ (synthetic workloads, scaled-down models).
+
+#![allow(dead_code)]
+
+use aps_cpd::aps::{HybridSchedule, SyncMethod, SyncOptions};
+use aps_cpd::collectives::Topology;
+use aps_cpd::coordinator::{TrainOutcome, Trainer, TrainerSetup};
+use aps_cpd::optim::{LrSchedule, OptimizerKind};
+use aps_cpd::runtime::{Engine, Model};
+
+pub struct BenchEnv {
+    pub engine: Engine,
+}
+
+impl BenchEnv {
+    pub fn new() -> Self {
+        if !std::path::Path::new("artifacts/.stamp").exists() {
+            eprintln!("ERROR: artifacts missing — run `make artifacts` first");
+            std::process::exit(0); // treat as skip under `cargo bench`
+        }
+        let engine = Engine::cpu().expect("PJRT cpu client");
+        BenchEnv { engine }
+    }
+
+    pub fn model(&self, name: &str) -> Model {
+        self.engine.load_model("artifacts", name).expect("load model")
+    }
+}
+
+/// Standard training-run shape used by the accuracy tables. Scale knobs
+/// come from env (`APS_BENCH_EPOCHS`, `APS_BENCH_STEPS`) so `make bench`
+/// can run a longer calibration pass.
+#[derive(Clone, Copy)]
+pub struct RunShape {
+    pub world: usize,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub eval_examples: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl RunShape {
+    pub fn standard(world: usize) -> Self {
+        let epochs = env_usize("APS_BENCH_EPOCHS", 4);
+        let steps = env_usize("APS_BENCH_STEPS", 20);
+        RunShape {
+            world,
+            epochs,
+            steps_per_epoch: steps,
+            eval_examples: 512,
+            lr: 0.05,
+            seed: 42,
+        }
+    }
+
+    /// Smaller shape for the 256-worker experiments (fewer, larger steps).
+    pub fn large_cluster(world: usize) -> Self {
+        let epochs = env_usize("APS_BENCH_EPOCHS", 2);
+        let steps = env_usize("APS_BENCH_STEPS", 20);
+        RunShape {
+            world,
+            epochs,
+            steps_per_epoch: steps,
+            eval_examples: 256,
+            lr: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run one training configuration and return its outcome.
+#[allow(clippy::too_many_arguments)]
+pub fn train(
+    model: &Model,
+    shape: RunShape,
+    method: SyncMethod,
+    topo: Topology,
+    kahan: bool,
+    fp32_last_layer: bool,
+    hybrid: Option<HybridSchedule>,
+    optimizer: Option<OptimizerKind>,
+    label: &str,
+) -> TrainOutcome {
+    let sync = SyncOptions::new(method)
+        .with_topology(topo)
+        .with_kahan(kahan)
+        .with_fp32_last_layer(fp32_last_layer);
+    let mut setup = TrainerSetup::new(shape.world, sync);
+    setup.epochs = shape.epochs;
+    setup.steps_per_epoch = shape.steps_per_epoch;
+    setup.eval_examples = shape.eval_examples;
+    setup.schedule = LrSchedule::Constant { lr: shape.lr };
+    setup.seed = shape.seed;
+    if let Some(o) = optimizer {
+        setup.optimizer = o;
+    }
+    setup.hybrid = hybrid;
+    let mut trainer = Trainer::new(model, setup).expect("trainer");
+    trainer.train(label).expect("train")
+}
+
+/// Simple accuracy formatter: `92.4` or `DIVERGED`.
+pub fn acc_cell(out: &TrainOutcome) -> String {
+    if out.diverged || !out.final_metric.is_finite() {
+        "DIVERGED".to_string()
+    } else {
+        format!("{:.1}", 100.0 * out.final_metric)
+    }
+}
+
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n==================================================================");
+    println!("{title}");
+    println!("paper reference: {paper_ref}");
+    println!("==================================================================\n");
+}
+
+pub fn shape_note() {
+    println!(
+        "\n(shape reproduction: synthetic workload + scaled-down model — compare\n orderings and gaps against the paper column, not absolute values)"
+    );
+}

@@ -1,0 +1,47 @@
+//! Table 1 — representable ranges of floating-point formats.
+//!
+//! Paper values: FP32 [2^-149, 2^127], FP16 [2^-24, 2^15],
+//! BF16 [2^-133, 2^127], Wang-FP16 (6,9) [2^-39, 2^31], FP8 (5,2)
+//! [2^-16, 2^15]. These are *exact* reproductions (pure arithmetic).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::util::table::Table;
+
+fn main() {
+    support::header("Table 1 — floating-point format ranges", "paper §2.2, Table 1");
+    let rows: &[(&str, FpFormat, (i32, i32))] = &[
+        ("IEEE 754 FP32", FpFormat::FP32, (-149, 127)),
+        ("IEEE 754 FP16", FpFormat::FP16, (-24, 15)),
+        ("BFloat16", FpFormat::BF16, (-133, 127)),
+        ("FP16 in [27] (6,9)", FpFormat::E6M9, (-39, 31)),
+        ("FP8 in [27] (5,2)", FpFormat::E5M2, (-16, 15)),
+    ];
+    let mut t = Table::new(&["format", "exp bits", "man bits", "measured range", "paper range"]);
+    for (name, f, paper) in rows {
+        let (lo, hi) = f.exponent_range();
+        assert_eq!((lo, hi), *paper, "{name} range mismatch vs paper");
+        t.row(&[
+            name.to_string(),
+            f.exp_bits.to_string(),
+            f.man_bits.to_string(),
+            format!("[2^{lo}, 2^{hi}]"),
+            format!("[2^{}, 2^{}]", paper.0, paper.1),
+        ]);
+    }
+    // Extra formats this repo uses (not in the paper's table):
+    for (name, f) in [("(4,3) 8-bit", FpFormat::E4M3), ("(3,0) 4-bit", FpFormat::E3M0)] {
+        let (lo, hi) = f.exponent_range();
+        t.row(&[
+            name.to_string(),
+            f.exp_bits.to_string(),
+            f.man_bits.to_string(),
+            format!("[2^{lo}, 2^{hi}]"),
+            "-".to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nall paper ranges match exactly ✔");
+}

@@ -1,0 +1,80 @@
+//! Table 3 + Fig 7/8 — FCN segmentation under low-precision gradients.
+//!
+//! Paper (cityscapes, batch 16, 8 nodes, 40K iters):
+//!   fp32: mIoU 75.16 / mAcc 82.84
+//!   (4,3) aps: 75.88 / 84.34    (4,3) no: 74.60 / 82.55
+//!   (5,2) aps: 74.76 / 82.62    (5,2) no: 74.41 / 82.30
+//!
+//! Shape claims: APS ≥ no-APS for both formats; 8-bit APS ≈ FP32.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::aps::SyncMethod;
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::util::table::Table;
+use support::{train, BenchEnv, RunShape};
+
+fn main() {
+    support::header("Table 3 / Fig 7 — FCN segmentation", "paper §4.1, Table 3");
+    let env = BenchEnv::new();
+    let model = env.model("fcn");
+    let mut shape = RunShape::standard(8);
+    shape.eval_examples = 64;
+    shape.lr = 0.1;
+
+    let rows: &[(&str, &str, SyncMethod, &str, &str)] = &[
+        ("(8,23): 32bits", "/", SyncMethod::Fp32, "75.16", "82.84"),
+        ("(4,3): 8bits", "yes", SyncMethod::Aps { fmt: FpFormat::E4M3 }, "75.88", "84.34"),
+        ("(4,3): 8bits", "no", SyncMethod::Naive { fmt: FpFormat::E4M3 }, "74.60", "82.55"),
+        ("(5,2): 8bits", "yes", SyncMethod::Aps { fmt: FpFormat::E5M2 }, "74.76", "82.62"),
+        ("(5,2): 8bits", "no", SyncMethod::Naive { fmt: FpFormat::E5M2 }, "74.41", "82.30"),
+    ];
+
+    let mut t = Table::new(&[
+        "precision",
+        "APS",
+        "mIoU %",
+        "mAcc %",
+        "paper mIoU",
+        "paper mAcc",
+    ]);
+    let mut results = Vec::new();
+    for (prec, aps, method, p_miou, p_macc) in rows {
+        let out = train(
+            &model,
+            shape,
+            *method,
+            Topology::Ring,
+            false,
+            false,
+            None,
+            None,
+            &format!("t3-fcn-{prec}-aps{aps}"),
+        );
+        t.row(&[
+            prec.to_string(),
+            aps.to_string(),
+            format!("{:.2}", 100.0 * out.final_metric),
+            format!("{:.2}", 100.0 * out.final_macc.unwrap_or(f64::NAN)),
+            p_miou.to_string(),
+            p_macc.to_string(),
+        ]);
+        results.push(out);
+    }
+    t.print();
+    support::shape_note();
+
+    let fp32 = results[0].final_metric;
+    let e4m3_aps = results[1].final_metric;
+    let e5m2_aps = results[3].final_metric;
+    let e4m3_naive = results[2].final_metric;
+    let e5m2_naive = results[4].final_metric;
+    assert!(fp32 > 0.3, "fp32 mIoU too weak: {fp32}");
+    assert!(e4m3_aps > fp32 - 0.08, "e4m3 APS should track fp32 mIoU");
+    assert!(e5m2_aps > fp32 - 0.08, "e5m2 APS should track fp32 mIoU");
+    assert!(e4m3_aps + 0.02 >= e4m3_naive, "APS ≥ naive for (4,3)");
+    assert!(e5m2_aps + 0.02 >= e5m2_naive, "APS ≥ naive for (5,2)");
+    println!("\nshape ✔  APS ≥ no-APS for both 8-bit formats; APS ≈ FP32 mIoU");
+}

@@ -1,0 +1,115 @@
+//! Table 4 + Fig 6 — DavidNet / ResNet18 classification at 4K batch on
+//! 8 workers, across precisions, with and without APS.
+//!
+//! Paper (CIFAR10, 4K batch, 8 nodes):
+//!   DavidNet: fp32 88.2 | (5,2) aps 88.4 / no 88.3 | (4,3) aps 88.6 /
+//!             no 10.0 | (3,0) aps 81.3 / no 10.0
+//!   ResNet18: fp32 91.4 | (5,2) aps 91.4 / no 90.1 | (4,3) aps 91.6 /
+//!             no 90.4 | (3,0) aps 86.7 / no 10.0
+//!
+//! Shape claims reproduced here: APS ≈ FP32 at 8 bits; 4-bit works only
+//! with APS (collapses without).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::aps::SyncMethod;
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::util::table::Table;
+use support::{acc_cell, train, BenchEnv, RunShape};
+
+fn main() {
+    support::header(
+        "Table 4 / Fig 6 — classification accuracy across precisions",
+        "paper §4.1, Table 4",
+    );
+    let env = BenchEnv::new();
+    let shape = RunShape::standard(8);
+
+    let paper: &[(&str, &str, &str, &str)] = &[
+        // (model, precision, aps, paper accuracy)
+        ("davidnet", "(8,23): 32bits", "/", "88.2"),
+        ("davidnet", "(5,2): 8bits", "yes", "88.4"),
+        ("davidnet", "(5,2): 8bits", "no", "88.3"),
+        ("davidnet", "(4,3): 8bits", "yes", "88.6"),
+        ("davidnet", "(4,3): 8bits", "no", "10.0"),
+        ("davidnet", "(3,0): 4bits", "yes", "81.3"),
+        ("davidnet", "(3,0): 4bits", "no", "10.0"),
+        ("resnet", "(8,23): 32bits", "/", "91.4"),
+        ("resnet", "(5,2): 8bits", "yes", "91.4"),
+        ("resnet", "(5,2): 8bits", "no", "90.1"),
+        ("resnet", "(4,3): 8bits", "yes", "91.6"),
+        ("resnet", "(4,3): 8bits", "no", "90.4"),
+        ("resnet", "(3,0): 4bits", "yes", "86.7"),
+        ("resnet", "(3,0): 4bits", "no", "10.0"),
+    ];
+
+    let method_for = |prec: &str, aps: &str| -> SyncMethod {
+        let fmt = match prec {
+            "(5,2): 8bits" => FpFormat::E5M2,
+            "(4,3): 8bits" => FpFormat::E4M3,
+            "(3,0): 4bits" => FpFormat::E3M0,
+            _ => return SyncMethod::Fp32,
+        };
+        if aps == "yes" {
+            SyncMethod::Aps { fmt }
+        } else {
+            SyncMethod::Naive { fmt }
+        }
+    };
+
+    let mut t = Table::new(&["model", "precision", "APS", "measured acc %", "paper acc %"]);
+    let mut measured = std::collections::BTreeMap::new();
+    for (model_name, prec, aps, paper_acc) in paper {
+        let model = env.model(model_name);
+        let out = train(
+            &model,
+            shape,
+            method_for(prec, aps),
+            Topology::Ring,
+            false,
+            false,
+            None,
+            None,
+            &format!("t4-{model_name}-{prec}-aps{aps}"),
+        );
+        measured.insert((model_name.to_string(), prec.to_string(), aps.to_string()), out.final_metric);
+        t.row(&[
+            model_name.to_string(),
+            prec.to_string(),
+            aps.to_string(),
+            acc_cell(&out),
+            paper_acc.to_string(),
+        ]);
+    }
+    t.print();
+    support::shape_note();
+
+    // ---- shape assertions --------------------------------------------
+    for model in ["davidnet", "resnet"] {
+        let g = |prec: &str, aps: &str| {
+            measured[&(model.to_string(), prec.to_string(), aps.to_string())]
+        };
+        let fp32 = g("(8,23): 32bits", "/");
+        assert!(fp32 > 0.4, "{model} fp32 baseline too weak: {fp32}");
+        // 8-bit APS stays within a few points of FP32.
+        assert!(
+            g("(5,2): 8bits", "yes") > fp32 - 0.08,
+            "{model}: e5m2+APS should track fp32"
+        );
+        assert!(
+            g("(4,3): 8bits", "yes") > fp32 - 0.08,
+            "{model}: e4m3+APS should track fp32"
+        );
+        // 4-bit: APS keeps it training; naive collapses toward chance.
+        let four_aps = g("(3,0): 4bits", "yes");
+        let four_naive = g("(3,0): 4bits", "no");
+        assert!(four_aps > fp32 - 0.25, "{model}: 4-bit APS should still learn");
+        assert!(
+            four_naive < four_aps - 0.1,
+            "{model}: naive 4-bit ({four_naive}) must fall well below APS ({four_aps})"
+        );
+    }
+    println!("\nshape ✔  8-bit APS ≈ FP32; 4-bit learns only with APS (Table 4's story)");
+}

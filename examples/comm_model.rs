@@ -1,0 +1,85 @@
+//! Communication-model tour: Fig 11 reproduction plus sweeps over world
+//! size and topology with the α–β model.
+
+use anyhow::Result;
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::perfmodel::{fig11_layers, fig11_table, sync_time, CommMethod, NetworkModel};
+use aps_cpd::util::table::Table;
+
+fn main() -> Result<()> {
+    let net = NetworkModel::v100_nccl();
+
+    println!("Fig 11 — all-reduce time on 32 workers (α–β model, V100/NCCL calibration):\n");
+    let mut t = Table::new(&[
+        "layer",
+        "fp16 ms",
+        "APS exp ms",
+        "APS payload ms",
+        "APS total ms",
+        "speedup",
+    ]);
+    for r in fig11_table(&net, 32) {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.3}", r.fp16_ms),
+            format!("{:.4}", r.aps_exp_phase_ms),
+            format!("{:.3}", r.aps_payload_ms),
+            format!("{:.3}", r.aps_total_ms),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t.print();
+
+    println!("\nTopology sweep — ResNet-50 tail layers, APS-8bit total sync time (ms):\n");
+    let layers = fig11_layers();
+    let mut t = Table::new(&["world", "ring", "hier k=8", "hier k=16", "hier k=32"]);
+    for world in [32usize, 64, 128, 256, 512] {
+        let mut row = vec![world.to_string()];
+        for topo in [
+            Some(Topology::Ring),
+            (world % 8 == 0).then_some(Topology::Hierarchical { group_size: 8 }),
+            (world % 16 == 0).then_some(Topology::Hierarchical { group_size: 16 }),
+            (world % 32 == 0).then_some(Topology::Hierarchical { group_size: 32 }),
+        ] {
+            row.push(match topo {
+                Some(tp) => format!(
+                    "{:.3}",
+                    1e3 * sync_time(
+                        &net,
+                        tp,
+                        world,
+                        &layers,
+                        CommMethod::Aps { fmt: FpFormat::E5M2 },
+                        true
+                    )
+                ),
+                None => "-".to_string(),
+            });
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    println!("\nWire-width sweep — fused tail-layer sync on 32 workers:\n");
+    let mut t = Table::new(&["method", "time ms", "vs fp32"]);
+    let fp32 = sync_time(
+        &net,
+        Topology::Ring,
+        32,
+        &layers,
+        CommMethod::PlainAllReduce { bits: 32 },
+        true,
+    );
+    for (name, m) in [
+        ("fp32 all-reduce", CommMethod::PlainAllReduce { bits: 32 }),
+        ("fp16 all-reduce", CommMethod::PlainAllReduce { bits: 16 }),
+        ("APS 8-bit (e5m2)", CommMethod::Aps { fmt: FpFormat::E5M2 }),
+        ("APS 4-bit (e3m0, byte-packed)", CommMethod::Aps { fmt: FpFormat::E3M0 }),
+    ] {
+        let s = sync_time(&net, Topology::Ring, 32, &layers, m, true);
+        t.row(&[name.to_string(), format!("{:.3}", 1e3 * s), format!("{:.2}x", fp32 / s)]);
+    }
+    t.print();
+    Ok(())
+}

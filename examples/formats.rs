@@ -1,0 +1,71 @@
+//! CPD tour: Table 1 format ranges, the Fig 4 power-of-two round-trip,
+//! the Fig 12 accumulator-precision effect, and Kahan summation.
+
+use anyhow::Result;
+use aps_cpd::cpd::gemm::{dot, AccumStrategy};
+use aps_cpd::cpd::{accum, quantize, quantize_shifted, FpFormat, Rounding};
+use aps_cpd::util::table::Table;
+
+const RNE: Rounding = Rounding::NearestEven;
+
+fn main() -> Result<()> {
+    // ---- Table 1: representable ranges. ---------------------------------
+    println!("Table 1 — representable ranges:\n");
+    let mut t = Table::new(&["format", "exp", "man", "range"]);
+    for f in [
+        FpFormat::FP32,
+        FpFormat::FP16,
+        FpFormat::BF16,
+        FpFormat::E6M9,
+        FpFormat::E5M2,
+        FpFormat::E4M3,
+        FpFormat::E3M0,
+    ] {
+        let (lo, hi) = f.exponent_range();
+        t.row(&[
+            f.to_string(),
+            f.exp_bits.to_string(),
+            f.man_bits.to_string(),
+            format!("[2^{lo}, 2^{hi}]"),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig 4: scaling by 8 is lossless on the wire, by 10 is not. -----
+    println!("\nFig 4 — wire value after scaling in (5,2):\n");
+    let x = 1.25f32;
+    let wire8 = quantize(x * 8.0, FpFormat::E5M2, RNE);
+    let wire10 = quantize(x * 10.0, FpFormat::E5M2, RNE);
+    println!("  x = {x}");
+    println!("  Q(x*8)  = {wire8}   (= x·8 exactly: exponent-only change)");
+    println!("  Q(x*10) = {wire10}   (x·10 = 12.5 not representable → round-off)");
+    assert_eq!(wire8, 10.0);
+    assert_ne!(wire10 as f64, 12.5);
+    // The exponent-space shift primitive is exact by construction:
+    assert_eq!(quantize_shifted(x, 3, FpFormat::E5M2, RNE), 10.0);
+
+    // ---- Fig 12: accumulator precision in a dot product. ----------------
+    println!("\nFig 12 — dot-product accumulator strategies in (4,2), exact = 128:\n");
+    let a = vec![1.0f32; 256];
+    let b = vec![0.5f32; 256];
+    let fmt = FpFormat::new(4, 2);
+    let mut t = Table::new(&["strategy", "result"]);
+    for (name, s) in [
+        ("FP32 accumulate, cast once (QPyTorch-style)", AccumStrategy::WideThenCast),
+        ("low-precision accumulator (CPD faithful)", AccumStrategy::LowPrecision),
+        ("low-precision + Kahan (CPD §5.1.1)", AccumStrategy::Kahan),
+    ] {
+        let r = dot(&a, &b, fmt, RNE, s);
+        t.row(&[name.to_string(), format!("{r}")]);
+    }
+    t.print();
+
+    // ---- Kahan accumulation demo. ---------------------------------------
+    println!("\nKahan summation — 64 + 1.0×64 in (4,3), exact = 128:\n");
+    let xs: Vec<f32> = std::iter::once(64.0).chain(std::iter::repeat(1.0).take(64)).collect();
+    let naive = accum::sum_low_precision(&xs, FpFormat::E4M3, RNE);
+    let kahan = accum::sum_kahan(&xs, FpFormat::E4M3, RNE);
+    println!("  naive low-precision sum: {naive}");
+    println!("  Kahan low-precision sum: {kahan}");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Segmentation workload (paper Table 3 scenario): train the FCN on the
+//! synthetic shape dataset under FP32 vs APS-8bit vs naive-8bit and
+//! report mIoU / mAcc.
+
+use anyhow::Result;
+use aps_cpd::aps::{SyncMethod, SyncOptions};
+use aps_cpd::coordinator::{Trainer, TrainerSetup};
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::optim::LrSchedule;
+use aps_cpd::runtime::Engine;
+use aps_cpd::util::cli::Args;
+use aps_cpd::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 30)?;
+    let epochs = args.get_usize("epochs", 3)?;
+
+    let engine = Engine::cpu()?;
+    let model = engine.load_model("artifacts", "fcn")?;
+    println!(
+        "fcn: {} params, {} classes, batch {} × 8 workers",
+        model.spec.total_params(),
+        model.spec.num_classes,
+        model.spec.batch
+    );
+
+    let mut t = Table::new(&["precision", "APS", "mIoU", "mAcc", "diverged"]);
+    for (label, aps, method) in [
+        ("(8,23): 32bits", "/", SyncMethod::Fp32),
+        ("(4,3): 8bits", "yes", SyncMethod::Aps { fmt: FpFormat::E4M3 }),
+        ("(4,3): 8bits", "no", SyncMethod::Naive { fmt: FpFormat::E4M3 }),
+        ("(5,2): 8bits", "yes", SyncMethod::Aps { fmt: FpFormat::E5M2 }),
+        ("(5,2): 8bits", "no", SyncMethod::Naive { fmt: FpFormat::E5M2 }),
+    ] {
+        let mut setup = TrainerSetup::new(8, SyncOptions::new(method));
+        setup.epochs = epochs;
+        setup.steps_per_epoch = steps;
+        setup.schedule = LrSchedule::Constant { lr: 0.1 };
+        setup.eval_examples = 64;
+        let mut trainer = Trainer::new(&model, setup)?;
+        let out = trainer.train(format!("fcn {label} aps={aps}"))?;
+        t.row(&[
+            label.to_string(),
+            aps.to_string(),
+            format!("{:.2}", 100.0 * out.final_metric),
+            format!("{:.2}", 100.0 * out.final_macc.unwrap_or(f64::NAN)),
+            format!("{}", out.diverged),
+        ]);
+    }
+    println!();
+    t.print();
+    Ok(())
+}

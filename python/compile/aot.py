@@ -1,0 +1,181 @@
+"""AOT lowering: JAX → HLO text artifacts + JSON metadata.
+
+Run once by ``make artifacts`` (python -m compile.aot --out-dir ../artifacts).
+Python never runs after this — the Rust coordinator loads the HLO text via
+the PJRT C API.
+
+Artifacts emitted per model NAME:
+  * ``NAME.train.hlo.txt`` — (params…, x, y) → (loss, grads…)
+  * ``NAME.eval.hlo.txt``  — (params…, x[, y]) → (logits|loss,)
+  * ``NAME.json``          — runtime::ModelSpec metadata
+  * ``NAME.init.json``     — deterministic initial parameters
+
+Plus the Layer-1 kernel artifacts:
+  * ``quantize.hlo.txt`` + ``quantize.json`` — the Pallas APS-quantize
+    kernel at a fixed element count (runtime-scalar format)
+  * ``quantize_golden.json`` — golden vectors for the bit-exactness
+    cross-test against the Rust `cpd::cast` implementation.
+
+HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.quantize import BLOCK, aps_quantize
+from .kernels.ref import quantize_ref
+from .model import (
+    REGISTRY,
+    example_args,
+    lower_model,
+    multi_example_args,
+    multi_train_fn,
+)
+
+QUANTIZE_N = 4 * BLOCK  # fixed element count of the standalone kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Worker counts for the vmapped one-dispatch-per-step artifacts.
+MULTI_WORLDS = {
+    "mlp": [8, 64, 256],
+    "mlp_qat": [8],
+    "davidnet": [8],
+    "resnet": [8, 64, 256],
+    "fcn": [8],
+    "transformer": [8],
+}
+
+
+def emit_model(name: str, out_dir: str, build) -> None:
+    defn = build()
+    train_fn, eval_fn = lower_model(defn)
+
+    train_hlo = to_hlo_text(jax.jit(train_fn).lower(*example_args(defn, for_eval=False)))
+    eval_hlo = to_hlo_text(jax.jit(eval_fn).lower(*example_args(defn, for_eval=True)))
+
+    train_name = f"{name}.train.hlo.txt"
+    eval_name = f"{name}.eval.hlo.txt"
+    with open(os.path.join(out_dir, train_name), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, eval_name), "w") as f:
+        f.write(eval_hlo)
+
+    multi = {}
+    for world in MULTI_WORLDS.get(name, []):
+        fn = multi_train_fn(defn, world)
+        hlo = to_hlo_text(jax.jit(fn).lower(*multi_example_args(defn, world)))
+        fname = f"{name}.train_w{world}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        multi[str(world)] = fname
+
+    spec = {
+        "multi_train": multi,
+        "name": name,
+        "params": [{"name": n, "shape": list(p.shape)} for n, p in defn.params],
+        "batch": defn.batch,
+        "x_shape": list(defn.x_shape),
+        "x_dtype": defn.x_dtype,
+        "y_shape": list(defn.y_shape),
+        "num_classes": defn.num_classes,
+        "eval_output": defn.eval_output,
+        "train_artifact": train_name,
+        "eval_artifact": eval_name,
+        "init_seed": defn.init_seed,
+    }
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(spec, f, indent=1)
+    with open(os.path.join(out_dir, f"{name}.init.json"), "w") as f:
+        json.dump([np.asarray(p).reshape(-1).tolist() for _, p in defn.params], f)
+    total = sum(int(np.asarray(p).size) for _, p in defn.params)
+    print(f"  {name}: {total} params, train {len(train_hlo)//1024} KiB HLO")
+
+
+def emit_quantize_kernel(out_dir: str) -> None:
+    spec = [
+        jax.ShapeDtypeStruct((QUANTIZE_N,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+
+    def fn(x, fe, eb, mb):
+        return (aps_quantize(x, fe, eb, mb),)
+
+    hlo = to_hlo_text(jax.jit(fn).lower(*spec))
+    with open(os.path.join(out_dir, "quantize.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, "quantize.json"), "w") as f:
+        json.dump({"artifact": "quantize.hlo.txt", "n": QUANTIZE_N}, f)
+    print(f"  quantize kernel: n={QUANTIZE_N}, {len(hlo)//1024} KiB HLO")
+
+
+def emit_golden(out_dir: str) -> None:
+    """Golden vectors: inputs × (format, factor) → expected wire values.
+
+    The Rust test `tests/golden_cast.rs` asserts bit-for-bit equality with
+    `cpd::cast::quantize`, pinning the three implementations (Rust, jnp
+    ref, Pallas kernel) together.
+    """
+    rng = np.random.RandomState(7)
+    specials = np.array(
+        [0.0, -0.0, 1.0, -1.0, 1.125, 1.375, 65504.0, 6e-8, 1e-30, 3.3e38, -2.5e-40],
+        np.float32,
+    )
+    rand = (rng.randn(200).astype(np.float32) * np.logspace(-20, 20, 200).astype(np.float32))
+    xs = np.concatenate([specials, rand])
+    cases = []
+    for (eb, mb) in [(5, 2), (4, 3), (3, 0), (8, 7), (5, 10), (2, 5), (8, 23)]:
+        for fe in [-20, -3, 0, 1, 17]:
+            q = np.asarray(quantize_ref(jnp.asarray(xs), fe, eb, mb))
+            cases.append(
+                {
+                    "exp_bits": eb,
+                    "man_bits": mb,
+                    "factor_exp": fe,
+                    # bit patterns, so INF/NaN and -0 survive JSON
+                    "out_bits": [int(b) for b in q.view(np.uint32)],
+                }
+            )
+    doc = {"in_bits": [int(b) for b in xs.view(np.uint32)], "cases": cases}
+    with open(os.path.join(out_dir, "quantize_golden.json"), "w") as f:
+        json.dump(doc, f)
+    print(f"  golden vectors: {len(xs)} inputs × {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(REGISTRY))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    print(f"lowering to {os.path.abspath(args.out_dir)} (jax {jax.__version__})")
+    emit_quantize_kernel(args.out_dir)
+    emit_golden(args.out_dir)
+    for name in args.models:
+        emit_model(name, args.out_dir, REGISTRY[name])
+    # build stamp for make
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: Kahan-compensated low-precision reduction.
+
+CPD's second device-side primitive (paper §5.1.1): accumulate a stack of
+``world`` gradient shards element-wise in the wire format, carrying a
+Kahan compensation register — the arithmetic a custom all-reduce unit
+would perform. Grid walks the element axis in VMEM strips; the worker
+axis is a `fori_loop` inside the kernel (sequential by definition — the
+fold order is the semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import quantize_ref
+
+__all__ = ["kahan_reduce", "REDUCE_BLOCK"]
+
+REDUCE_BLOCK = 4096
+
+
+def _kahan_reduce_kernel(eb_ref, mb_ref, x_ref, o_ref):
+    """x_ref: (world, BLOCK) shard stack → o_ref: (BLOCK,) reduced."""
+    eb = eb_ref[0]
+    mb = mb_ref[0]
+    world = x_ref.shape[0]
+
+    def q(v):
+        return quantize_ref(v, jnp.int32(0), eb, mb)
+
+    def body(w, carry):
+        s, c = carry
+        v = x_ref[w, :]
+        y = q(v - c)
+        t = q(s + y)
+        c2 = q(q(t - s) - y)
+        return (t, c2)
+
+    init = (jnp.zeros_like(o_ref[...]), jnp.zeros_like(o_ref[...]))
+    s, _ = jax.lax.fori_loop(0, world, body, init)
+    o_ref[...] = s
+
+
+def kahan_reduce(shards, exp_bits, man_bits):
+    """Reduce ``shards`` of shape (world, n) elementwise with low-precision
+    Kahan accumulation; returns the (n,) result (wire-format values).
+
+    ``n`` must be a multiple of ``REDUCE_BLOCK``.
+    """
+    world, n = shards.shape
+    assert n % REDUCE_BLOCK == 0, f"size {n} not a multiple of {REDUCE_BLOCK}"
+    grid = (n // REDUCE_BLOCK,)
+    scalar = lambda: pl.BlockSpec((1,), lambda i: (0,))  # noqa: E731
+    return pl.pallas_call(
+        _kahan_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            scalar(),
+            scalar(),
+            pl.BlockSpec((world, REDUCE_BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((REDUCE_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(
+        jnp.asarray(exp_bits, jnp.int32).reshape(1),
+        jnp.asarray(man_bits, jnp.int32).reshape(1),
+        shards.astype(jnp.float32),
+    )

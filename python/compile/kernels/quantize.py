@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: the APS quantize hot-spot.
+
+The paper's per-element communication work — shift by a power of two and
+round-to-nearest-even into an arbitrary ``(exp_bits, man_bits)`` format —
+as a Pallas kernel. One artifact serves every format because the format
+is a runtime scalar operand.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel is pure
+element-wise integer/VPU work — no MXU. The BlockSpec tiles the gradient
+into ``(BLOCK,)`` VMEM-resident strips; on a real TPU the natural shape is
+(8, 128)-aligned lanes, and the grid walks HBM→VMEM strips exactly where
+the paper's CUDA implementation walked threadblocks. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret-mode lowering produces plain HLO the Rust runtime can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import quantize_ref
+
+__all__ = ["aps_quantize", "BLOCK"]
+
+# Elements per grid step. 8·1024 f32 = 32 KiB per VMEM strip (in + out
+# comfortably under a ~16 MiB VMEM budget with double buffering).
+BLOCK = 8192
+
+
+def _quantize_kernel(fe_ref, eb_ref, mb_ref, x_ref, o_ref):
+    """One grid step: quantize a BLOCK-strip. Scalars ride in tiny refs."""
+    fe = fe_ref[0]
+    eb = eb_ref[0]
+    mb = mb_ref[0]
+    o_ref[...] = quantize_ref(x_ref[...], fe, eb, mb)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def aps_quantize(x, factor_exp, exp_bits, man_bits):
+    """Quantize a 1-D f32 array via the Pallas kernel (interpret mode).
+
+    ``x.shape[0]`` must be a multiple of ``BLOCK`` (aot.py lowers at a
+    fixed padded size; the Rust runtime chunks + pads).
+    """
+    n = x.shape[0]
+    assert n % BLOCK == 0, f"size {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    scalar = lambda: pl.BlockSpec((1,), lambda i: (0,))  # noqa: E731
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            scalar(),
+            scalar(),
+            scalar(),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(
+        jnp.asarray(factor_exp, jnp.int32).reshape(1),
+        jnp.asarray(exp_bits, jnp.int32).reshape(1),
+        jnp.asarray(man_bits, jnp.int32).reshape(1),
+        x.astype(jnp.float32),
+    )

@@ -1,0 +1,139 @@
+"""Pure-jnp oracle for the CPD quantization semantics.
+
+``quantize_ref(x, factor_exp, exp_bits, man_bits)`` returns the f32 wire
+value of ``x * 2^factor_exp`` rounded (round-to-nearest-even) into the
+``(exp_bits, man_bits)`` custom floating-point format — the same semantics
+as the Rust ``cpd::cast::quantize_shifted`` (bit-exact parity is asserted
+by the golden-vector cross-tests).
+
+Layout rules (IEEE-like): bias ``2^(e-1)-1``, all-ones exponent reserved
+for INF/NaN, gradual underflow (subnormals), overflow→±INF, RNE ties.
+
+Implementation notes: the whole cast is **integer bit manipulation** —
+decompose the f32 payload, add ``factor_exp`` to the exponent (a
+power-of-two shift is exact in exponent space, paper §3.3.1), round the
+significand, re-assemble the output bits. No floating-point arithmetic is
+involved anywhere, which matters twice: (a) single rounding, bit-exact
+against the Rust implementation; (b) XLA CPU flushes subnormal FP results
+to zero (FTZ), which would corrupt subnormal values if we multiplied.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_ref", "kahan_sum_ref"]
+
+_I32 = jnp.int32
+
+
+def quantize_ref(x, factor_exp, exp_bits, man_bits):
+    """RNE-quantize ``x * 2^factor_exp`` into ``(exp_bits, man_bits)``.
+
+    Args:
+      x: f32 array.
+      factor_exp: i32 scalar — power-of-two shift applied before the cast.
+      exp_bits: i32 scalar in [2, 8].
+      man_bits: i32 scalar in [0, 23].
+
+    Returns: f32 array of wire values (still scaled by ``2^factor_exp``).
+    """
+    x = x.astype(jnp.float32)
+    fe = jnp.asarray(factor_exp, _I32)
+    eb = jnp.asarray(exp_bits, _I32)
+    mb = jnp.asarray(man_bits, _I32)
+
+    bias = (jnp.asarray(1, _I32) << (eb - 1)) - 1
+    e_min = 1 - bias
+    e_max = bias
+
+    bits = jax.lax.bitcast_convert_type(x, _I32)
+    sign = bits & jnp.asarray(-0x80000000, _I32)
+    abits = bits & jnp.asarray(0x7FFFFFFF, _I32)
+    raw_e = abits >> 23
+    raw_m = abits & jnp.asarray(0x007FFFFF, _I32)
+
+    is_nan = jnp.logical_and(raw_e == 255, raw_m != 0)
+    is_inf = jnp.logical_and(raw_e == 255, raw_m == 0)
+    is_zero = abits == 0
+
+    # Normalize: |x| = sig * 2^(e-23), sig in [2^23, 2^24); f32 subnormal
+    # inputs (raw_e == 0) are raw_m * 2^-149.
+    lead = 31 - jax.lax.clz(jnp.maximum(raw_m, 1).astype(jnp.uint32)).astype(_I32)
+    sub_shift = 23 - lead
+    e = jnp.where(raw_e == 0, -126 - sub_shift, raw_e - 127)
+    sig = jnp.where(raw_e == 0, raw_m << jnp.clip(sub_shift, 0, 31), raw_m | (1 << 23))
+
+    # The power-of-two shift (Fig 4): pure exponent arithmetic, lossless.
+    e = e + fe
+
+    # Bits of significand kept at this exponent (gradual underflow below
+    # e_min); drop ≥ 25 always rounds to zero and cannot tie (sig < 2^24).
+    keep = jnp.where(e >= e_min, mb + 1, mb + 1 - (e_min - e))
+    drop = jnp.clip(24 - keep, 0, 25)
+
+    floor = jax.lax.shift_right_logical(sig, drop)
+    rem = sig - jax.lax.shift_left(floor, drop)
+    half = jnp.where(drop > 0, jax.lax.shift_left(jnp.asarray(1, _I32), jnp.maximum(drop - 1, 0)), 0)
+    round_up = jnp.logical_and(
+        drop > 0,
+        jnp.logical_or(rem > half, jnp.logical_and(rem == half, (floor & 1) == 1)),
+    )
+    rounded = floor + round_up.astype(_I32)  # ≤ 2^24 (carry included)
+
+    # ---- Re-assemble the f32 result from integer fields (no FP math). ----
+    # value = rounded * 2^k with k = e - 23 + drop.
+    k = e - 23 + drop
+    rlead = 31 - jax.lax.clz(jnp.maximum(rounded, 1).astype(jnp.uint32)).astype(_I32)
+    res_e = rlead + k  # unbiased exponent of the result
+
+    # Normal f32 result: mantissa = rounded aligned to bit 23.
+    shl = jnp.clip(23 - rlead, 0, 31)
+    shr = jnp.clip(rlead - 23, 0, 31)
+    norm_m = jnp.where(
+        rlead <= 23,
+        jax.lax.shift_left(rounded, shl),
+        jax.lax.shift_right_logical(rounded, shr),
+    ) & jnp.asarray(0x007FFFFF, _I32)
+    norm_bits = ((res_e + 127) << 23) | norm_m
+
+    # Subnormal f32 result (res_e < -126): raw mantissa = rounded << (k+149).
+    sub_sh = jnp.clip(k + 149, 0, 31)
+    sub_bits = jax.lax.shift_left(rounded, sub_sh)
+
+    out_bits = jnp.where(res_e >= -126, norm_bits, sub_bits)
+    # Overflow past the custom format's largest finite value → INF
+    # (res_e > e_max covers the carry case; rounding already used an
+    # unbounded exponent, per IEEE overflow semantics).
+    out_bits = jnp.where(res_e > e_max, jnp.asarray(0x7F800000, _I32), out_bits)
+    out_bits = jnp.where(rounded == 0, 0, out_bits)
+
+    # Specials. (No (8,23) special case needed: the generic path is exact
+    # for fp32 — drop is 0 for normals and the subnormal re-assembly
+    # reproduces the input bits.)
+    out_bits = jnp.where(is_inf, jnp.asarray(0x7F800000, _I32), out_bits)
+    out_bits = jnp.where(is_zero, 0, out_bits)
+    out_bits = out_bits | sign
+    out_bits = jnp.where(is_nan, jnp.asarray(0x7FC00000, _I32), out_bits)
+    return jax.lax.bitcast_convert_type(out_bits, jnp.float32)
+
+
+def kahan_sum_ref(x, exp_bits, man_bits):
+    """Kahan-compensated sum of a 1-D f32 array where every intermediate
+    lives in the ``(exp_bits, man_bits)`` format (paper §5.1.1).
+
+    Returns the final low-precision sum as f32. Matches the Rust
+    ``cpd::accum::KahanAccumulator`` exactly.
+    """
+
+    def q(v):
+        return quantize_ref(v, jnp.int32(0), exp_bits, man_bits)
+
+    def body(carry, v):
+        s, c = carry
+        y = q(q(v) - c)
+        t = q(s + y)
+        c2 = q(q(t - s) - y)
+        return (t, c2), None
+
+    (s, _), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), x)
+    return s

@@ -1,0 +1,87 @@
+"""Layer-2 entry point: the model registry + lowering helpers.
+
+``lower_model(defn)`` turns a `ModelDef` into the two jitted functions the
+artifacts are lowered from:
+
+  * train: ``(p0, …, pk, x, y) → (loss, g0, …, gk)``
+  * eval:  ``(p0, …, pk, x[, y]) → (logits,)`` or ``(loss,)``
+
+Called once by ``aot.py`` (`make artifacts`); never at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .models import REGISTRY, ModelDef
+from .models.common import make_loss_and_grads
+
+__all__ = [
+    "REGISTRY",
+    "ModelDef",
+    "lower_model",
+    "example_args",
+    "multi_train_fn",
+    "multi_example_args",
+]
+
+
+def lower_model(defn: ModelDef):
+    """Return (train_fn, eval_fn) over flat argument lists."""
+    train_fn = make_loss_and_grads(defn.loss)
+
+    if defn.eval_output == "logits":
+
+        def eval_fn(*args):
+            *params, x = args
+            return (defn.eval_fn(list(params), x),)
+
+    else:
+
+        def eval_fn(*args):
+            *params, x, y = args
+            return (defn.eval_fn(list(params), x, y),)
+
+    return train_fn, eval_fn
+
+
+def example_args(defn: ModelDef, for_eval: bool):
+    """ShapeDtypeStructs matching the artifact's argument list."""
+    x_dtype = jnp.float32 if defn.x_dtype == "f32" else jnp.int32
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for _, p in defn.params]
+    specs.append(jax.ShapeDtypeStruct((defn.batch, *defn.x_shape), x_dtype))
+    needs_y = not for_eval or defn.eval_output == "loss"
+    if needs_y:
+        specs.append(jax.ShapeDtypeStruct((defn.batch, *defn.y_shape), jnp.int32))
+    return specs
+
+
+def multi_train_fn(defn: ModelDef, world: int):
+    """Vmapped training function for `world` simulated workers in ONE
+    executable: ``(p0,…,pk, x[W,B,…], y[W,B,…]) → (mean_loss, g0[W,…], …)``.
+
+    Each worker's gradient is over its own shard (in_axes=0 on data,
+    None on params), exactly matching the sequential per-worker loop —
+    but with one PJRT dispatch instead of `world` (EXPERIMENTS.md §Perf).
+    """
+
+    def fn(*args):
+        *params, x, y = args
+        params = list(params)
+
+        def one(xw, yw):
+            return jax.value_and_grad(lambda p: defn.loss(p, xw, yw))(params)
+
+        losses, grads = jax.vmap(one, in_axes=(0, 0))(x, y)
+        return (jnp.mean(losses), *grads)
+
+    del world
+    return fn
+
+
+def multi_example_args(defn: ModelDef, world: int):
+    """ShapeDtypeStructs for the vmapped training artifact."""
+    x_dtype = jnp.float32 if defn.x_dtype == "f32" else jnp.int32
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for _, p in defn.params]
+    specs.append(jax.ShapeDtypeStruct((world, defn.batch, *defn.x_shape), x_dtype))
+    specs.append(jax.ShapeDtypeStruct((world, defn.batch, *defn.y_shape), jnp.int32))
+    return specs

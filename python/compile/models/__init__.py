@@ -1,0 +1,24 @@
+"""Layer-2 model zoo (build-time JAX; lowered once to HLO by aot.py).
+
+Each model module exposes ``build(batch)`` returning a `ModelDef` with:
+  * named initial parameters (deterministic numpy init),
+  * ``loss(params, x, y)`` — scalar loss,
+  * ``logits(params, x)`` / ``eval_loss`` — the eval head,
+  * shape/dtype metadata the Rust runtime needs (see runtime::ModelSpec).
+
+The registry maps artifact names to builders.
+"""
+
+from . import davidnet, fcn, mlp, resnet, transformer
+from .common import ModelDef
+
+REGISTRY = {
+    "mlp": mlp.build,
+    "mlp_qat": mlp.build_qat,
+    "davidnet": davidnet.build,
+    "resnet": resnet.build,
+    "fcn": fcn.build,
+    "transformer": transformer.build,
+}
+
+__all__ = ["REGISTRY", "ModelDef"]

@@ -1,0 +1,84 @@
+"""Shared model plumbing: ModelDef, initializers, layers, losses."""
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """Everything aot.py needs to lower one model."""
+
+    name: str
+    # [(name, np.ndarray f32)] in artifact argument order.
+    params: List[Tuple[str, np.ndarray]]
+    batch: int
+    x_shape: List[int]  # per-example
+    x_dtype: str  # "f32" | "i32"
+    y_shape: List[int]  # per-example ([] = scalar label)
+    num_classes: int
+    eval_output: str  # "logits" | "loss"
+    # loss(params_list, x, y) -> scalar
+    loss: Callable
+    # eval_fn(params_list, x[, y]) -> logits or scalar loss
+    eval_fn: Callable
+    init_seed: int = 0
+
+
+def he_normal(rng: np.random.RandomState, shape, fan_in) -> np.ndarray:
+    """He-normal initializer [11] (the paper's choice for conv/fc layers)."""
+    std = np.sqrt(2.0 / max(fan_in, 1))
+    return (rng.randn(*shape) * std).astype(np.float32)
+
+
+def zeros(shape) -> np.ndarray:
+    return np.zeros(shape, np.float32)
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def max_pool(x, size=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, size, size, 1),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def cross_entropy(logits, labels, num_classes):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def make_loss_and_grads(loss):
+    """Wrap a loss into the artifact's training function:
+    (p0, …, pk, x, y) → (loss, g0, …, gk)."""
+
+    def fn(*args):
+        *params, x, y = args
+        params = list(params)
+        l, grads = jax.value_and_grad(lambda p: loss(p, x, y))(params)
+        return (l, *grads)
+
+    return fn

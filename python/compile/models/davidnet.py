@@ -1,0 +1,64 @@
+"""DavidNet-family small conv net (the paper's fast-CIFAR classifier),
+scaled to the synthetic 16×16×3 workload: conv-relu-pool ×2 → conv →
+global pool → fc."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    ModelDef,
+    conv2d,
+    cross_entropy,
+    global_avg_pool,
+    he_normal,
+    max_pool,
+    zeros,
+)
+
+H, W, C = 16, 16, 3
+CLASSES = 10
+C1, C2, C3 = 16, 32, 64
+
+
+def _init(seed):
+    rng = np.random.RandomState(seed + 1)
+    return [
+        ("conv1_w", he_normal(rng, (3, 3, C, C1), 3 * 3 * C)),
+        ("conv1_b", zeros((C1,))),
+        ("conv2_w", he_normal(rng, (3, 3, C1, C2), 3 * 3 * C1)),
+        ("conv2_b", zeros((C2,))),
+        ("conv3_w", he_normal(rng, (3, 3, C2, C3), 3 * 3 * C2)),
+        ("conv3_b", zeros((C3,))),
+        ("fc_w", he_normal(rng, (C3, CLASSES), C3)),
+        ("fc_b", zeros((CLASSES,))),
+    ]
+
+
+def logits_fn(params, x):
+    c1w, c1b, c2w, c2b, c3w, c3b, fw, fb = params
+    h = jnp.maximum(conv2d(x, c1w) + c1b, 0.0)
+    h = max_pool(h)  # 8×8
+    h = jnp.maximum(conv2d(h, c2w) + c2b, 0.0)
+    h = max_pool(h)  # 4×4
+    h = jnp.maximum(conv2d(h, c3w) + c3b, 0.0)
+    h = global_avg_pool(h)
+    return h @ fw + fb
+
+
+def build(seed=0, batch=32):
+    def loss(params, x, y):
+        return cross_entropy(logits_fn(params, x), y, CLASSES)
+
+    return ModelDef(
+        name="davidnet",
+        params=_init(seed),
+        batch=batch,
+        x_shape=[H, W, C],
+        x_dtype="f32",
+        y_shape=[],
+        num_classes=CLASSES,
+        eval_output="logits",
+        loss=loss,
+        eval_fn=logits_fn,
+        init_seed=seed,
+    )

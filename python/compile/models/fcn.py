@@ -1,0 +1,62 @@
+"""FCN-family segmentation model (the paper's FCN/cityscapes stand-in):
+conv encoder with a stride-2 downsample, upsample back to full resolution,
+per-pixel classifier (Long et al. [20] in miniature)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelDef, conv2d, he_normal, zeros
+
+H, W, C = 16, 16, 3
+CLASSES = 5
+C1, C2 = 16, 32
+
+
+def _init(seed):
+    rng = np.random.RandomState(seed + 3)
+    return [
+        ("enc1_w", he_normal(rng, (3, 3, C, C1), 3 * 3 * C)),
+        ("enc1_b", zeros((C1,))),
+        ("enc2_w", he_normal(rng, (3, 3, C1, C2), 3 * 3 * C1)),
+        ("enc2_b", zeros((C2,))),
+        ("dec_w", he_normal(rng, (3, 3, C2, C1), 3 * 3 * C2)),
+        ("dec_b", zeros((C1,))),
+        ("head_w", he_normal(rng, (1, 1, C1, CLASSES), C1)),
+        ("head_b", zeros((CLASSES,))),
+    ]
+
+
+def logits_fn(params, x):
+    """Per-pixel logits: (batch, H, W, CLASSES) flattened to pixels×classes."""
+    e1w, e1b, e2w, e2b, dw, db, hw, hb = params
+    h = jnp.maximum(conv2d(x, e1w) + e1b, 0.0)
+    h = jnp.maximum(conv2d(h, e2w, stride=2) + e2b, 0.0)  # H/2
+    # bilinear-ish upsample: nearest-neighbor resize then conv smooth
+    h = jax.image.resize(h, (h.shape[0], H, W, h.shape[3]), method="nearest")
+    h = jnp.maximum(conv2d(h, dw) + db, 0.0)
+    logits = conv2d(h, hw) + hb
+    return logits.reshape(-1, CLASSES)
+
+
+def build(seed=0, batch=8):
+    def loss(params, x, y):
+        logits = logits_fn(params, x)
+        labels = y.reshape(-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, CLASSES, dtype=logits.dtype)
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    return ModelDef(
+        name="fcn",
+        params=_init(seed),
+        batch=batch,
+        x_shape=[H, W, C],
+        x_dtype="f32",
+        y_shape=[H, W],
+        num_classes=CLASSES,
+        eval_output="logits",
+        loss=loss,
+        eval_fn=logits_fn,
+        init_seed=seed,
+    )

@@ -1,0 +1,75 @@
+"""Quickstart MLP classifier (8×8×3 → 128 → 10), plus a QAT variant that
+routes its hidden activations through the Layer-1 Pallas quantize kernel —
+the in-model integration point proving the kernel lowers inside a full
+fwd/bwd HLO module (straight-through estimator for the gradient)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.quantize import BLOCK, aps_quantize
+from .common import ModelDef, cross_entropy, he_normal, zeros
+
+H, W, C = 8, 8, 3
+HIDDEN = 128
+CLASSES = 10
+
+
+def _init(seed):
+    rng = np.random.RandomState(seed)
+    d = H * W * C
+    return [
+        ("w1", he_normal(rng, (d, HIDDEN), d)),
+        ("b1", zeros((HIDDEN,))),
+        ("w2", he_normal(rng, (HIDDEN, CLASSES), HIDDEN)),
+        ("b2", zeros((CLASSES,))),
+    ]
+
+
+def _build(name, quantize_hidden, seed=0, batch=64):
+    import jax
+
+    @jax.custom_vjp
+    def st_quantize(h):
+        """Straight-through E4M3 quantization of activations via the
+        Pallas kernel: forward = quantized, backward = identity (the
+        kernel is bit manipulation, so it has no JVP — custom_vjp keeps
+        autodiff out of it entirely)."""
+        flat = h.reshape(-1)
+        pad = (-flat.shape[0]) % BLOCK
+        padded = jnp.pad(flat, (0, pad))
+        return aps_quantize(padded, 0, 4, 3)[: flat.shape[0]].reshape(h.shape)
+
+    st_quantize.defvjp(lambda h: (st_quantize(h), None), lambda _, g: (g,))
+
+    def logits_fn(params, x):
+        w1, b1, w2, b2 = params
+        h = x.reshape(x.shape[0], -1) @ w1 + b1
+        h = jnp.maximum(h, 0.0)
+        if quantize_hidden:
+            h = st_quantize(h)
+        return h @ w2 + b2
+
+    def loss(params, x, y):
+        return cross_entropy(logits_fn(params, x), y, CLASSES)
+
+    return ModelDef(
+        name=name,
+        params=_init(seed),
+        batch=batch,
+        x_shape=[H, W, C],
+        x_dtype="f32",
+        y_shape=[],
+        num_classes=CLASSES,
+        eval_output="logits",
+        loss=loss,
+        eval_fn=logits_fn,
+        init_seed=seed,
+    )
+
+
+def build(seed=0, batch=64):
+    return _build("mlp", quantize_hidden=False, seed=seed, batch=batch)
+
+
+def build_qat(seed=0, batch=64):
+    return _build("mlp_qat", quantize_hidden=True, seed=seed, batch=batch)

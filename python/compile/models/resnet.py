@@ -1,0 +1,102 @@
+"""ResNet-family residual classifier (the ResNet18/50 stand-in): stem →
+two residual stages (identity + projection shortcuts) → global pool → fc.
+Preserves the paper-relevant structure: depth, residual adds, and a final
+classification layer whose gradients live at a very different scale from
+the conv stacks (the Fig-2 spread APS exploits)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    ModelDef,
+    conv2d,
+    cross_entropy,
+    global_avg_pool,
+    he_normal,
+    zeros,
+)
+
+
+def _rms_norm(h):
+    """Parameter-free per-channel RMS normalization over space — the
+    BatchNorm stand-in that gives the residual net the gradient-noise
+    robustness the paper's (BN-equipped) ResNets have."""
+    ms = jnp.mean(h * h, axis=(1, 2), keepdims=True)
+    return h * jax.lax.rsqrt(ms + 1e-5)
+
+H, W, C = 16, 16, 3
+CLASSES = 10
+C1, C2 = 16, 32
+
+
+def _init(seed):
+    rng = np.random.RandomState(seed + 2)
+    p = [
+        ("stem_w", he_normal(rng, (3, 3, C, C1), 3 * 3 * C)),
+        ("stem_b", zeros((C1,))),
+        # stage 1: identity block at C1
+        ("s1a_w", he_normal(rng, (3, 3, C1, C1), 3 * 3 * C1)),
+        ("s1a_b", zeros((C1,))),
+        ("s1b_w", he_normal(rng, (3, 3, C1, C1), 3 * 3 * C1)),
+        ("s1b_b", zeros((C1,))),
+        # stage 2: strided projection block C1 → C2
+        ("s2a_w", he_normal(rng, (3, 3, C1, C2), 3 * 3 * C1)),
+        ("s2a_b", zeros((C2,))),
+        ("s2b_w", he_normal(rng, (3, 3, C2, C2), 3 * 3 * C2)),
+        ("s2b_b", zeros((C2,))),
+        ("proj_w", he_normal(rng, (1, 1, C1, C2), C1)),
+        # head
+        ("fc_w", he_normal(rng, (C2, CLASSES), C2)),
+        ("fc_b", zeros((CLASSES,))),
+    ]
+    return p
+
+
+def logits_fn(params, x):
+    (
+        stem_w,
+        stem_b,
+        s1a_w,
+        s1a_b,
+        s1b_w,
+        s1b_b,
+        s2a_w,
+        s2a_b,
+        s2b_w,
+        s2b_b,
+        proj_w,
+        fc_w,
+        fc_b,
+    ) = params
+    h = jnp.maximum(_rms_norm(conv2d(x, stem_w)) + stem_b, 0.0)
+    # stage 1 (identity shortcut)
+    r = jnp.maximum(_rms_norm(conv2d(h, s1a_w)) + s1a_b, 0.0)
+    r = _rms_norm(conv2d(r, s1b_w)) + s1b_b
+    h = jnp.maximum(h + r, 0.0)
+    # stage 2 (stride-2 projection shortcut)
+    r = jnp.maximum(_rms_norm(conv2d(h, s2a_w, stride=2)) + s2a_b, 0.0)
+    r = _rms_norm(conv2d(r, s2b_w)) + s2b_b
+    sc = conv2d(h, proj_w, stride=2)
+    h = jnp.maximum(sc + r, 0.0)
+    h = global_avg_pool(h)
+    return h @ fc_w + fc_b
+
+
+def build(seed=0, batch=16):
+    def loss(params, x, y):
+        return cross_entropy(logits_fn(params, x), y, CLASSES)
+
+    return ModelDef(
+        name="resnet",
+        params=_init(seed),
+        batch=batch,
+        x_shape=[H, W, C],
+        x_dtype="f32",
+        y_shape=[],
+        num_classes=CLASSES,
+        eval_output="logits",
+        loss=loss,
+        eval_fn=logits_fn,
+        init_seed=seed,
+    )

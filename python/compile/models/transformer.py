@@ -1,0 +1,103 @@
+"""Decoder-only transformer LM for the end-to-end driver
+(examples/train_e2e.rs): token + learned positional embeddings, two
+pre-LN blocks (causal MHA + GELU MLP), untied unembedding. The eval
+artifact returns the scalar mean loss (per-token logits would be large)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelDef, he_normal, zeros
+
+VOCAB = 512
+SEQ = 64
+D = 128
+HEADS = 4
+LAYERS = 2
+DH = D // HEADS
+
+
+def _init(seed):
+    rng = np.random.RandomState(seed + 4)
+    p = [
+        ("tok_emb", (rng.randn(VOCAB, D) * 0.02).astype(np.float32)),
+        ("pos_emb", (rng.randn(SEQ, D) * 0.02).astype(np.float32)),
+    ]
+    for l in range(LAYERS):
+        p += [
+            (f"l{l}_ln1_g", np.ones(D, np.float32)),
+            (f"l{l}_ln1_b", zeros((D,))),
+            (f"l{l}_wqkv", he_normal(rng, (D, 3 * D), D)),
+            (f"l{l}_wo", he_normal(rng, (D, D), D)),
+            (f"l{l}_ln2_g", np.ones(D, np.float32)),
+            (f"l{l}_ln2_b", zeros((D,))),
+            (f"l{l}_mlp_up", he_normal(rng, (D, 4 * D), D)),
+            (f"l{l}_mlp_up_b", zeros((4 * D,))),
+            (f"l{l}_mlp_dn", he_normal(rng, (4 * D, D), 4 * D)),
+            (f"l{l}_mlp_dn_b", zeros((D,))),
+        ]
+    p += [
+        ("ln_f_g", np.ones(D, np.float32)),
+        ("ln_f_b", zeros((D,))),
+        ("unembed", he_normal(rng, (D, VOCAB), D)),
+    ]
+    return p
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _block(h, p, off):
+    ln1_g, ln1_b, wqkv, wo, ln2_g, ln2_b, up, up_b, dn, dn_b = p[off : off + 10]
+    b, s, _ = h.shape
+    x = _layernorm(h, ln1_g, ln1_b)
+    qkv = x @ wqkv  # (b, s, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, HEADS, DH).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, HEADS, DH).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, HEADS, DH).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(DH)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, D)
+    h = h + o @ wo
+    x = _layernorm(h, ln2_g, ln2_b)
+    x = jax.nn.gelu(x @ up + up_b) @ dn + dn_b
+    return h + x
+
+
+def _loss_fn(params, tokens, targets):
+    tok_emb, pos_emb = params[0], params[1]
+    h = tok_emb[tokens] + pos_emb[None, :, :]
+    for l in range(LAYERS):
+        h = _block(h, params, 2 + l * 10)
+    ln_f_g, ln_f_b, unembed = params[-3], params[-2], params[-1]
+    h = _layernorm(h, ln_f_g, ln_f_b)
+    logits = h @ unembed  # (b, s, VOCAB)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, VOCAB, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def build(seed=0, batch=8):
+    def eval_loss(params, x, y):
+        # shape (1,) so the Rust runtime reads it with to_vec::<f32>()
+        return _loss_fn(params, x, y).reshape((1,))
+
+    return ModelDef(
+        name="transformer",
+        params=_init(seed),
+        batch=batch,
+        x_shape=[SEQ],
+        x_dtype="i32",
+        y_shape=[SEQ],
+        num_classes=VOCAB,
+        eval_output="loss",
+        loss=_loss_fn,
+        eval_fn=eval_loss,
+        init_seed=seed,
+    )

@@ -1,0 +1,164 @@
+"""L1 correctness: the Pallas quantize kernel vs the pure-jnp oracle, and
+the oracle vs hand-computed IEEE-style expectations.
+
+The hypothesis sweep drives shapes, formats, shifts and pathological
+values; `assert_bits_equal` requires *bit-for-bit* parity (NaNs canonical).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kahan import REDUCE_BLOCK, kahan_reduce
+from compile.kernels.quantize import BLOCK, aps_quantize
+from compile.kernels.ref import kahan_sum_ref, quantize_ref
+
+
+def assert_bits_equal(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    ab, bb = a.view(np.uint32), b.view(np.uint32)
+    nan = np.isnan(a) & np.isnan(b)
+    mismatch = (ab != bb) & ~nan
+    assert not mismatch.any(), (
+        f"{mismatch.sum()} mismatches, first at {np.argmax(mismatch)}: "
+        f"{a[mismatch][:5]} vs {b[mismatch][:5]}"
+    )
+
+
+# ---------------------------------------------------------------- oracle
+
+
+class TestOracleSemantics:
+    def test_e5m2_basics(self):
+        x = jnp.array([1.1, 1.125, 1.375, -1.125, 1e6, 1e-9, 0.0], jnp.float32)
+        q = np.asarray(quantize_ref(x, 0, 5, 2))
+        np.testing.assert_array_equal(q, [1.0, 1.0, 1.5, -1.0, np.inf, 0.0, 0.0])
+
+    def test_fp32_identity(self):
+        x = jnp.array([1.33e-40, -np.pi, 3.3e38, 0.0, -0.0], jnp.float32)
+        assert_bits_equal(quantize_ref(x, 0, 8, 23), x)
+
+    def test_signed_zero_preserved(self):
+        q = np.asarray(quantize_ref(jnp.array([-0.0], jnp.float32), 0, 5, 2))
+        assert q[0] == 0.0 and np.signbit(q[0])
+
+    def test_nan_inf(self):
+        x = jnp.array([np.nan, np.inf, -np.inf], jnp.float32)
+        q = np.asarray(quantize_ref(x, 0, 4, 3))
+        assert np.isnan(q[0]) and q[1] == np.inf and q[2] == -np.inf
+
+    def test_overflow_boundary_e5m2(self):
+        max_val = 1.75 * 2.0**15  # 57344
+        ulp = 2.0**13
+        x = jnp.array(
+            [max_val, max_val + 0.49 * ulp, max_val + 0.51 * ulp], jnp.float32
+        )
+        q = np.asarray(quantize_ref(x, 0, 5, 2))
+        np.testing.assert_array_equal(q, [max_val, max_val, np.inf])
+
+    def test_subnormal_boundary_e5m2(self):
+        ms = 2.0**-16
+        x = jnp.array([ms, 0.49 * ms, 0.5 * ms, 0.51 * ms, 1.5 * ms], jnp.float32)
+        q = np.asarray(quantize_ref(x, 0, 5, 2))
+        np.testing.assert_array_equal(q, [ms, 0.0, 0.0, ms, 2 * ms])
+
+    def test_factor_shift_pow2_is_lossless(self):
+        # Fig 4: a power-of-two shift of representable values is exact.
+        vals = jnp.array([0.25, 1.5, 3.0, 48.0], jnp.float32)  # E5M2-exact
+        q = np.asarray(quantize_ref(vals, 3, 5, 2))
+        np.testing.assert_array_equal(q, np.asarray(vals) * 8.0)
+
+    def test_e3m0_range(self):
+        # (3,0): representables are ±{0.25, 0.5, 1, 2, 4, 8} and 0.
+        x = jnp.array([0.3, 0.7, 1.4, 1.6, 5.9, 6.1, 100.0], jnp.float32)
+        q = np.asarray(quantize_ref(x, 0, 3, 0))
+        np.testing.assert_array_equal(q, [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, np.inf])
+
+    @pytest.mark.parametrize("eb,mb", [(5, 2), (4, 3), (3, 0), (2, 5), (8, 7)])
+    def test_idempotent(self, eb, mb):
+        rng = np.random.RandomState(eb * 31 + mb)
+        x = jnp.asarray(
+            rng.randn(512).astype(np.float32) * np.logspace(-8, 8, 512, dtype=np.float32)
+        )
+        q1 = quantize_ref(x, 0, eb, mb)
+        q2 = quantize_ref(q1, 0, eb, mb)
+        assert_bits_equal(q1, q2)
+
+    @pytest.mark.parametrize("eb,mb", [(5, 2), (4, 3), (6, 9)])
+    def test_monotone(self, eb, mb):
+        xs = np.sort(np.random.RandomState(0).randn(1000).astype(np.float32) * 100)
+        q = np.asarray(quantize_ref(jnp.asarray(xs), 0, eb, mb))
+        finite = np.isfinite(q)
+        assert (np.diff(q[finite]) >= 0).all()
+
+
+# ------------------------------------------------------ hypothesis sweep
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    eb=st.integers(2, 8),
+    mb=st.integers(0, 23),
+    fe=st.integers(-60, 60),
+    seed=st.integers(0, 2**31 - 1),
+    scale_exp=st.integers(-30, 30),
+)
+def test_kernel_matches_oracle_hypothesis(eb, mb, fe, seed, scale_exp):
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(BLOCK) * 2.0**scale_exp).astype(np.float32)
+    # sprinkle special values
+    x[:8] = [0.0, -0.0, np.inf, -np.inf, np.nan, 1e-42, -1e-42, 3.4e38]
+    got = aps_quantize(jnp.asarray(x), fe, eb, mb)
+    want = quantize_ref(jnp.asarray(x), fe, eb, mb)
+    assert_bits_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    eb=st.integers(2, 8),
+    mb=st.integers(0, 23),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_shape_sweep(n_blocks, eb, mb, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n_blocks * BLOCK).astype(np.float32)
+    got = aps_quantize(jnp.asarray(x), 0, eb, mb)
+    want = quantize_ref(jnp.asarray(x), 0, eb, mb)
+    assert got.shape == x.shape
+    assert_bits_equal(got, want)
+
+
+# ------------------------------------------------------------- kahan L1
+
+
+class TestKahanKernel:
+    def test_matches_scan_reference(self):
+        rng = np.random.RandomState(3)
+        world = 8
+        x = (rng.randn(world, REDUCE_BLOCK) * 4).astype(np.float32)
+        got = np.asarray(kahan_reduce(jnp.asarray(x), 5, 2))
+        for j in [0, 1, 17, REDUCE_BLOCK - 1]:
+            want = np.asarray(kahan_sum_ref(jnp.asarray(x[:, j]), 5, 2))
+            assert got[j] == want, f"col {j}: {got[j]} vs {want}"
+
+    def test_kahan_beats_naive_fold(self):
+        # 64 + 1·k in E4M3: naive fold stalls at 64; Kahan tracks it.
+        world = 33
+        x = np.ones((world, REDUCE_BLOCK), np.float32)
+        x[0, :] = 64.0
+        got = np.asarray(kahan_reduce(jnp.asarray(x), 4, 3))
+        exact = 64.0 + (world - 1)
+        assert (np.abs(got - exact) <= 8.0).all(), got[:4]  # within ulp@96
+
+    def test_fp32_kahan_is_near_exact_sum(self):
+        # Cancellation makes *relative* error meaningless for near-zero
+        # sums; compare against the f64 reference with a tight atol
+        # (Kahan in f32 keeps the error well under 1e-6 absolute here).
+        rng = np.random.RandomState(5)
+        x = rng.randn(4, REDUCE_BLOCK).astype(np.float32)
+        got = np.asarray(kahan_reduce(jnp.asarray(x), 8, 23))
+        want = x.astype(np.float64).sum(axis=0)
+        np.testing.assert_allclose(got, want, atol=2e-6)

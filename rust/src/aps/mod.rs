@@ -1,0 +1,519 @@
+//! APS — Auto-Precision Scaling (paper §3, Algorithm 1).
+//!
+//! The gradient-synchronization layer of the system. Given every worker's
+//! per-layer gradients, [`synchronize`] produces the globally reduced
+//! gradients under one of four methods:
+//!
+//! * [`SyncMethod::Fp32`] — the FP32 baseline (wire = 32 bits).
+//! * [`SyncMethod::Naive`] — cast to the low-precision wire format with no
+//!   scaling (the paper's "no APS" rows: underflow/overflow-prone).
+//! * [`SyncMethod::LossScaling`] — one *global, hand-chosen* power-of-two
+//!   factor for all layers (Micikevicius et al. [21]).
+//! * [`SyncMethod::Aps`] — Algorithm 1: each layer is shifted by the
+//!   largest power-of-two factor that provably cannot overflow the wire
+//!   format even after summation across all `N` workers (Eq. 1–4), using a
+//!   1-byte-per-layer exponent all-reduce to agree on the factor.
+//!
+//! The reduction itself runs through [`crate::collectives`] so the wire
+//! precision and summation order are emulated faithfully.
+
+pub mod policy;
+
+use crate::collectives::{ReduceOptions, ReduceStats, SimCluster, Topology};
+use crate::cpd::{quantize_shifted_slice, FpFormat, Rounding};
+
+pub use policy::{HybridSchedule, LayerPolicy};
+
+/// Gradient-synchronization method (paper Table 2 rows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SyncMethod {
+    /// Full-precision all-reduce.
+    Fp32,
+    /// Low-precision wire format, no scaling.
+    Naive { fmt: FpFormat },
+    /// Global constant power-of-two loss scaling (factor is `2^factor_exp`).
+    LossScaling { fmt: FpFormat, factor_exp: i32 },
+    /// Auto-Precision Scaling (Algorithm 1).
+    Aps { fmt: FpFormat },
+}
+
+impl SyncMethod {
+    /// The wire format gradients travel in.
+    pub fn wire_format(&self) -> FpFormat {
+        match *self {
+            SyncMethod::Fp32 => FpFormat::FP32,
+            SyncMethod::Naive { fmt }
+            | SyncMethod::LossScaling { fmt, .. }
+            | SyncMethod::Aps { fmt } => fmt,
+        }
+    }
+}
+
+/// Options for one synchronization call.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncOptions {
+    pub method: SyncMethod,
+    pub topo: Topology,
+    /// Rounding used for all casts (paper uses round-to-nearest-even).
+    pub rounding: Rounding,
+    /// Kahan-compensated reduction (CPD feature, §5.1.1).
+    pub kahan: bool,
+    /// Divide the reduced sum by `world_size` (data-parallel averaging).
+    pub average: bool,
+    /// Keep the last layer's wire format at FP32 (paper Table 7; the
+    /// recommendation of Wang et al. [27] adopted in §4.2).
+    pub fp32_last_layer: bool,
+    /// Lazy all-reduce: communicate all layers as one fused message
+    /// (paper §4.3 / Fig 11 rightmost bar). Affects message accounting
+    /// only — per-layer scaling factors are still independent.
+    pub fused: bool,
+}
+
+impl SyncOptions {
+    pub fn new(method: SyncMethod) -> Self {
+        SyncOptions {
+            method,
+            topo: Topology::Ring,
+            rounding: Rounding::NearestEven,
+            kahan: false,
+            average: true,
+            fp32_last_layer: false,
+            fused: false,
+        }
+    }
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topo = topo;
+        self
+    }
+    pub fn with_kahan(mut self, kahan: bool) -> Self {
+        self.kahan = kahan;
+        self
+    }
+    pub fn with_fp32_last_layer(mut self, yes: bool) -> Self {
+        self.fp32_last_layer = yes;
+        self
+    }
+    pub fn with_average(mut self, yes: bool) -> Self {
+        self.average = yes;
+        self
+    }
+}
+
+/// Per-layer diagnostics from one synchronization.
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    /// The power-of-two exponent APS (or loss scaling) applied.
+    pub factor_exp: i32,
+    /// Fraction of non-zero elements flushed to zero by the wire cast.
+    pub underflow_frac: f64,
+    /// Fraction of elements that overflowed to INF on the wire.
+    pub overflow_frac: f64,
+    /// Elements in this layer.
+    pub elements: usize,
+}
+
+/// Aggregate result of one synchronization call.
+#[derive(Clone, Debug, Default)]
+pub struct SyncReport {
+    pub layers: Vec<LayerReport>,
+    /// Wire bytes per worker for the gradient payload phase.
+    pub payload_bytes: u64,
+    /// Wire bytes per worker for the exponent (max) phase — APS only.
+    pub exponent_bytes: u64,
+    /// Latency-bound steps across all messages.
+    pub steps: usize,
+    /// Number of distinct messages (layers, or 1 when fused).
+    pub messages: usize,
+}
+
+impl SyncReport {
+    /// Total wire bytes per worker (payload + exponent phases).
+    pub fn total_bytes(&self) -> u64 {
+        self.payload_bytes + self.exponent_bytes
+    }
+    /// Mean underflow fraction across layers (weighted by elements).
+    pub fn underflow_frac(&self) -> f64 {
+        let (num, den) = self.layers.iter().fold((0.0, 0usize), |(s, n), l| {
+            (s + l.underflow_frac * l.elements as f64, n + l.elements)
+        });
+        if den == 0 {
+            0.0
+        } else {
+            num / den as f64
+        }
+    }
+    /// True if any element overflowed to INF anywhere.
+    pub fn any_overflow(&self) -> bool {
+        self.layers.iter().any(|l| l.overflow_frac > 0.0)
+    }
+}
+
+/// Multiply by a power of two without intermediate overflow (ldexp).
+#[inline]
+pub fn ldexp_f32(x: f32, e: i32) -> f32 {
+    (x as f64 * (e as f64).exp2()) as f32
+}
+
+/// Algorithm 1 lines 3–4: a worker's local `max_exp` for one layer,
+/// already inflated by `world_size` (the `grad * world_size` term that
+/// makes the Eq. 2 bound hold for the *summed* gradient).
+///
+/// Returns `None` when the layer's gradient is all zero (nothing to scale).
+pub fn local_max_exp(grad: &[f32], world_size: usize) -> Option<i32> {
+    let mut max_abs = 0.0f32;
+    for &g in grad {
+        let a = g.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return None;
+    }
+    // ceil(log2(N * ĝ)) = via f64 to avoid f32 overflow for huge N·ĝ.
+    let v = max_abs as f64 * world_size as f64;
+    let l = v.log2();
+    let c = l.ceil();
+    // Exact powers of two: ceil(log2) == log2 (paper's FindMaxExp).
+    Some(c as i32)
+}
+
+/// Synchronize one training step's gradients.
+///
+/// `grads[w][l]` is worker `w`'s gradient for layer `l` (all workers agree
+/// on layer count and shapes). Returns the reduced per-layer gradients and
+/// a [`SyncReport`].
+pub fn synchronize(
+    cluster: &SimCluster,
+    grads: &[Vec<Vec<f32>>],
+    opts: &SyncOptions,
+) -> (Vec<Vec<f32>>, SyncReport) {
+    let world = cluster.world_size;
+    assert_eq!(grads.len(), world, "one gradient set per worker");
+    let num_layers = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == num_layers), "ragged layer counts");
+
+    let mut report = SyncReport {
+        layers: vec![LayerReport::default(); num_layers],
+        messages: if opts.fused { 1 } else { num_layers },
+        ..Default::default()
+    };
+
+    // ---- Phase 1 (APS only): agree on per-layer scaling factors. -------
+    let factor_exps: Vec<i32> = match opts.method {
+        SyncMethod::Aps { fmt } => {
+            // Each worker contributes one i8 exponent per layer; one
+            // max-all-reduce over the vector E (Algorithm 1 line 4).
+            let contribs: Vec<Vec<i8>> = grads
+                .iter()
+                .map(|wg| {
+                    wg.iter()
+                        .map(|g| {
+                            local_max_exp(g, world)
+                                .map(|e| e.clamp(-128, 127) as i8)
+                                .unwrap_or(i8::MIN)
+                        })
+                        .collect()
+                })
+                .collect();
+            let (max_exps, stats) = cluster.all_reduce_max_i8(&contribs);
+            report.exponent_bytes = stats.bytes_per_worker;
+            report.steps += stats.steps;
+            max_exps
+                .iter()
+                .map(|&me| {
+                    if me == i8::MIN {
+                        0 // all-zero layer: no scaling needed
+                    } else {
+                        fmt.max_exponent() - me as i32
+                    }
+                })
+                .collect()
+        }
+        SyncMethod::LossScaling { factor_exp, .. } => vec![factor_exp; num_layers],
+        _ => vec![0; num_layers],
+    };
+
+    // ---- Phase 2: scale, cast, all-reduce, cast back, unscale. ---------
+    let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(num_layers);
+    let mut payload_elems_fp32 = 0u64; // elements sent at 4 bytes
+    let mut payload_elems_low = 0u64; // elements sent at wire width
+    let wire_fmt = opts.method.wire_format();
+
+    for l in 0..num_layers {
+        let n = grads[0][l].len();
+        let layer_fmt = if opts.fp32_last_layer && l == num_layers - 1 {
+            FpFormat::FP32
+        } else {
+            wire_fmt
+        };
+        let fe = if layer_fmt.is_fp32() { 0 } else { factor_exps[l] };
+
+        // Per-worker: shift by 2^fe and cast into the wire format (one
+        // rounding — the shift is exponent arithmetic, §3.3.1).
+        let mut nonzero_in = 0usize;
+        let mut zero_out = 0usize;
+        let mut inf_out = 0usize;
+        let contribs: Vec<Vec<f32>> = grads
+            .iter()
+            .map(|wg| {
+                let src = &wg[l];
+                let q = quantize_shifted_slice(src, fe, layer_fmt, opts.rounding);
+                for (&x, &qq) in src.iter().zip(&q) {
+                    if x != 0.0 {
+                        nonzero_in += 1;
+                        if qq == 0.0 {
+                            zero_out += 1;
+                        }
+                    }
+                    if qq.is_infinite() {
+                        inf_out += 1;
+                    }
+                }
+                q
+            })
+            .collect();
+
+        let ropts = ReduceOptions { fmt: layer_fmt, mode: opts.rounding, kahan: opts.kahan };
+        let (mut sum, stats): (Vec<f32>, ReduceStats) =
+            cluster.all_reduce_sum(&contribs, opts.topo, ropts);
+
+        // Cast back up (already f32 storage) and undo the shift; average.
+        let unscale = -(fe as i64) as i32;
+        let div = if opts.average { world as f64 } else { 1.0 };
+        let m = (unscale as f64).exp2() / div;
+        for v in sum.iter_mut() {
+            *v = (*v as f64 * m) as f32;
+        }
+
+        report.layers[l] = LayerReport {
+            factor_exp: fe,
+            underflow_frac: if nonzero_in == 0 { 0.0 } else { zero_out as f64 / nonzero_in as f64 },
+            overflow_frac: inf_out as f64 / (n * world).max(1) as f64,
+            elements: n,
+        };
+        if layer_fmt.is_fp32() {
+            payload_elems_fp32 += n as u64;
+        } else {
+            payload_elems_low += n as u64;
+        }
+        report.payload_bytes += stats.bytes_per_worker;
+        if !opts.fused {
+            report.steps += stats.steps;
+        }
+        reduced.push(sum);
+    }
+    if opts.fused {
+        // One fused message: pay the per-message step count once.
+        report.steps += opts.topo.steps(world);
+    }
+    let _ = (payload_elems_fp32, payload_elems_low);
+
+    (reduced, report)
+}
+
+/// The exact (f64-accumulated, FP32-wire) reduction used as the reference
+/// when measuring round-off error (Eq. 5 inputs).
+pub fn reduce_exact(grads: &[Vec<Vec<f32>>], average: bool) -> Vec<Vec<f32>> {
+    let world = grads.len();
+    let num_layers = grads[0].len();
+    (0..num_layers)
+        .map(|l| {
+            let n = grads[0][l].len();
+            let mut out = vec![0.0f32; n];
+            for (i, o) in out.iter_mut().enumerate() {
+                let mut s = 0.0f64;
+                for wg in grads {
+                    s += wg[l][i] as f64;
+                }
+                if average {
+                    s /= world as f64;
+                }
+                *o = s as f32;
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::avg_roundoff_error;
+
+    fn cluster8() -> SimCluster {
+        SimCluster::new(8)
+    }
+
+    /// Synthetic per-worker gradients with wildly different layer scales —
+    /// the Fig-2 situation APS is built for.
+    fn scaled_grads(world: usize, layers: &[(usize, f32)]) -> Vec<Vec<Vec<f32>>> {
+        (0..world)
+            .map(|w| {
+                layers
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &(n, scale))| {
+                        (0..n)
+                            .map(|i| {
+                                let h = (w * 2654435761 + l * 97 + i * 131) % 2003;
+                                (h as f32 / 2003.0 - 0.5) * scale
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fp32_sync_matches_exact() {
+        let grads = scaled_grads(8, &[(32, 1.0), (16, 1e-4)]);
+        let opts = SyncOptions::new(SyncMethod::Fp32);
+        let (out, report) = synchronize(&cluster8(), &grads, &opts);
+        let exact = reduce_exact(&grads, true);
+        for l in 0..2 {
+            let e = avg_roundoff_error(&exact[l], &out[l]);
+            assert!(e < 1e-6, "layer {l}: {e}");
+        }
+        assert_eq!(report.exponent_bytes, 0);
+        assert!(!report.any_overflow());
+    }
+
+    #[test]
+    fn naive_low_precision_underflows_small_layers() {
+        // Layer 1 values ~1e-6 are far below E5M2's 2^-16 ≈ 1.5e-5.
+        let grads = scaled_grads(8, &[(64, 1.0), (64, 1e-6)]);
+        let opts = SyncOptions::new(SyncMethod::Naive { fmt: FpFormat::E5M2 });
+        let (out, report) = synchronize(&cluster8(), &grads, &opts);
+        assert!(report.layers[1].underflow_frac > 0.9, "{:?}", report.layers[1]);
+        assert!(out[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn aps_rescues_small_layers() {
+        let grads = scaled_grads(8, &[(64, 1.0), (64, 1e-6)]);
+        let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+        let (out, report) = synchronize(&cluster8(), &grads, &opts);
+        let exact = reduce_exact(&grads, true);
+        // Underflow nearly eliminated; values within format epsilon-ish.
+        assert!(report.layers[1].underflow_frac < 0.05, "{:?}", report.layers[1]);
+        let e = avg_roundoff_error(&exact[1], &out[1]);
+        assert!(e < 0.35, "roundoff {e}"); // 2-bit mantissa: ≤ ~1/8 per op
+        assert!(!report.any_overflow());
+        assert!(report.exponent_bytes > 0, "APS must pay the exponent phase");
+    }
+
+    #[test]
+    fn aps_never_overflows_by_construction() {
+        // Eq. 2 bound: even when every worker holds the max value with the
+        // same sign, the scaled sum stays within the format.
+        let world = 16;
+        let grads: Vec<Vec<Vec<f32>>> =
+            (0..world).map(|_| vec![vec![3.7e8f32; 16]]).collect();
+        let cluster = SimCluster::new(world);
+        let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 }).with_average(false);
+        let (out, report) = synchronize(&cluster, &grads, &opts);
+        assert!(!report.any_overflow());
+        assert!(out[0].iter().all(|x| x.is_finite()));
+        // and the sum is right to within the format's (2-bit-mantissa)
+        // sequential-fold accumulation error — large but finite and
+        // bounded (this is exactly the §4.2 round-off the paper studies).
+        let exact = 3.7e8f64 * world as f64;
+        let got = out[0][0] as f64;
+        assert!((got - exact).abs() / exact < 0.35, "got {got} exact {exact}");
+    }
+
+    #[test]
+    fn loss_scaling_overflow_when_factor_too_big() {
+        let grads = scaled_grads(8, &[(64, 100.0)]);
+        // 2^12 scale pushes values ~100·4096 ≈ 4e5 > E5M2 max 57344 → INF.
+        let opts = SyncOptions::new(SyncMethod::LossScaling {
+            fmt: FpFormat::E5M2,
+            factor_exp: 12,
+        });
+        let (_, report) = synchronize(&cluster8(), &grads, &opts);
+        assert!(report.any_overflow());
+    }
+
+    #[test]
+    fn aps_factor_is_power_of_two_shift_exactness() {
+        // A single worker, values already representable in E5M2: APS must
+        // return them exactly (shift by 2^k is lossless — Fig 4).
+        let vals: Vec<f32> = FpFormat::E5M2
+            .enumerate_magnitudes()
+            .into_iter()
+            .filter(|&v| v > 0.0)
+            .take(40)
+            .collect();
+        let grads = vec![vec![vals.clone()]];
+        let cluster = SimCluster::new(1);
+        let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+        let (out, _) = synchronize(&cluster, &grads, &opts);
+        // world=1 → factor chosen so max ≤ 2^15; shifting representable
+        // values by powers of two keeps them representable (until the
+        // subnormal floor). Values here are normals scaled up, so exact.
+        for (a, b) in vals.iter().zip(&out[0]) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn fp32_last_layer_policy() {
+        let grads = scaled_grads(8, &[(32, 1e-6), (32, 1e-6)]);
+        let opts = SyncOptions::new(SyncMethod::Naive { fmt: FpFormat::E5M2 })
+            .with_fp32_last_layer(true);
+        let (out, report) = synchronize(&cluster8(), &grads, &opts);
+        // first layer dies, last layer survives at full precision
+        assert!(report.layers[0].underflow_frac > 0.9);
+        assert_eq!(report.layers[1].underflow_frac, 0.0);
+        assert!(out[1].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn all_zero_layer_is_safe() {
+        let world = 4;
+        let grads: Vec<Vec<Vec<f32>>> = (0..world).map(|_| vec![vec![0.0f32; 8]]).collect();
+        let cluster = SimCluster::new(world);
+        let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E4M3 });
+        let (out, report) = synchronize(&cluster, &grads, &opts);
+        assert!(out[0].iter().all(|&x| x == 0.0));
+        assert_eq!(report.layers[0].factor_exp, 0);
+    }
+
+    #[test]
+    fn local_max_exp_matches_paper_findmaxexp() {
+        // ceil(log2(8 * 3.0)) = ceil(log2 24) = 5
+        assert_eq!(local_max_exp(&[1.0, -3.0, 0.5], 8), Some(5));
+        // exact power of two: ceil(log2(4 * 4)) = 4
+        assert_eq!(local_max_exp(&[4.0], 4), Some(4));
+        assert_eq!(local_max_exp(&[0.0, 0.0], 8), None);
+    }
+
+    #[test]
+    fn fused_reduces_message_count() {
+        let grads = scaled_grads(8, &[(16, 1.0), (16, 1.0), (16, 1.0)]);
+        let mut opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+        opts.fused = true;
+        let (_, fused) = synchronize(&cluster8(), &grads, &opts);
+        opts.fused = false;
+        let (_, unfused) = synchronize(&cluster8(), &grads, &opts);
+        assert_eq!(fused.messages, 1);
+        assert_eq!(unfused.messages, 3);
+        assert!(fused.steps < unfused.steps);
+        // payload bytes identical — fusion saves latency, not bandwidth
+        assert_eq!(fused.payload_bytes, unfused.payload_bytes);
+    }
+
+    #[test]
+    fn exponent_phase_is_one_byte_per_layer() {
+        // APS communicates ceil(log2(N·ĝ)) as a single byte per layer
+        // (paper §3.3.3) — check the accounting.
+        let grads = scaled_grads(8, &[(1000, 1.0); 5]);
+        let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+        let (_, report) = synchronize(&cluster8(), &grads, &opts);
+        // ring max all-reduce of 5 bytes across 8 workers
+        assert!(report.exponent_bytes <= 2 * 5 * 8);
+        assert!(report.exponent_bytes < report.payload_bytes / 100);
+    }
+}

@@ -1,0 +1,90 @@
+//! Precision *policies*: which sync method applies when (paper §4.2).
+//!
+//! * [`HybridSchedule`] — the paper's hybrid precision (Fig 10, Table 6):
+//!   FP32 communication for the first `fp32_epochs` epochs, the low
+//!   precision format afterwards. "Using FP32 for the first 30 epochs and
+//!   8 bits for the last 60" recovers the FP32 baseline accuracy.
+//! * [`LayerPolicy`] — per-layer wire formats (Table 7): the last
+//!   (classification) layer kept at FP32 while all others run low.
+
+use super::SyncMethod;
+use crate::cpd::FpFormat;
+
+/// Epoch-indexed hybrid precision schedule (paper Fig 10).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HybridSchedule {
+    /// Epochs trained with FP32 communication before switching down.
+    pub fp32_epochs: usize,
+    /// The low-precision method used afterwards.
+    pub low: SyncMethod,
+}
+
+impl HybridSchedule {
+    /// Paper's ResNet-50 recipe: 30 FP32 epochs then (4,3) APS.
+    pub fn paper_resnet50() -> Self {
+        HybridSchedule {
+            fp32_epochs: 30,
+            low: SyncMethod::Aps { fmt: FpFormat::E4M3 },
+        }
+    }
+
+    /// The method in effect at `epoch` (0-based).
+    pub fn method_at(&self, epoch: usize) -> SyncMethod {
+        if epoch < self.fp32_epochs {
+            SyncMethod::Fp32
+        } else {
+            self.low
+        }
+    }
+}
+
+/// Per-layer wire-format policy (paper Table 7).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerPolicy {
+    /// Every layer uses the method's wire format.
+    Uniform,
+    /// All layers low-precision except the final classification layer,
+    /// which stays FP32 (Wang et al. [27]'s recommendation, Table 7 row 2/4).
+    Fp32LastLayer,
+}
+
+impl LayerPolicy {
+    /// Wire format for layer `l` of `num_layers` given the base format.
+    pub fn format_for(&self, base: FpFormat, l: usize, num_layers: usize) -> FpFormat {
+        match self {
+            LayerPolicy::Uniform => base,
+            LayerPolicy::Fp32LastLayer => {
+                if l + 1 == num_layers {
+                    FpFormat::FP32
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_switches_at_boundary() {
+        let h = HybridSchedule::paper_resnet50();
+        assert_eq!(h.method_at(0), SyncMethod::Fp32);
+        assert_eq!(h.method_at(29), SyncMethod::Fp32);
+        assert_eq!(h.method_at(30), SyncMethod::Aps { fmt: FpFormat::E4M3 });
+        assert_eq!(h.method_at(89), SyncMethod::Aps { fmt: FpFormat::E4M3 });
+    }
+
+    #[test]
+    fn layer_policy_formats() {
+        let base = FpFormat::E5M2;
+        assert_eq!(LayerPolicy::Uniform.format_for(base, 9, 10), base);
+        assert_eq!(
+            LayerPolicy::Fp32LastLayer.format_for(base, 9, 10),
+            FpFormat::FP32
+        );
+        assert_eq!(LayerPolicy::Fp32LastLayer.format_for(base, 8, 10), base);
+    }
+}

@@ -1,0 +1,155 @@
+//! Hierarchical (grouped) all-reduce (Jia et al. [14]; paper §4.2).
+//!
+//! Workers are partitioned into groups of `k` consecutive ranks; the first
+//! rank of each group is the *master*. Three phases:
+//!
+//! 1. **intra-group reduce** — each worker sends its gradient to the
+//!    master, which folds them in rank order (`k`-term sequential fold in
+//!    the wire precision);
+//! 2. **inter-group ring all-reduce** — the `p/k` masters run a ring
+//!    all-reduce over the partial sums (reusing [`super::ring`], so the
+//!    rotated fold order is preserved);
+//! 3. **broadcast** — masters broadcast the result (no arithmetic).
+//!
+//! Compared to a flat ring over `p` workers, the worst large-and-small
+//! addition shrinks from `(p-1)×` to `(k-1)×` locally and `(p/k-1)×`
+//! across masters — the mechanism behind Tables 8 and 9.
+
+use super::{fold_step, ring, ReduceOptions, ReduceStats};
+use crate::util::par;
+
+/// Run hierarchical all-reduce with groups of `group_size`.
+pub fn all_reduce(
+    contribs: &[Vec<f32>],
+    group_size: usize,
+    opts: ReduceOptions,
+) -> (Vec<f32>, ReduceStats) {
+    let p = contribs.len();
+    let n = contribs[0].len();
+    assert!(group_size >= 1, "group size must be positive");
+    assert!(
+        p % group_size == 0,
+        "world size {p} not divisible by group size {group_size}"
+    );
+    let num_groups = p / group_size;
+
+    // Phase 1: intra-group fold at each master, in rank order
+    // (parallel across groups — they are independent).
+    let mut partials: Vec<Vec<f32>> = par::par_map(num_groups, |g| {
+        {
+            let base = g * group_size;
+            let mut acc = contribs[base].clone();
+            let mut comp = vec![0.0f32; if opts.kahan { n } else { 0 }];
+            let mut dummy = 0.0f32;
+            for r in 1..group_size {
+                let src = &contribs[base + r];
+                if opts.kahan {
+                    for i in 0..n {
+                        fold_step(&mut acc[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                    }
+                } else {
+                    for i in 0..n {
+                        fold_step(&mut acc[i], &mut dummy, src[i], opts.fmt, opts.mode, false);
+                    }
+                }
+            }
+            acc
+        }
+    });
+
+    // Phase 2: ring all-reduce across masters.
+    let (reduced, ring_stats) = if num_groups > 1 {
+        ring::all_reduce(&partials, opts)
+    } else {
+        (std::mem::take(&mut partials[0]), ReduceStats::default())
+    };
+
+    // Phase 3: broadcast (pure data movement).
+    let elt_bytes = ring::wire_bytes(opts) as u64;
+    // Per-worker wire traffic: a non-master sends n elements up and
+    // receives n back; a master receives (k-1)·n, runs the ring, sends
+    // (k-1)·n down. Report the master's (worst-case) traffic.
+    let master_bytes =
+        2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;
+    let stats = ReduceStats {
+        bytes_per_worker: master_bytes,
+        steps: 4 * (group_size - 1) + 2 * (num_groups.saturating_sub(1)),
+    };
+    (reduced, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::{avg_roundoff_error, FpFormat, Rounding};
+    use crate::collectives::Topology;
+
+    #[test]
+    fn group_of_one_is_pure_ring() {
+        let p = 8;
+        let n = 12;
+        let contribs: Vec<Vec<f32>> =
+            (0..p).map(|w| (0..n).map(|i| (w + i) as f32 * 0.5).collect()).collect();
+        let opts = ReduceOptions::low_precision(FpFormat::E4M3);
+        let (h, _) = all_reduce(&contribs, 1, opts);
+        let (r, _) = ring::all_reduce(&contribs, opts);
+        assert_eq!(h, r);
+    }
+
+    #[test]
+    fn single_group_is_pure_fold() {
+        let p = 4;
+        let contribs: Vec<Vec<f32>> = (0..p).map(|w| vec![w as f32 + 1.0; 3]).collect();
+        let (out, stats) = all_reduce(&contribs, p, ReduceOptions::fp32());
+        assert_eq!(out, vec![10.0; 3]);
+        assert_eq!(stats.steps, 4 * (p - 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_group_panics() {
+        let contribs = vec![vec![0.0f32; 2]; 6];
+        let _ = all_reduce(&contribs, 4, ReduceOptions::fp32());
+    }
+
+    #[test]
+    fn table9_shape_hierarchical_beats_ring_in_low_precision() {
+        // Mixed-scale gradients across 64 workers: the hierarchical
+        // reduction should show lower Eq.-5 round-off than the flat ring,
+        // reproducing the *shape* of Table 9.
+        let p = 64;
+        let n = 256;
+        let contribs: Vec<Vec<f32>> = (0..p)
+            .map(|w| {
+                (0..n)
+                    .map(|i| {
+                        let x = ((w * 2654435761 + i * 40503) % 10007) as f32 / 10007.0;
+                        (x - 0.5) * (1.0 + (w % 7) as f32)
+                    })
+                    .collect()
+            })
+            .collect();
+        // Exact reference in f64.
+        let exact: Vec<f32> = (0..n)
+            .map(|i| contribs.iter().map(|c| c[i] as f64).sum::<f64>() as f32)
+            .collect();
+        let opts = ReduceOptions::low_precision(FpFormat::E5M2);
+        let (ring_out, _) = ring::all_reduce(&contribs, opts);
+        let (hier_out, _) = all_reduce(&contribs, 8, opts);
+        let ring_err = avg_roundoff_error(&exact, &ring_out);
+        let hier_err = avg_roundoff_error(&exact, &hier_out);
+        assert!(
+            hier_err < ring_err,
+            "hier={hier_err:.4} ring={ring_err:.4}"
+        );
+    }
+
+    #[test]
+    fn steps_match_topology_formula() {
+        let p = 256;
+        let k = 16;
+        let contribs = vec![vec![1.0f32; 4]; p];
+        let (_, stats) = all_reduce(&contribs, k, ReduceOptions::fp32());
+        assert_eq!(stats.steps, Topology::Hierarchical { group_size: k }.steps(p));
+    }
+}

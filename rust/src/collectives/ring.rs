@@ -1,0 +1,170 @@
+//! Ring all-reduce with faithful reduction order (Patarasuk & Yuan [22]).
+//!
+//! The tensor is split into `p` chunks. During reduce-scatter, chunk `c`
+//! is accumulated sequentially around the ring starting at worker
+//! `(c+1) % p`: worker `(c+1)` sends its chunk to `(c+2)`, which adds its
+//! own and forwards, …, until the fully reduced chunk lands on worker `c`.
+//! Every addition happens in the wire precision, so an element's final
+//! value is the left fold
+//!
+//! `Q(…Q(Q(g_{c+1} + g_{c+2}) + g_{c+3})… + g_c)`
+//!
+//! — the last addition combines one local gradient with a partial sum of
+//! `p-1` others, the paper's §4.2 round-off hazard. The all-gather phase
+//! moves finished chunks without further arithmetic.
+
+use super::{fold_step, ReduceOptions, ReduceStats};
+use crate::util::par;
+
+/// Run ring all-reduce over per-worker contributions.
+pub fn all_reduce(contribs: &[Vec<f32>], opts: ReduceOptions) -> (Vec<f32>, ReduceStats) {
+    let p = contribs.len();
+    let n = contribs[0].len();
+    let mut out = vec![0.0f32; n];
+
+    // Chunk boundaries: chunk c covers [bounds[c], bounds[c+1]).
+    let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
+
+    // Each chunk's fold is independent → parallelize over chunks.
+    // Manual split (chunks are uneven when p ∤ n).
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(p);
+    let mut rest = out.as_mut_slice();
+    for c in 0..p {
+        let len = bounds[c + 1] - bounds[c];
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push(head);
+        rest = tail;
+    }
+
+    let process = |c: usize, chunk: &mut [f32]| {
+        let lo = bounds[c];
+        let len = chunk.len();
+        if len == 0 {
+            return;
+        }
+        let mut comp = vec![0.0f32; if opts.kahan { len } else { 0 }];
+        // Fold order: start at worker (c+1) % p, wrap around the ring.
+        let start = (c + 1) % p;
+        // Initialize with the starting worker's contribution.
+        chunk.copy_from_slice(&contribs[start][lo..lo + len]);
+        for s in 1..p {
+            let w = (start + s) % p;
+            let src = &contribs[w][lo..lo + len];
+            if opts.kahan {
+                for i in 0..len {
+                    fold_step(&mut chunk[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                }
+            } else {
+                let mut dummy = 0.0f32;
+                for i in 0..len {
+                    fold_step(&mut chunk[i], &mut dummy, src[i], opts.fmt, opts.mode, false);
+                }
+            }
+        }
+    };
+
+    // Bounded thread pool: round-robin chunks over available cores; run
+    // sequentially when the tensor is small (thread spawn not worth it).
+    let nthreads = par::num_threads().min(p).max(1);
+    if n * p < par::PAR_THRESHOLD || nthreads == 1 {
+        for (c, chunk) in slices.into_iter().enumerate() {
+            process(c, chunk);
+        }
+    } else {
+        let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+            (0..nthreads).map(|_| Vec::new()).collect();
+        for (c, sl) in slices.into_iter().enumerate() {
+            buckets[c % nthreads].push((c, sl));
+        }
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                let process = &process;
+                s.spawn(move || {
+                    for (c, chunk) in bucket {
+                        process(c, chunk);
+                    }
+                });
+            }
+        });
+    }
+
+    // Traffic: reduce-scatter + all-gather each move (p-1)/p of the tensor
+    // per worker; 2 bytes/elt is not assumed — stats are in *elements*
+    // scaled by the wire width in bytes.
+    let elt_bytes = wire_bytes(opts);
+    let moved = 2 * (p as u64 - 1) * (n as u64) / p as u64;
+    let stats = ReduceStats {
+        bytes_per_worker: moved * elt_bytes as u64,
+        steps: 2 * (p - 1),
+    };
+    (out, stats)
+}
+
+/// Width of one element on the wire, rounded up to whole bytes (the paper
+/// packs 8-bit formats into single bytes; FP32 is 4).
+pub(crate) fn wire_bytes(opts: ReduceOptions) -> u32 {
+    opts.fmt.total_bits().div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::{FpFormat, Rounding};
+
+    #[test]
+    fn ring_fold_order_is_rotated() {
+        // With p=4 and a format so narrow that only the first operand
+        // survives (adding small to big is absorbed), the chunk result
+        // reveals which worker started the fold.
+        let p = 4;
+        let n = 4; // one element per chunk
+        let fmt = FpFormat::new(5, 0); // 0 mantissa bits: 64+1 → 64
+        let mut contribs = vec![vec![0.0f32; n]; p];
+        for c in 0..n {
+            // worker (c+1)%p holds 64, everyone else holds 1.
+            for w in 0..p {
+                contribs[w][c] = if w == (c + 1) % p { 64.0 } else { 1.0 };
+            }
+        }
+        let opts = ReduceOptions { fmt, mode: Rounding::NearestEven, kahan: false };
+        let (out, _) = all_reduce(&contribs, opts);
+        // Start value 64 absorbs all the 1s → exactly 64 everywhere.
+        assert_eq!(out, vec![64.0; n]);
+    }
+
+    #[test]
+    fn uneven_chunks() {
+        let p = 3;
+        let n = 10; // 10 = 3+3+4-ish split
+        let contribs: Vec<Vec<f32>> = (0..p).map(|w| vec![w as f32 + 1.0; n]).collect();
+        let opts = ReduceOptions::fp32();
+        let (out, stats) = all_reduce(&contribs, opts);
+        assert_eq!(out, vec![6.0; n]);
+        assert_eq!(stats.steps, 4);
+    }
+
+    #[test]
+    fn kahan_reduces_ring_roundoff() {
+        let p = 64;
+        let n = 16;
+        // worker 0 has a big value, the rest small ones that would be
+        // absorbed one-by-one without compensation.
+        let contribs: Vec<Vec<f32>> = (0..p)
+            .map(|w| vec![if w == 0 { 256.0 } else { 1.0 }; n])
+            .collect();
+        let fmt = FpFormat::E5M2;
+        let exact = 256.0 + (p as f32 - 1.0);
+        let naive = all_reduce(
+            &contribs,
+            ReduceOptions { fmt, mode: Rounding::NearestEven, kahan: false },
+        )
+        .0;
+        let kahan = all_reduce(
+            &contribs,
+            ReduceOptions { fmt, mode: Rounding::NearestEven, kahan: true },
+        )
+        .0;
+        let err = |v: &Vec<f32>| v.iter().map(|x| (x - exact).abs()).sum::<f32>();
+        assert!(err(&kahan) <= err(&naive), "kahan={kahan:?} naive={naive:?}");
+    }
+}

@@ -1,0 +1,291 @@
+//! TOML experiment configuration (the launcher's input format).
+//!
+//! Every experiment in EXPERIMENTS.md is a config file under `configs/`
+//! plus a seed; the CLI (`aps train --config …`) and the benches both go
+//! through [`ExperimentConfig`] so runs are reproducible from the file
+//! alone. Parsed with the in-crate TOML subset ([`crate::util::toml`]).
+//! See `configs/quickstart.toml` for a commented example.
+
+use crate::aps::{HybridSchedule, SyncMethod};
+use crate::collectives::Topology;
+use crate::cpd::FpFormat;
+use crate::optim::{LrSchedule, OptimizerKind};
+use crate::util::toml::TomlDoc;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// A full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Artifact name under `artifacts/` (mlp, davidnet, resnet, fcn,
+    /// transformer).
+    pub model: String,
+    pub seed: u64,
+
+    pub world_size: usize,
+    pub topology: Topology,
+
+    pub method: SyncMethod,
+    pub kahan: bool,
+    pub fp32_last_layer: bool,
+    pub hybrid: Option<HybridSchedule>,
+
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub schedule: LrSchedule,
+    pub optimizer: OptimizerKind,
+    pub eval_examples: usize,
+    pub track_roundoff: bool,
+}
+
+impl ExperimentConfig {
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing config {path:?}"))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+
+        // [experiment]
+        let name = doc.get("experiment", "name")?.as_str()?.to_string();
+        let model = doc.get("experiment", "model")?.as_str()?.to_string();
+        let seed = doc
+            .opt("experiment", "seed")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(42) as u64;
+
+        // [cluster]
+        let world_size = doc.get("cluster", "world_size")?.as_usize()?;
+        let topo_name = doc
+            .opt("cluster", "topology")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "ring".to_string());
+        let group_size = doc
+            .opt("cluster", "group_size")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(16);
+        let topology = match topo_name.as_str() {
+            "ring" => Topology::Ring,
+            "hierarchical" => Topology::Hierarchical { group_size },
+            other => return Err(anyhow!("unknown topology {other:?} (ring|hierarchical)")),
+        };
+
+        // [sync]
+        let fmt: FpFormat = doc
+            .opt("sync", "format")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "e5m2".to_string())
+            .parse()
+            .map_err(|e: String| anyhow!("sync.format: {e}"))?;
+        let loss_scale_exp = doc
+            .opt("sync", "loss_scale_exp")
+            .map(|v| v.as_i64())
+            .transpose()?
+            .unwrap_or(0) as i32;
+        let method = match doc.get("sync", "method")?.as_str()? {
+            "fp32" => SyncMethod::Fp32,
+            "naive" => SyncMethod::Naive { fmt },
+            "loss_scaling" => SyncMethod::LossScaling { fmt, factor_exp: loss_scale_exp },
+            "aps" => SyncMethod::Aps { fmt },
+            other => return Err(anyhow!("unknown sync.method {other:?}")),
+        };
+        let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+        let fp32_last_layer = doc
+            .opt("sync", "fp32_last_layer")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(false);
+        let hybrid_fp32_epochs = doc
+            .opt("sync", "hybrid_fp32_epochs")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0);
+        let hybrid = if hybrid_fp32_epochs > 0 {
+            Some(HybridSchedule { fp32_epochs: hybrid_fp32_epochs, low: method })
+        } else {
+            None
+        };
+
+        // [train]
+        let epochs = doc.get("train", "epochs")?.as_usize()?;
+        let steps_per_epoch = doc.get("train", "steps_per_epoch")?.as_usize()?;
+        let constant_lr = doc
+            .opt("train", "constant_lr")
+            .map(|v| v.as_f32())
+            .transpose()?
+            .unwrap_or(0.1);
+        let schedule = match doc
+            .opt("train", "lr_schedule")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "constant".to_string())
+            .as_str()
+        {
+            "davidnet" => LrSchedule::davidnet_recipe(epochs as f32),
+            "resnet18" => LrSchedule::resnet18_recipe(),
+            "constant" => LrSchedule::Constant { lr: constant_lr },
+            other => return Err(anyhow!("unknown lr_schedule {other:?}")),
+        };
+        let momentum = doc
+            .opt("train", "momentum")
+            .map(|v| v.as_f32())
+            .transpose()?
+            .unwrap_or(0.9);
+        let weight_decay = doc
+            .opt("train", "weight_decay")
+            .map(|v| v.as_f32())
+            .transpose()?
+            .unwrap_or(1e-4);
+        let optimizer = match doc
+            .opt("train", "optimizer")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "sgd".to_string())
+            .as_str()
+        {
+            "sgd" => OptimizerKind::Sgd { momentum, weight_decay, nesterov: false },
+            "nesterov" => OptimizerKind::Sgd { momentum, weight_decay, nesterov: true },
+            "lars" => OptimizerKind::Lars {
+                momentum,
+                weight_decay,
+                eta: 0.001,
+                epsilon: 1e-9,
+            },
+            other => return Err(anyhow!("unknown optimizer {other:?}")),
+        };
+        let eval_examples = doc
+            .opt("train", "eval_examples")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(256);
+        let track_roundoff = doc
+            .opt("train", "track_roundoff")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(false);
+
+        Ok(ExperimentConfig {
+            name,
+            model,
+            seed,
+            world_size,
+            topology,
+            method,
+            kahan,
+            fp32_last_layer,
+            hybrid,
+            epochs,
+            steps_per_epoch,
+            schedule,
+            optimizer,
+            eval_examples,
+            track_roundoff,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[experiment]
+name = "test"
+model = "mlp"
+seed = 7
+
+[cluster]
+world_size = 8
+topology = "hierarchical"
+group_size = 4
+
+[sync]
+method = "aps"
+format = "e4m3"
+kahan = true
+
+[train]
+epochs = 2
+steps_per_epoch = 5
+lr_schedule = "constant"
+constant_lr = 0.05
+optimizer = "nesterov"
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.topology, Topology::Hierarchical { group_size: 4 });
+        assert_eq!(cfg.method, SyncMethod::Aps { fmt: FpFormat::E4M3 });
+        assert!(cfg.kahan);
+        assert!(cfg.hybrid.is_none());
+        match cfg.optimizer {
+            OptimizerKind::Sgd { nesterov, .. } => assert!(nesterov),
+            _ => panic!("expected sgd"),
+        }
+        assert_eq!(cfg.schedule, LrSchedule::Constant { lr: 0.05 });
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let minimal = r#"
+[experiment]
+name = "m"
+model = "mlp"
+[cluster]
+world_size = 4
+[sync]
+method = "fp32"
+[train]
+epochs = 1
+steps_per_epoch = 2
+"#;
+        let cfg = ExperimentConfig::from_toml_str(minimal).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.method, SyncMethod::Fp32);
+        assert_eq!(cfg.eval_examples, 256);
+        assert!(!cfg.track_roundoff);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let bad_topo = SAMPLE.replace("hierarchical", "mesh");
+        assert!(ExperimentConfig::from_toml_str(&bad_topo).is_err());
+        let bad_method = SAMPLE.replace("\"aps\"", "\"magic\"");
+        assert!(ExperimentConfig::from_toml_str(&bad_method).is_err());
+        let bad_fmt = SAMPLE.replace("e4m3", "e99m1");
+        assert!(ExperimentConfig::from_toml_str(&bad_fmt).is_err());
+    }
+
+    #[test]
+    fn hybrid_parses() {
+        let with_hybrid = SAMPLE.replace("kahan = true", "kahan = true\nhybrid_fp32_epochs = 3");
+        let cfg = ExperimentConfig::from_toml_str(&with_hybrid).unwrap();
+        let h = cfg.hybrid.unwrap();
+        assert_eq!(h.fp32_epochs, 3);
+        assert_eq!(h.method_at(2), SyncMethod::Fp32);
+        assert_eq!(h.method_at(3), SyncMethod::Aps { fmt: FpFormat::E4M3 });
+    }
+
+    #[test]
+    fn loss_scaling_config() {
+        let ls = SAMPLE
+            .replace("method = \"aps\"", "method = \"loss_scaling\"\nloss_scale_exp = 12");
+        let cfg = ExperimentConfig::from_toml_str(&ls).unwrap();
+        assert_eq!(
+            cfg.method,
+            SyncMethod::LossScaling { fmt: FpFormat::E4M3, factor_exp: 12 }
+        );
+    }
+}

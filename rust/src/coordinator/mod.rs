@@ -1,0 +1,131 @@
+//! The L3 coordinator: data-parallel training over the simulated cluster.
+//!
+//! [`Trainer`] owns the whole loop the paper's system runs:
+//!
+//! 1. shard the global batch across the simulated workers ([`crate::data`]);
+//! 2. run each worker's forward+backward through the AOT-compiled HLO
+//!    ([`crate::runtime`] — real gradients, no Python);
+//! 3. synchronize gradients with APS / loss scaling / naive / FP32 over
+//!    ring or hierarchical all-reduce ([`crate::aps`], [`crate::collectives`]);
+//! 4. apply the optimizer ([`crate::optim`]) and record metrics.
+//!
+//! [`Workload`] adapts the loop to the three task families (classification,
+//! segmentation, language modeling); [`TrainOutcome`] is what every bench
+//! and example reports into EXPERIMENTS.md.
+
+pub mod trainer;
+
+pub use trainer::{TrainOutcome, Trainer, TrainerSetup};
+
+use crate::data::{corpus::SyntheticCorpus, segmentation::SyntheticSegmentation, synthetic::SyntheticImages};
+use crate::runtime::{EvalOutput, ModelSpec, XDtype};
+use crate::Result;
+use anyhow::anyhow;
+
+/// Task family + its data generator, derived from the model spec.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    Classification(SyntheticImages),
+    Segmentation(SyntheticSegmentation),
+    Lm(SyntheticCorpus),
+}
+
+impl Workload {
+    /// Choose the generator matching the artifact's input/output shapes.
+    pub fn for_spec(spec: &ModelSpec, seed: u64) -> Result<Workload> {
+        match (spec.x_dtype, spec.y_shape.len()) {
+            (XDtype::I32, _) => {
+                let s = *spec
+                    .x_shape
+                    .first()
+                    .ok_or_else(|| anyhow!("LM spec needs [seq_len] x_shape"))?;
+                Ok(Workload::Lm(SyntheticCorpus::new(spec.num_classes, s, seed)))
+            }
+            (XDtype::F32, 0) => {
+                let [h, w, c] = spec.x_shape[..] else {
+                    return Err(anyhow!("classifier x_shape must be [h, w, c]"));
+                };
+                let mut g = SyntheticImages::cifar_like(seed);
+                g.height = h;
+                g.width = w;
+                g.channels = c;
+                g.num_classes = spec.num_classes;
+                Ok(Workload::Classification(g))
+            }
+            (XDtype::F32, 2) => {
+                let [h, w, c] = spec.x_shape[..] else {
+                    return Err(anyhow!("segmenter x_shape must be [h, w, c]"));
+                };
+                let mut g = SyntheticSegmentation::new(seed);
+                g.height = h;
+                g.width = w;
+                g.channels = c;
+                g.num_classes = spec.num_classes;
+                Ok(Workload::Segmentation(g))
+            }
+            other => Err(anyhow!("cannot infer workload from spec: {other:?}")),
+        }
+    }
+
+    /// Human name of the epoch-end eval metric.
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            Workload::Classification(_) => "top1_accuracy",
+            Workload::Segmentation(_) => "mIoU",
+            Workload::Lm(_) => "eval_loss",
+        }
+    }
+
+    /// Whether larger metric values are better (false for LM loss).
+    pub fn higher_is_better(&self) -> bool {
+        !matches!(self, Workload::Lm(_))
+    }
+
+    pub fn expected_eval_output(&self) -> EvalOutput {
+        match self {
+            Workload::Lm(_) => EvalOutput::Loss,
+            _ => EvalOutput::Logits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn spec(x_dtype: XDtype, x_shape: Vec<usize>, y_shape: Vec<usize>) -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            params: vec![ParamSpec { name: "w".into(), shape: vec![4] }],
+            batch: 2,
+            x_shape,
+            x_dtype,
+            y_shape,
+            num_classes: 10,
+            eval_output: EvalOutput::Logits,
+            train_artifact: "x".into(),
+            eval_artifact: "y".into(),
+            init_seed: 0,
+            multi_train: Default::default(),
+        }
+    }
+
+    #[test]
+    fn workload_inference() {
+        let c = Workload::for_spec(&spec(XDtype::F32, vec![8, 8, 3], vec![]), 0).unwrap();
+        assert!(matches!(c, Workload::Classification(_)));
+        let s = Workload::for_spec(&spec(XDtype::F32, vec![16, 16, 3], vec![16, 16]), 0).unwrap();
+        assert!(matches!(s, Workload::Segmentation(_)));
+        let l = Workload::for_spec(&spec(XDtype::I32, vec![32], vec![32]), 0).unwrap();
+        assert!(matches!(l, Workload::Lm(_)));
+        assert_eq!(l.metric_name(), "eval_loss");
+        assert!(!l.higher_is_better());
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        assert!(Workload::for_spec(&spec(XDtype::F32, vec![8, 8], vec![]), 0).is_err());
+        assert!(Workload::for_spec(&spec(XDtype::F32, vec![8, 8, 3], vec![1, 2, 3]), 0).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! The distributed training loop (paper §4 experiments' engine).
+
+use super::Workload;
+use crate::aps::{self, HybridSchedule, SyncOptions};
+use crate::collectives::SimCluster;
+use crate::cpd::avg_roundoff_error;
+use crate::data::shard_range;
+use crate::metrics::{top1_accuracy, SegmentationMetrics, Series};
+use crate::optim::{LrSchedule, Optimizer, OptimizerKind};
+use crate::runtime::Model;
+use crate::Result;
+use anyhow::ensure;
+use std::time::Instant;
+
+/// Everything needed to construct a [`Trainer`] besides the model.
+#[derive(Clone, Debug)]
+pub struct TrainerSetup {
+    pub world_size: usize,
+    pub sync: SyncOptions,
+    /// Optional hybrid-precision schedule (overrides `sync.method` per epoch).
+    pub hybrid: Option<HybridSchedule>,
+    pub optimizer: OptimizerKind,
+    pub schedule: LrSchedule,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    /// Examples per epoch-end eval pass.
+    pub eval_examples: usize,
+    /// Track Eq.-5 round-off against an exact (f64) reduction each step.
+    pub track_roundoff: bool,
+    pub seed: u64,
+    /// Print a progress line every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl TrainerSetup {
+    pub fn new(world_size: usize, sync: SyncOptions) -> Self {
+        TrainerSetup {
+            world_size,
+            sync,
+            hybrid: None,
+            optimizer: OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false },
+            schedule: LrSchedule::Constant { lr: 0.05 },
+            epochs: 2,
+            steps_per_epoch: 20,
+            eval_examples: 256,
+            track_roundoff: false,
+            seed: 42,
+            log_every: 0,
+        }
+    }
+}
+
+/// Everything a training run reports (feeds the tables in EXPERIMENTS.md).
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    pub name: String,
+    /// Per-step mean worker loss.
+    pub loss: Series,
+    /// Per-epoch eval metric (accuracy / mIoU / eval loss).
+    pub eval: Series,
+    /// Final eval metric.
+    pub final_metric: f64,
+    /// Segmentation only: final mean per-class accuracy.
+    pub final_macc: Option<f64>,
+    /// Gradient payload bytes per worker, whole run.
+    pub comm_payload_bytes: u64,
+    /// APS exponent-phase bytes per worker, whole run.
+    pub comm_exponent_bytes: u64,
+    /// Per-step Eq.-5 round-off of the synchronized gradient (if tracked).
+    pub roundoff: Series,
+    /// Per-step weighted underflow fraction on the wire.
+    pub underflow: Series,
+    /// Training hit a non-finite loss at some step.
+    pub diverged: bool,
+    pub steps_run: usize,
+    pub wall_secs: f64,
+}
+
+impl TrainOutcome {
+    /// Mean Eq.-5 round-off over the run.
+    pub fn mean_roundoff(&self) -> f64 {
+        if self.roundoff.points.is_empty() {
+            f64::NAN
+        } else {
+            self.roundoff.points.iter().map(|p| p.1).sum::<f64>()
+                / self.roundoff.points.len() as f64
+        }
+    }
+}
+
+/// The data-parallel trainer.
+pub struct Trainer<'m> {
+    model: &'m Model,
+    setup: TrainerSetup,
+    workload: Workload,
+    cluster: SimCluster,
+    pub params: Vec<Vec<f32>>,
+    optimizer: Optimizer,
+}
+
+impl<'m> Trainer<'m> {
+    pub fn new(model: &'m Model, setup: TrainerSetup) -> Result<Self> {
+        let workload = Workload::for_spec(&model.spec, setup.seed)?;
+        ensure!(
+            model.spec.eval_output == workload.expected_eval_output(),
+            "artifact eval output does not match workload"
+        );
+        let params = model.initial_params()?;
+        let optimizer = Optimizer::new(setup.optimizer, &model.spec.param_lens());
+        let cluster = SimCluster::new(setup.world_size);
+        Ok(Trainer { model, setup, workload, cluster, params, optimizer })
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ModelSpec {
+        &self.model.spec
+    }
+
+    /// Global batch = per-artifact batch × world size.
+    pub fn global_batch(&self) -> usize {
+        self.model.spec.batch * self.setup.world_size
+    }
+
+    /// Compute every worker's `(loss, grads)` for global step `step`.
+    /// Worker `w` reads examples
+    /// `step·global_batch + shard(w)` from the infinite dataset.
+    pub fn worker_grads(&self, step: usize) -> Result<(f32, Vec<Vec<Vec<f32>>>)> {
+        let world = self.setup.world_size;
+        let local = self.model.spec.batch;
+        let global = self.global_batch();
+        // Convert the (shared) parameters to PJRT literals once per step,
+        // not once per worker — see EXPERIMENTS.md §Perf.
+        let prepared = self.model.prepare_params(&self.params)?;
+
+        // Fast path: one vmapped dispatch for every worker's fwd+bwd.
+        if self.model.has_multi_train(world) {
+            let (mut xs_f32, mut xs_i32, mut ys) = (Vec::new(), Vec::new(), Vec::new());
+            for w in 0..world {
+                let start = (step * global + shard_range(global, world, w).start) as u64;
+                match &self.workload {
+                    Workload::Classification(g) => {
+                        let b = g.batch(start, local);
+                        xs_f32.extend_from_slice(&b.images);
+                        ys.extend(b.labels.iter().map(|&l| l as i32));
+                    }
+                    Workload::Segmentation(g) => {
+                        let b = g.batch(start, local);
+                        xs_f32.extend_from_slice(&b.images);
+                        ys.extend(b.masks.iter().map(|&l| l as i32));
+                    }
+                    Workload::Lm(g) => {
+                        let b = g.batch(start, local);
+                        xs_i32.extend(b.tokens.iter().map(|&t| t as i32));
+                        ys.extend(b.targets.iter().map(|&t| t as i32));
+                    }
+                }
+            }
+            let xf = (!xs_f32.is_empty()).then_some(xs_f32.as_slice());
+            let xi = (!xs_i32.is_empty()).then_some(xs_i32.as_slice());
+            return self.model.train_step_multi(&prepared, world, xf, xi, &ys);
+        }
+
+        let mut all = Vec::with_capacity(world);
+        let mut loss_sum = 0.0f64;
+        for w in 0..world {
+            let start = (step * global + shard_range(global, world, w).start) as u64;
+            let (loss, grads) = match &self.workload {
+                Workload::Classification(g) => {
+                    let b = g.batch(start, local);
+                    let y: Vec<i32> = b.labels.iter().map(|&l| l as i32).collect();
+                    self.model.train_step_prepared(&prepared, Some(&b.images), None, &y)?
+                }
+                Workload::Segmentation(g) => {
+                    let b = g.batch(start, local);
+                    let y: Vec<i32> = b.masks.iter().map(|&l| l as i32).collect();
+                    self.model.train_step_prepared(&prepared, Some(&b.images), None, &y)?
+                }
+                Workload::Lm(g) => {
+                    let b = g.batch(start, local);
+                    let x: Vec<i32> = b.tokens.iter().map(|&t| t as i32).collect();
+                    let y: Vec<i32> = b.targets.iter().map(|&t| t as i32).collect();
+                    self.model.train_step_prepared(&prepared, None, Some(&x), &y)?
+                }
+            };
+            loss_sum += loss as f64;
+            all.push(grads);
+        }
+        Ok(((loss_sum / world as f64) as f32, all))
+    }
+
+    /// One full training step: grads → sync → optimizer. Returns the mean
+    /// worker loss. `epoch` selects the hybrid-precision method.
+    pub fn step(&mut self, epoch: usize, step: usize, out: &mut TrainOutcome) -> Result<f32> {
+        let (loss, worker_grads) = self.worker_grads(step)?;
+
+        let mut sync = self.setup.sync;
+        if let Some(h) = &self.setup.hybrid {
+            sync.method = h.method_at(epoch);
+        }
+        let (reduced, report) = aps::synchronize(&self.cluster, &worker_grads, &sync);
+
+        if self.setup.track_roundoff {
+            let exact = aps::reduce_exact(&worker_grads, sync.average);
+            let mut err_sum = 0.0;
+            let mut elems = 0usize;
+            for (e, r) in exact.iter().zip(&reduced) {
+                err_sum += avg_roundoff_error(e, r) * e.len() as f64;
+                elems += e.len();
+            }
+            out.roundoff.push(step as f64, err_sum / elems.max(1) as f64);
+        }
+        out.underflow.push(step as f64, report.underflow_frac());
+        out.comm_payload_bytes += report.payload_bytes;
+        out.comm_exponent_bytes += report.exponent_bytes;
+
+        // Global step → fractional epoch for the LR schedule.
+        let epoch_f = step as f32 / self.setup.steps_per_epoch.max(1) as f32;
+        let lr = self.setup.schedule.at(epoch_f);
+        self.optimizer.step(&mut self.params, &reduced, lr);
+
+        if !loss.is_finite() {
+            out.diverged = true;
+        }
+        Ok(loss)
+    }
+
+    /// Epoch-end evaluation on the held-out deterministic eval set.
+    pub fn evaluate(&self) -> Result<(f64, Option<f64>)> {
+        let local = self.model.spec.batch;
+        let chunks = (self.setup.eval_examples / local).max(1);
+        match &self.workload {
+            Workload::Classification(g) => {
+                let mut correct_weighted = 0.0;
+                for c in 0..chunks {
+                    let b = g.batch((1 << 40) + (c * local) as u64, local);
+                    let logits =
+                        self.model.eval_step(&self.params, Some(&b.images), None, None)?;
+                    correct_weighted +=
+                        top1_accuracy(&logits, &b.labels, self.model.spec.num_classes);
+                }
+                Ok((correct_weighted / chunks as f64, None))
+            }
+            Workload::Segmentation(g) => {
+                let mut m = SegmentationMetrics::new(self.model.spec.num_classes);
+                for c in 0..chunks {
+                    let b = g.batch((1 << 40) + (c * local) as u64, local);
+                    let logits =
+                        self.model.eval_step(&self.params, Some(&b.images), None, None)?;
+                    m.update_from_logits(&logits, &b.masks);
+                }
+                Ok((m.miou(), Some(m.macc())))
+            }
+            Workload::Lm(g) => {
+                let mut loss_sum = 0.0;
+                for c in 0..chunks {
+                    let b = g.batch((1 << 40) + (c * local) as u64, local);
+                    let x: Vec<i32> = b.tokens.iter().map(|&t| t as i32).collect();
+                    let y: Vec<i32> = b.targets.iter().map(|&t| t as i32).collect();
+                    let out = self.model.eval_step(&self.params, None, Some(&x), Some(&y))?;
+                    loss_sum += out[0] as f64;
+                }
+                Ok((loss_sum / chunks as f64, None))
+            }
+        }
+    }
+
+    /// Run the full schedule and return the outcome.
+    pub fn train(&mut self, name: impl Into<String>) -> Result<TrainOutcome> {
+        let mut out = TrainOutcome { name: name.into(), ..Default::default() };
+        let t0 = Instant::now();
+        let mut global_step = 0usize;
+        for epoch in 0..self.setup.epochs {
+            for _ in 0..self.setup.steps_per_epoch {
+                let loss = self.step(epoch, global_step, &mut out)?;
+                out.loss.push(global_step as f64, loss as f64);
+                if self.setup.log_every > 0 && global_step % self.setup.log_every == 0 {
+                    eprintln!(
+                        "[{}] epoch {epoch} step {global_step} loss {loss:.4}",
+                        out.name
+                    );
+                }
+                global_step += 1;
+            }
+            let (metric, macc) = self.evaluate()?;
+            out.eval.push(epoch as f64, metric);
+            out.final_macc = macc;
+            if self.setup.log_every > 0 {
+                eprintln!(
+                    "[{}] epoch {epoch} {} = {metric:.4}",
+                    out.name,
+                    self.workload.metric_name()
+                );
+            }
+        }
+        out.final_metric = out.eval.last().unwrap_or(f64::NAN);
+        out.steps_run = global_step;
+        out.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Collect per-layer gradients at the current parameters (worker 0) —
+    /// the raw material of the Fig 1/2 distribution plots.
+    pub fn snapshot_gradients(&self, step: usize) -> Result<Vec<Vec<f32>>> {
+        let (_, mut all) = self.worker_grads(step)?;
+        Ok(all.swap_remove(0))
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+}

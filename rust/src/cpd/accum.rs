@@ -1,0 +1,206 @@
+//! Low-precision accumulation (paper §5.1.1).
+//!
+//! When a small number is added to a large one in a narrow format, the
+//! small number's mantissa is right-shifted away — the "large-and-small
+//! addition" problem the paper identifies in both GEMM accumulation and
+//! gradient all-reduce. CPD offers two accumulators:
+//!
+//! * [`LowPrecisionAccumulator`] — the faithful emulation: the running sum
+//!   lives in the custom format and *every* partial sum is re-quantized
+//!   (what real low-precision hardware would do).
+//! * [`KahanAccumulator`] — the same, plus Kahan compensated summation
+//!   (Higham [13]); the compensation term also lives in the custom format.
+//!   The paper introduces this into DL for reduce/all-reduce and GEMM.
+
+use super::cast::{quantize, Rounding};
+use super::format::FpFormat;
+
+/// Running sum where every intermediate result is quantized to `fmt`.
+#[derive(Clone, Copy, Debug)]
+pub struct LowPrecisionAccumulator {
+    fmt: FpFormat,
+    mode: Rounding,
+    sum: f32,
+}
+
+impl LowPrecisionAccumulator {
+    pub fn new(fmt: FpFormat, mode: Rounding) -> Self {
+        Self { fmt, mode, sum: 0.0 }
+    }
+
+    /// Add one term: `sum = Q(sum + Q(v))`.
+    #[inline]
+    pub fn add(&mut self, v: f32) {
+        let qv = quantize(v, self.fmt, self.mode);
+        self.sum = quantize(self.sum + qv, self.fmt, self.mode);
+    }
+
+    /// Add an already-quantized term: `sum = Q(sum + v)` (the all-reduce
+    /// inner step, where operands arrive in the wire format).
+    #[inline]
+    pub fn add_quantized(&mut self, v: f32) {
+        self.sum = quantize(self.sum + v, self.fmt, self.mode);
+    }
+
+    pub fn value(&self) -> f32 {
+        self.sum
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+    }
+}
+
+/// Kahan-compensated running sum in a custom format.
+///
+/// All four intermediate quantities (`y`, `t`, the new compensation and the
+/// new sum) are squeezed through `fmt`, so this models a hardware unit that
+/// holds two low-precision registers rather than a hidden wide accumulator.
+#[derive(Clone, Copy, Debug)]
+pub struct KahanAccumulator {
+    fmt: FpFormat,
+    mode: Rounding,
+    sum: f32,
+    comp: f32,
+}
+
+impl KahanAccumulator {
+    pub fn new(fmt: FpFormat, mode: Rounding) -> Self {
+        Self { fmt, mode, sum: 0.0, comp: 0.0 }
+    }
+
+    /// Add one term with compensation.
+    #[inline]
+    pub fn add(&mut self, v: f32) {
+        let q = |x: f32| quantize(x, self.fmt, self.mode);
+        let y = q(q(v) - self.comp);
+        let t = q(self.sum + y);
+        self.comp = q(q(t - self.sum) - y);
+        self.sum = t;
+    }
+
+    /// Add an already-quantized term (all-reduce inner step).
+    #[inline]
+    pub fn add_quantized(&mut self, v: f32) {
+        let q = |x: f32| quantize(x, self.fmt, self.mode);
+        let y = q(v - self.comp);
+        let t = q(self.sum + y);
+        self.comp = q(q(t - self.sum) - y);
+        self.sum = t;
+    }
+
+    pub fn value(&self) -> f32 {
+        self.sum
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.comp = 0.0;
+    }
+}
+
+/// Sum a slice in the custom format with a plain low-precision accumulator.
+pub fn sum_low_precision(xs: &[f32], fmt: FpFormat, mode: Rounding) -> f32 {
+    let mut acc = LowPrecisionAccumulator::new(fmt, mode);
+    for &x in xs {
+        acc.add(x);
+    }
+    acc.value()
+}
+
+/// Sum a slice in the custom format with Kahan compensation.
+pub fn sum_kahan(xs: &[f32], fmt: FpFormat, mode: Rounding) -> f32 {
+    let mut acc = KahanAccumulator::new(fmt, mode);
+    for &x in xs {
+        acc.add(x);
+    }
+    acc.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const RNE: Rounding = Rounding::NearestEven;
+
+    #[test]
+    fn fp32_accumulator_is_plain_sum() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32 * 0.25).collect();
+        let got = sum_low_precision(&xs, FpFormat::FP32, RNE);
+        let want: f32 = xs.iter().sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn small_terms_vanish_without_kahan() {
+        // In E5M2 (2 mantissa bits) adding 1.0 repeatedly to a sum of 64
+        // does nothing: 64 + 1 = 65 rounds back to 64 (ulp at 64 is 16).
+        let f = FpFormat::E5M2;
+        let mut acc = LowPrecisionAccumulator::new(f, RNE);
+        acc.add(64.0);
+        for _ in 0..32 {
+            acc.add(1.0);
+        }
+        assert_eq!(acc.value(), 64.0);
+    }
+
+    #[test]
+    fn kahan_recovers_small_terms() {
+        // Kahan keeps the lost low-order parts in the compensation register
+        // and releases them once they accumulate past an ulp. (In E4M3 the
+        // ulp at 64 is 8, so naive addition of 1.0 stalls forever; Kahan
+        // accumulates the compensation until it crosses the rounding
+        // threshold. With only 2 mantissa bits the compensation itself can
+        // hit ties-to-even and stall too — hence E4M3 here, and the
+        // weaker `<=` property tested for E5M2 elsewhere.)
+        let f = FpFormat::E4M3;
+        let mut naive = LowPrecisionAccumulator::new(f, RNE);
+        let mut kahan = KahanAccumulator::new(f, RNE);
+        naive.add(64.0);
+        kahan.add(64.0);
+        for _ in 0..64 {
+            naive.add(1.0);
+            kahan.add(1.0);
+        }
+        let exact = 128.0f32;
+        let kahan_err = (kahan.value() - exact).abs();
+        let naive_err = (naive.value() - exact).abs();
+        assert!(kahan_err < naive_err, "kahan={} naive={}", kahan.value(), naive.value());
+        assert_eq!(naive.value(), 64.0);
+        assert!(kahan_err <= 16.0, "kahan={}", kahan.value()); // within one ulp at 128
+    }
+
+    #[test]
+    fn kahan_beats_naive_on_long_uniform_sum() {
+        let f = FpFormat::E4M3;
+        let xs: Vec<f32> = vec![0.1; 4096];
+        let exact = 0.1f64 * 4096.0;
+        let naive = sum_low_precision(&xs, f, RNE) as f64;
+        let kahan = sum_kahan(&xs, f, RNE) as f64;
+        assert!(
+            (kahan - exact).abs() <= (naive - exact).abs(),
+            "kahan={kahan} naive={naive} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn reset_works() {
+        let mut a = KahanAccumulator::new(FpFormat::E5M2, RNE);
+        a.add(3.0);
+        a.reset();
+        assert_eq!(a.value(), 0.0);
+        let mut b = LowPrecisionAccumulator::new(FpFormat::E5M2, RNE);
+        b.add(3.0);
+        b.reset();
+        assert_eq!(b.value(), 0.0);
+    }
+
+    #[test]
+    fn inf_propagates_through_accumulation() {
+        // The paper's "domino effect": once INF enters, it never leaves.
+        let f = FpFormat::E5M2;
+        let mut acc = LowPrecisionAccumulator::new(f, RNE);
+        acc.add(1e30); // overflows to INF in E5M2
+        acc.add(-5.0);
+        assert!(acc.value().is_infinite());
+    }
+}

@@ -1,0 +1,488 @@
+//! Bit-exact quantization of `f32` values into a customized format.
+//!
+//! `quantize(x, fmt, Rounding::NearestEven)` returns the `f32` whose value
+//! is exactly the `(exp_bits, man_bits)` representation of `x` — i.e. the
+//! result of casting to the low-precision format and back up (every such
+//! format is a subset of FP32). This is CPD's core primitive: the paper's
+//! experiments all run arithmetic in FP32 but squeeze values through the
+//! emulated format at the points where a real system would store or
+//! transmit low-precision words.
+//!
+//! The implementation is pure integer bit manipulation on the significand
+//! (no double rounding): decompose `|x| = sig · 2^(e-23)` with a 24-bit
+//! significand, decide how many significand bits the target keeps at this
+//! exponent (fewer in the subnormal range — gradual underflow), round the
+//! dropped bits, and rebuild. Overflow follows IEEE: a post-rounding
+//! magnitude above `max_value` becomes `±INF` (the paper's "cast to INF").
+
+use super::format::FpFormat;
+
+/// Rounding mode used when casting into the low-precision format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round to nearest, ties to even — the paper's choice (§4) and the
+    /// mode used by every experiment in this repository.
+    NearestEven,
+    /// Truncate toward zero (for comparison studies).
+    TowardZero,
+    /// Unbiased stochastic rounding (QSGD/TernGrad-style); the `u64` per
+    /// call comes from the caller's RNG so results stay reproducible.
+    Stochastic(u64),
+}
+
+/// Quantize a single `f32` into `fmt`, returning the dequantized `f32`.
+///
+/// Semantics:
+/// * `NaN` → `NaN`; `±INF` → `±INF`; `±0` preserved (incl. sign).
+/// * Magnitudes that round above [`FpFormat::max_value`] → `±INF`.
+/// * Magnitudes that round below the smallest subnormal → `±0`.
+/// * `(8, 23)` is the identity on all finite values.
+///
+/// ```
+/// use aps_cpd::cpd::{quantize, FpFormat, Rounding};
+/// let f = FpFormat::E5M2; // mantissa step at 1.0 is 0.25
+/// assert_eq!(quantize(1.1, f, Rounding::NearestEven), 1.0);
+/// assert_eq!(quantize(1.125, f, Rounding::NearestEven), 1.0);  // tie → even
+/// assert_eq!(quantize(1.375, f, Rounding::NearestEven), 1.5);  // tie → even
+/// assert_eq!(quantize(1e6, f, Rounding::NearestEven), f32::INFINITY);
+/// assert_eq!(quantize(1e-9, f, Rounding::NearestEven), 0.0);
+/// ```
+#[inline]
+pub fn quantize(x: f32, fmt: FpFormat, mode: Rounding) -> f32 {
+    if fmt.is_fp32() {
+        return x;
+    }
+    quantize_shifted(x, 0, fmt, mode)
+}
+
+/// Quantize `x * 2^factor_exp` into `fmt` with a **single** rounding.
+///
+/// The power-of-two shift happens in exponent space (paper §3.3.1 — a
+/// shift is lossless), so the only rounding is the cast into the target
+/// format. This is the primitive APS uses on the wire path: it avoids the
+/// double rounding that "scale in f32, then cast" would introduce when
+/// the scaled value lands in the f32-subnormal range, and matches the
+/// Python oracle (`ref.quantize_ref`) bit for bit.
+#[inline]
+pub fn quantize_shifted(x: f32, factor_exp: i32, fmt: FpFormat, mode: Rounding) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x.is_infinite() || x == 0.0 {
+        return x; // preserves ±0 and ±INF
+    }
+    if fmt.is_fp32() && factor_exp == 0 {
+        return x;
+    }
+    let neg = x.is_sign_negative();
+    let bits = x.abs().to_bits();
+    let raw_e = (bits >> 23) as i32;
+    let raw_m = (bits & 0x007f_ffff) as u64;
+
+    // |x| = sig * 2^(e - 23), sig in [2^23, 2^24) (normalized).
+    let (e, sig): (i32, u64) = if raw_e == 0 {
+        // f32 subnormal: value = raw_m * 2^-149; normalize.
+        let lead = 63 - raw_m.leading_zeros() as i32; // index of top set bit
+        let shift = 23 - lead;
+        (-126 - shift, raw_m << shift)
+    } else {
+        (raw_e - 127, raw_m | (1 << 23))
+    };
+    // The APS power-of-two shift: pure exponent arithmetic (Fig 4).
+    let e = e.saturating_add(factor_exp);
+
+    // Far above the format's range: the value is ≥ 2^e > max_value even
+    // before rounding (also keeps the bit-assembled pow2 in domain).
+    if e > fmt.max_exponent() {
+        return if neg { f32::NEG_INFINITY } else { f32::INFINITY };
+    }
+
+    let e_min = fmt.min_normal_exponent();
+    // Significand bits kept at this exponent: man+1 for normals, fewer in
+    // the subnormal range (gradual underflow).
+    let keep = if e >= e_min {
+        fmt.man_bits as i32 + 1
+    } else {
+        fmt.man_bits as i32 + 1 - (e_min - e)
+    };
+    let drop = 24 - keep; // bits of `sig` to round away (can exceed 24)
+
+    let rounded: u64 = if drop <= 0 {
+        sig
+    } else if drop >= 63 {
+        0 // far below the subnormal range; sig < 2^24 << 2^(drop-1), no tie
+    } else {
+        let floor = sig >> drop;
+        let rem = sig & ((1u64 << drop) - 1);
+        let half = 1u64 << (drop - 1);
+        match mode {
+            Rounding::NearestEven => {
+                if rem > half || (rem == half && floor & 1 == 1) {
+                    floor + 1
+                } else {
+                    floor
+                }
+            }
+            Rounding::TowardZero => floor,
+            Rounding::Stochastic(r) => {
+                // Round up with probability rem / 2^drop (unbiased).
+                let threshold = r & ((1u64 << drop) - 1);
+                if rem > threshold {
+                    floor + 1
+                } else {
+                    floor
+                }
+            }
+        }
+    };
+
+    if rounded == 0 {
+        return if neg { -0.0 } else { 0.0 };
+    }
+    // value = rounded * 2^(e - 23 + drop); exact in f64 (≤ 25-bit integer,
+    // exponent ∈ [-149, e_max+1] — always a normal f64). Powers of two are
+    // bit-assembled rather than computed with libm exp2 (≈2× on the slice
+    // path, EXPERIMENTS.md §Perf).
+    let val = rounded as f64 * pow2_f64(e - 23 + drop.max(0));
+    let max_val =
+        (2.0 - pow2_f64(-(fmt.man_bits as i32))) * pow2_f64(fmt.max_exponent());
+    let out = if val > max_val { f64::INFINITY } else { val };
+    let out = out as f32; // exact: result is representable in f32
+    if neg {
+        -out
+    } else {
+        out
+    }
+}
+
+/// Exact `2^k` for `k ∈ [-1022, 1023]` by exponent-field assembly.
+#[inline(always)]
+fn pow2_f64(k: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&k));
+    f64::from_bits(((k + 1023) as u64) << 52)
+}
+
+/// Quantize `xs * 2^factor_exp` elementwise with a single rounding,
+/// allocating the output (the APS wire-path downcast).
+pub fn quantize_shifted_slice(
+    xs: &[f32],
+    factor_exp: i32,
+    fmt: FpFormat,
+    mode: Rounding,
+) -> Vec<f32> {
+    let mut out = vec![0.0; xs.len()];
+    // Hoist the mode match out of the element loop; on multi-core hosts
+    // chunk across threads (pure elementwise work), on single-core run
+    // the direct loop (the closure/thread plumbing alone costs ~2×).
+    let run = |start: usize, chunk: &mut [f32]| {
+        let src = &xs[start..start + chunk.len()];
+        match mode {
+            Rounding::Stochastic(seed) => {
+                for (i, (&x, o)) in src.iter().zip(chunk.iter_mut()).enumerate() {
+                    let gi = (start + i) as u64;
+                    let r = splitmix64(seed ^ gi.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    *o = quantize_shifted(x, factor_exp, fmt, Rounding::Stochastic(r));
+                }
+            }
+            Rounding::NearestEven => {
+                for (&x, o) in src.iter().zip(chunk.iter_mut()) {
+                    *o = quantize_shifted(x, factor_exp, fmt, Rounding::NearestEven);
+                }
+            }
+            Rounding::TowardZero => {
+                for (&x, o) in src.iter().zip(chunk.iter_mut()) {
+                    *o = quantize_shifted(x, factor_exp, fmt, Rounding::TowardZero);
+                }
+            }
+        }
+    };
+    if crate::util::par::num_threads() > 1 && xs.len() >= crate::util::par::PAR_THRESHOLD {
+        crate::util::par::par_chunks_mut(&mut out, crate::util::par::PAR_THRESHOLD, run);
+    } else {
+        run(0, &mut out);
+    }
+    out
+}
+
+/// Quantize a slice elementwise, allocating the output.
+pub fn quantize_slice(xs: &[f32], fmt: FpFormat, mode: Rounding) -> Vec<f32> {
+    let mut out = vec![0.0; xs.len()];
+    quantize_slice_into(xs, &mut out, fmt, mode);
+    out
+}
+
+/// Quantize `xs` elementwise into `out` (same length). The hot-path
+/// variant used by the gradient-sync pipeline; see `benches/hotpath.rs`.
+pub fn quantize_slice_into(xs: &[f32], out: &mut [f32], fmt: FpFormat, mode: Rounding) {
+    assert_eq!(xs.len(), out.len());
+    if fmt.is_fp32() {
+        out.copy_from_slice(xs);
+        return;
+    }
+    match mode {
+        Rounding::Stochastic(seed) => {
+            // Derive one draw per element from a counter-based SplitMix64
+            // so slice quantization stays deterministic and parallelizable.
+            for (i, (&x, o)) in xs.iter().zip(out.iter_mut()).enumerate() {
+                let r = splitmix64(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                *o = quantize(x, fmt, Rounding::Stochastic(r));
+            }
+        }
+        m => {
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = quantize(x, fmt, m);
+            }
+        }
+    }
+}
+
+/// In-place slice quantization.
+pub fn quantize_slice_inplace(xs: &mut [f32], fmt: FpFormat, mode: Rounding) {
+    if fmt.is_fp32() {
+        return;
+    }
+    match mode {
+        Rounding::Stochastic(seed) => {
+            for (i, x) in xs.iter_mut().enumerate() {
+                let r = splitmix64(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                *x = quantize(*x, fmt, Rounding::Stochastic(r));
+            }
+        }
+        m => {
+            for x in xs.iter_mut() {
+                *x = quantize(*x, fmt, m);
+            }
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The unbiased exponent `ceil(log2(|x|))` used by Algorithm 1's
+/// `FindMaxExp` (line 19). Exact powers of two return their exponent; other
+/// values return `floor(log2|x|) + 1`. Returns `None` for zero/non-finite.
+#[inline]
+pub fn ceil_log2_abs(x: f32) -> Option<i32> {
+    if x == 0.0 || !x.is_finite() {
+        return None;
+    }
+    let bits = x.abs().to_bits();
+    let raw_e = (bits >> 23) as i32;
+    let raw_m = bits & 0x007f_ffff;
+    if raw_e == 0 {
+        // subnormal: value = raw_m * 2^-149
+        let lead = 31 - raw_m.leading_zeros() as i32;
+        let floor = lead - 149;
+        // power of two iff a single bit set
+        Some(if raw_m.count_ones() == 1 { floor } else { floor + 1 })
+    } else {
+        let floor = raw_e - 127;
+        Some(if raw_m == 0 { floor } else { floor + 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RNE: Rounding = Rounding::NearestEven;
+
+    #[test]
+    fn identity_for_fp32() {
+        for x in [0.0f32, -0.0, 1.5, -3.25e-12, 1e38, f32::MIN_POSITIVE / 8.0] {
+            assert_eq!(quantize(x, FpFormat::FP32, RNE).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn specials() {
+        let f = FpFormat::E5M2;
+        assert!(quantize(f32::NAN, f, RNE).is_nan());
+        assert_eq!(quantize(f32::INFINITY, f, RNE), f32::INFINITY);
+        assert_eq!(quantize(f32::NEG_INFINITY, f, RNE), f32::NEG_INFINITY);
+        assert_eq!(quantize(0.0, f, RNE).to_bits(), 0.0f32.to_bits());
+        assert_eq!(quantize(-0.0, f, RNE).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        let f = FpFormat::E5M2; // step at [1,2) is 0.25
+        assert_eq!(quantize(1.125, f, RNE), 1.0); // 1.125 between 1.0, 1.25 → even 1.0
+        assert_eq!(quantize(1.375, f, RNE), 1.5); // between 1.25, 1.5 → even 1.5
+        assert_eq!(quantize(-1.125, f, RNE), -1.0);
+        assert_eq!(quantize(1.1251, f, RNE), 1.25); // above tie → up
+        assert_eq!(quantize(1.1249, f, RNE), 1.0);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        let f = FpFormat::E5M2;
+        let max = f.max_value() as f32; // 57344
+        assert_eq!(quantize(max, f, RNE), max);
+        // Below the rounding midpoint stays at max, above → INF.
+        let ulp = 2f32.powi(15 - 2);
+        assert_eq!(quantize(max + ulp * 0.49, f, RNE), max);
+        assert_eq!(quantize(max + ulp * 0.51, f, RNE), f32::INFINITY);
+        assert_eq!(quantize(-1e30, f, RNE), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormals() {
+        let f = FpFormat::E5M2;
+        let min_sub = f.min_subnormal() as f32; // 2^-16
+        assert_eq!(quantize(min_sub, f, RNE), min_sub);
+        // Half the min subnormal ties to even (0).
+        assert_eq!(quantize(min_sub * 0.5, f, RNE), 0.0);
+        assert_eq!(quantize(min_sub * 0.51, f, RNE), min_sub);
+        assert_eq!(quantize(min_sub * 0.49, f, RNE), 0.0);
+        assert_eq!(quantize(-min_sub * 0.75, f, RNE), -min_sub);
+        // 1.5 * min_sub ties between 1*min_sub and 2*min_sub → even (2).
+        assert_eq!(quantize(min_sub * 1.5, f, RNE), 2.0 * min_sub);
+    }
+
+    #[test]
+    fn gradual_underflow_precision_loss() {
+        let f = FpFormat::new(5, 2);
+        // At 2^-15 (one below min normal 2^-14) only 2 significand bits
+        // remain: representables are {2^-16, 2^-15, 1.5*2^-15}.
+        let x = 1.25 * 2f32.powi(-15);
+        let q = quantize(x, f, RNE);
+        assert!(q == 2f32.powi(-15) || q == 1.5 * 2f32.powi(-15));
+        assert_eq!(quantize(1.75 * 2f32.powi(-15), f, RNE), 2f32.powi(-14));
+    }
+
+    #[test]
+    fn idempotent_on_all_representables() {
+        for fmt in [
+            FpFormat::E5M2,
+            FpFormat::E4M3,
+            FpFormat::E3M0,
+            FpFormat::new(2, 3),
+            FpFormat::new(6, 1),
+        ] {
+            for v in fmt.enumerate_magnitudes() {
+                assert_eq!(quantize(v, fmt, RNE).to_bits(), v.to_bits(), "{fmt} {v}");
+                assert_eq!(quantize(-v, fmt, RNE), -v, "{fmt} -{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_exhaustive_small_format() {
+        // For E3M1, check against a brute-force nearest search over the
+        // enumerated representables for a dense sample of inputs.
+        let fmt = FpFormat::new(3, 1);
+        let reps = fmt.enumerate_magnitudes();
+        let max = fmt.max_value() as f32;
+        let mut x = -1.5 * max;
+        while x < 1.5 * max {
+            let q = quantize(x, fmt, RNE);
+            let ax = x.abs();
+            // brute force nearest (ignoring tie direction)
+            let mut best = f32::INFINITY;
+            let mut bd = f32::INFINITY;
+            for &r in &reps {
+                let d = (ax - r).abs();
+                if d < bd {
+                    bd = d;
+                    best = r;
+                }
+            }
+            if ax > max {
+                // overflow region handled separately
+                let ulp = 2f32.powi(fmt.max_exponent() - fmt.man_bits as i32);
+                if ax - max > ulp / 2.0 {
+                    assert!(q.is_infinite(), "x={x} q={q}");
+                } else {
+                    assert_eq!(q.abs(), max, "x={x}");
+                }
+            } else {
+                assert!(
+                    (q.abs() - best).abs() <= bd + 1e-12,
+                    "x={x} q={q} best={best}"
+                );
+                if q != 0.0 {
+                    assert_eq!(q.is_sign_negative(), x.is_sign_negative());
+                }
+            }
+            x += max / 613.0; // irrational-ish step to hit odd points
+        }
+    }
+
+    #[test]
+    fn toward_zero_truncates() {
+        let f = FpFormat::E5M2;
+        assert_eq!(quantize(1.24, f, Rounding::TowardZero), 1.0);
+        assert_eq!(quantize(-1.24, f, Rounding::TowardZero), -1.0);
+        assert_eq!(quantize(1.26, f, Rounding::TowardZero), 1.25);
+    }
+
+    #[test]
+    fn stochastic_is_bracketing_and_roughly_unbiased() {
+        let f = FpFormat::E5M2;
+        let x = 1.1f32; // between 1.0 and 1.25
+        let mut sum = 0.0f64;
+        let n = 20_000u64;
+        for i in 0..n {
+            let q = quantize(x, f, Rounding::Stochastic(splitmix64(i)));
+            assert!(q == 1.0 || q == 1.25, "q={q}");
+            sum += q as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.1).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn f32_subnormal_inputs() {
+        // Tiny f32 subnormal inputs flush to zero in narrow formats…
+        let f = FpFormat::E5M2;
+        let tiny = f32::from_bits(1); // 2^-149
+        assert_eq!(quantize(tiny, f, RNE), 0.0);
+        // …and are the identity under (8,23).
+        assert_eq!(quantize(tiny, FpFormat::FP32, RNE), tiny);
+        // A wide-exponent narrow-mantissa format keeps their scale
+        // (down to its own subnormal floor 2^-129 for (8,3)).
+        let g = FpFormat::new(8, 3);
+        let x = f32::from_bits(0x0040_0000); // 2^-127, inside (8,3) range
+        let q = quantize(x, g, RNE);
+        assert_eq!(q, x, "2^-127 is exactly representable in (8,3)");
+        // below half the (8,3) subnormal floor → flushes to zero
+        let y = f32::from_bits(0x0007_0000); // ≈ 2^-130.2 < 2^-129/2…
+        assert_eq!(quantize(y, g, RNE), 0.0);
+    }
+
+    #[test]
+    fn ceil_log2() {
+        assert_eq!(ceil_log2_abs(1.0), Some(0));
+        assert_eq!(ceil_log2_abs(2.0), Some(1));
+        assert_eq!(ceil_log2_abs(3.0), Some(2));
+        assert_eq!(ceil_log2_abs(0.5), Some(-1));
+        assert_eq!(ceil_log2_abs(0.75), Some(0));
+        assert_eq!(ceil_log2_abs(-5.0), Some(3));
+        assert_eq!(ceil_log2_abs(0.0), None);
+        assert_eq!(ceil_log2_abs(f32::INFINITY), None);
+        // subnormal powers of two and non-powers
+        assert_eq!(ceil_log2_abs(f32::from_bits(1)), Some(-149));
+        // 3·2^-149: log2 = 1.585 - 149 = -147.4 → ceil = -147
+        assert_eq!(ceil_log2_abs(f32::from_bits(3)), Some(-147));
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let f = FpFormat::E4M3;
+        let out = quantize_slice(&xs, f, RNE);
+        for (&x, &o) in xs.iter().zip(&out) {
+            assert_eq!(o, quantize(x, f, RNE));
+        }
+        let mut inplace = xs.clone();
+        quantize_slice_inplace(&mut inplace, f, RNE);
+        assert_eq!(inplace, out);
+    }
+}

@@ -1,0 +1,91 @@
+//! Round-off error metrics (paper Eq. 5, Table 9).
+
+/// The paper's average relative round-off error (Eq. 5):
+///
+/// `mean_i | (grad_h[i] - grad_l[i]) / grad_h[i] |`
+///
+/// Elements where the high-precision value is exactly zero are skipped
+/// (the relative error is undefined there); non-finite low-precision
+/// values count as 100% error per element, capped, so a diverged reduction
+/// reads as a large-but-finite percentage as in Table 9.
+pub fn avg_roundoff_error(grad_h: &[f32], grad_l: &[f32]) -> f64 {
+    assert_eq!(grad_h.len(), grad_l.len());
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for (&h, &l) in grad_h.iter().zip(grad_l) {
+        if h == 0.0 || !h.is_finite() {
+            continue;
+        }
+        let rel = if l.is_finite() {
+            (((h - l) as f64) / h as f64).abs()
+        } else {
+            1.0
+        };
+        sum += rel.min(1.0);
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Maximum relative round-off error over elements (same conventions).
+pub fn max_roundoff_error(grad_h: &[f32], grad_l: &[f32]) -> f64 {
+    assert_eq!(grad_h.len(), grad_l.len());
+    let mut worst = 0.0f64;
+    for (&h, &l) in grad_h.iter().zip(grad_l) {
+        if h == 0.0 || !h.is_finite() {
+            continue;
+        }
+        let rel = if l.is_finite() {
+            (((h - l) as f64) / h as f64).abs().min(1.0)
+        } else {
+            1.0
+        };
+        worst = worst.max(rel);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_on_identical() {
+        let a = [1.0f32, -2.0, 3.5];
+        assert_eq!(avg_roundoff_error(&a, &a), 0.0);
+        assert_eq!(max_roundoff_error(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn simple_relative_error() {
+        let h = [2.0f32, 4.0];
+        let l = [1.0f32, 4.0];
+        assert!((avg_roundoff_error(&h, &l) - 0.25).abs() < 1e-12);
+        assert!((max_roundoff_error(&h, &l) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skips_zero_reference() {
+        let h = [0.0f32, 2.0];
+        let l = [5.0f32, 1.0];
+        assert!((avg_roundoff_error(&h, &l) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonfinite_low_counts_as_full_error() {
+        let h = [1.0f32, 1.0];
+        let l = [f32::INFINITY, 1.0];
+        assert!((avg_roundoff_error(&h, &l) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_capped_at_one() {
+        let h = [0.001f32];
+        let l = [100.0f32];
+        assert_eq!(avg_roundoff_error(&h, &l), 1.0);
+    }
+}

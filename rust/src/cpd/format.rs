@@ -1,0 +1,264 @@
+//! Arbitrary floating-point format descriptors (paper Table 1).
+//!
+//! A format is `(exp_bits, man_bits)` with an IEEE-754-like layout:
+//! one sign bit, `exp_bits` biased-exponent bits (bias `2^(exp_bits-1)-1`,
+//! all-ones exponent reserved for INF/NaN), `man_bits` mantissa bits, and
+//! gradual underflow (subnormals). Every such format with `exp_bits ≤ 8`
+//! and `man_bits ≤ 23` is a strict subset of IEEE FP32, which is what lets
+//! CPD emulate it bit-exactly inside `f32` storage.
+
+use std::fmt;
+
+/// A customized floating-point format `(exp_bits, man_bits)`.
+///
+/// ```
+/// use aps_cpd::cpd::FpFormat;
+/// let e5m2 = FpFormat::new(5, 2);       // paper's 8-bit (exp:5, man:2)
+/// assert_eq!(e5m2.total_bits(), 8);
+/// assert_eq!(e5m2.max_exponent(), 15);  // values up to ~2^15 (Table 1)
+/// assert_eq!(e5m2.min_subnormal_exponent(), -16); // down to 2^-16
+/// ```
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Number of exponent bits, in `[2, 8]`.
+    pub exp_bits: u8,
+    /// Number of explicit mantissa bits, in `[0, 23]`.
+    pub man_bits: u8,
+}
+
+impl FpFormat {
+    /// IEEE 754 single precision (identity quantization).
+    pub const FP32: FpFormat = FpFormat { exp_bits: 8, man_bits: 23 };
+    /// IEEE 754 half precision.
+    pub const FP16: FpFormat = FpFormat { exp_bits: 5, man_bits: 10 };
+    /// bfloat16.
+    pub const BF16: FpFormat = FpFormat { exp_bits: 8, man_bits: 7 };
+    /// The 8-bit (exp:5, man:2) format used throughout the paper (≈E5M2).
+    pub const E5M2: FpFormat = FpFormat { exp_bits: 5, man_bits: 2 };
+    /// The 8-bit (exp:4, man:3) format used throughout the paper (≈E4M3,
+    /// but with an IEEE-style INF, matching the paper's semantics).
+    pub const E4M3: FpFormat = FpFormat { exp_bits: 4, man_bits: 3 };
+    /// The 4-bit (exp:3, man:0) format of Table 4.
+    pub const E3M0: FpFormat = FpFormat { exp_bits: 3, man_bits: 0 };
+    /// The "FP16" of Wang et al. [27] (exp:6, man:9) from Table 1.
+    pub const E6M9: FpFormat = FpFormat { exp_bits: 6, man_bits: 9 };
+
+    /// Create a format, panicking on out-of-range bit counts.
+    pub const fn new(exp_bits: u8, man_bits: u8) -> Self {
+        assert!(exp_bits >= 2 && exp_bits <= 8, "exp_bits must be in [2, 8]");
+        assert!(man_bits <= 23, "man_bits must be in [0, 23]");
+        FpFormat { exp_bits, man_bits }
+    }
+
+    /// Total storage bits including the sign bit.
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.exp_bits as u32 + self.man_bits as u32
+    }
+
+    /// Exponent bias: `2^(exp_bits-1) - 1`.
+    pub const fn bias(&self) -> i32 {
+        (1i32 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent of a *normal* number (all-ones exponent
+    /// field is reserved for INF/NaN), i.e. the paper's `upper_bound_exp`
+    /// from Algorithm 1 line 1.
+    pub const fn max_exponent(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number: `1 - bias`.
+    pub const fn min_normal_exponent(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Exponent of the smallest positive subnormal: `min_normal - man_bits`
+    /// (with `man_bits = 0` there are no subnormals other than zero).
+    pub const fn min_subnormal_exponent(&self) -> i32 {
+        self.min_normal_exponent() - self.man_bits as i32
+    }
+
+    /// Largest finite representable magnitude: `(2 - 2^-man) * 2^max_exp`.
+    pub fn max_value(&self) -> f64 {
+        (2.0 - (-(self.man_bits as i32)).exp2()) * self.max_exponent().exp2()
+    }
+
+    /// Smallest positive normal magnitude: `2^min_normal_exponent`.
+    pub fn min_normal(&self) -> f64 {
+        self.min_normal_exponent().exp2()
+    }
+
+    /// Smallest positive (subnormal) magnitude: `2^min_subnormal_exponent`.
+    pub fn min_subnormal(&self) -> f64 {
+        self.min_subnormal_exponent().exp2()
+    }
+
+    /// Machine epsilon of the format: `2^-man_bits`.
+    pub fn epsilon(&self) -> f64 {
+        (-(self.man_bits as i32)).exp2()
+    }
+
+    /// True when quantizing to this format is the identity on finite `f32`.
+    pub const fn is_fp32(&self) -> bool {
+        self.exp_bits == 8 && self.man_bits == 23
+    }
+
+    /// The representable range as exponents `[min_subnormal, max]`, as the
+    /// paper's Table 1 reports it (e.g. `(5, 2)` → `[-16, 15]`).
+    pub const fn exponent_range(&self) -> (i32, i32) {
+        (self.min_subnormal_exponent(), self.max_exponent())
+    }
+
+    /// Number of distinct finite non-negative values (for exhaustive tests).
+    pub const fn finite_magnitude_count(&self) -> u32 {
+        // subnormals (incl. zero) + normals
+        let subnormals = 1u32 << self.man_bits;
+        let normals = (((1u32 << self.exp_bits) - 2) as u32) << self.man_bits;
+        subnormals + normals
+    }
+
+    /// Enumerate every finite non-negative representable value, ascending.
+    /// Useful for exhaustive round-trip tests on small formats.
+    pub fn enumerate_magnitudes(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.finite_magnitude_count() as usize);
+        let man_count = 1u32 << self.man_bits;
+        // subnormals: m * 2^(min_normal - man_bits), m in [0, 2^man)
+        for m in 0..man_count {
+            out.push((m as f64 * self.min_subnormal()) as f32);
+        }
+        // normals: (1 + m/2^man) * 2^e
+        for e in self.min_normal_exponent()..=self.max_exponent() {
+            let scale = (e as f64).exp2();
+            for m in 0..man_count {
+                out.push(((1.0 + m as f64 / man_count as f64) * scale) as f32);
+            }
+        }
+        out
+    }
+}
+
+/// `exp2` helper on i32 exponents (f64 has ample range for exp_bits ≤ 8).
+trait Exp2 {
+    fn exp2(self) -> f64;
+}
+impl Exp2 for i32 {
+    fn exp2(self) -> f64 {
+        (self as f64).exp2()
+    }
+}
+
+impl fmt::Debug for FpFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "E{}M{}", self.exp_bits, self.man_bits)
+    }
+}
+
+impl fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "({}, {}): {}bits",
+            self.exp_bits,
+            self.man_bits,
+            self.total_bits()
+        )
+    }
+}
+
+impl std::str::FromStr for FpFormat {
+    type Err = String;
+
+    /// Parse `"e5m2"`, `"E5M2"`, `"5,2"` or `"(5,2)"`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim().to_ascii_lowercase();
+        let parse2 = |a: &str, b: &str| -> Result<FpFormat, String> {
+            let e: u8 = a.trim().parse().map_err(|_| format!("bad exp bits in {s:?}"))?;
+            let m: u8 = b.trim().parse().map_err(|_| format!("bad man bits in {s:?}"))?;
+            if !(2..=8).contains(&e) || m > 23 {
+                return Err(format!("format out of range: exp {e} man {m}"));
+            }
+            Ok(FpFormat::new(e, m))
+        };
+        if let Some(rest) = t.strip_prefix('e') {
+            if let Some((e, m)) = rest.split_once('m') {
+                return parse2(e, m);
+            }
+        }
+        let t = t.trim_start_matches('(').trim_end_matches(')');
+        if let Some((e, m)) = t.split_once(',') {
+            return parse2(e, m);
+        }
+        match t.as_ref() {
+            "fp32" | "f32" => Ok(FpFormat::FP32),
+            "fp16" | "f16" => Ok(FpFormat::FP16),
+            "bf16" | "bfloat16" => Ok(FpFormat::BF16),
+            _ => Err(format!("unrecognized format {s:?} (try e5m2 or 5,2)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ranges() {
+        // Paper Table 1: representable ranges [2^min_sub, 2^max_exp].
+        assert_eq!(FpFormat::FP32.exponent_range(), (-149, 127));
+        assert_eq!(FpFormat::FP16.exponent_range(), (-24, 15));
+        assert_eq!(FpFormat::BF16.exponent_range(), (-133, 127));
+        assert_eq!(FpFormat::E6M9.exponent_range(), (-39, 31));
+        assert_eq!(FpFormat::E5M2.exponent_range(), (-16, 15));
+    }
+
+    #[test]
+    fn bias_and_bounds() {
+        let f = FpFormat::new(5, 2);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.max_exponent(), 15);
+        assert_eq!(f.min_normal_exponent(), -14);
+        assert_eq!(f.max_value(), 1.75 * (15f64).exp2());
+        assert_eq!(f.min_subnormal(), (-16f64).exp2());
+    }
+
+    #[test]
+    fn e3m0_degenerate_mantissa() {
+        let f = FpFormat::E3M0;
+        assert_eq!(f.total_bits(), 4);
+        assert_eq!(f.bias(), 3);
+        assert_eq!(f.max_exponent(), 3);
+        // No mantissa bits: only subnormal value is zero.
+        assert_eq!(f.min_subnormal_exponent(), f.min_normal_exponent());
+        assert_eq!(f.max_value(), 8.0);
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        let f = FpFormat::new(3, 1);
+        let vals = f.enumerate_magnitudes();
+        assert_eq!(vals.len(), f.finite_magnitude_count() as usize);
+        // strictly ascending
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1], "{:?}", w);
+        }
+        assert_eq!(vals[0], 0.0);
+        assert_eq!(*vals.last().unwrap() as f64, f.max_value());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["e5m2", "E4M3", "5,2", "(3, 0)", "fp16", "bf16", "fp32"] {
+            let f: FpFormat = s.parse().unwrap();
+            assert!(f.exp_bits >= 2);
+        }
+        assert!("e9m1".parse::<FpFormat>().is_err());
+        assert!("e5m24".parse::<FpFormat>().is_err());
+        assert!("garbage".parse::<FpFormat>().is_err());
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(FpFormat::E5M2.to_string(), "(5, 2): 8bits");
+        assert_eq!(format!("{:?}", FpFormat::E4M3), "E4M3");
+    }
+}

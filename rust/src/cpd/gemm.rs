@@ -1,0 +1,174 @@
+//! GEMM with customized-precision accumulators (paper §5.1, Fig 12).
+//!
+//! Existing frameworks compute a dot product in FP32 and cast *once* at the
+//! end (the "QPyTorch style" the paper criticizes in Fig 12). CPD instead
+//! quantizes each product and each partial sum, exposing the accumulator
+//! precision to the experimenter. Three accumulation strategies:
+//!
+//! * [`AccumStrategy::WideThenCast`] — FP32 dot product, single final cast
+//!   (the baseline the paper says is numerically misleading).
+//! * [`AccumStrategy::LowPrecision`] — every multiply result and running
+//!   sum is quantized (faithful emulation).
+//! * [`AccumStrategy::Kahan`] — like `LowPrecision` but with Kahan
+//!   compensation (the paper's proposed remedy).
+
+use super::accum::{KahanAccumulator, LowPrecisionAccumulator};
+use super::cast::{quantize, Rounding};
+use super::format::FpFormat;
+
+/// How dot-product accumulation is performed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccumStrategy {
+    /// FP32 accumulation, quantize only the final result (QPyTorch-style).
+    WideThenCast,
+    /// Quantize each product and each partial sum (CPD default).
+    LowPrecision,
+    /// Low-precision Kahan-compensated accumulation.
+    Kahan,
+}
+
+/// Dot product of two vectors under a custom-precision accumulator.
+///
+/// Inputs are first quantized to `fmt` (they would be stored in the custom
+/// format in a real system); the accumulation then follows `strategy`.
+pub fn dot(a: &[f32], b: &[f32], fmt: FpFormat, mode: Rounding, strategy: AccumStrategy) -> f32 {
+    assert_eq!(a.len(), b.len());
+    match strategy {
+        AccumStrategy::WideThenCast => {
+            let mut s = 0.0f32;
+            for (&x, &y) in a.iter().zip(b) {
+                let qx = quantize(x, fmt, mode);
+                let qy = quantize(y, fmt, mode);
+                s += qx * qy;
+            }
+            quantize(s, fmt, mode)
+        }
+        AccumStrategy::LowPrecision => {
+            let mut acc = LowPrecisionAccumulator::new(fmt, mode);
+            for (&x, &y) in a.iter().zip(b) {
+                let qx = quantize(x, fmt, mode);
+                let qy = quantize(y, fmt, mode);
+                acc.add(qx * qy); // add() quantizes the product first
+            }
+            acc.value()
+        }
+        AccumStrategy::Kahan => {
+            let mut acc = KahanAccumulator::new(fmt, mode);
+            for (&x, &y) in a.iter().zip(b) {
+                let qx = quantize(x, fmt, mode);
+                let qy = quantize(y, fmt, mode);
+                acc.add(qx * qy);
+            }
+            acc.value()
+        }
+    }
+}
+
+/// Row-major `m×k · k×n → m×n` GEMM with a custom-precision accumulator.
+pub fn gemm(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: FpFormat,
+    mode: Rounding,
+    strategy: AccumStrategy,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    // Gather B columns to keep the inner loop contiguous.
+    let mut col = vec![0.0f32; k];
+    for j in 0..n {
+        for (p, cv) in col.iter_mut().enumerate() {
+            *cv = b[p * n + j];
+        }
+        for i in 0..m {
+            let row = &a[i * k..(i + 1) * k];
+            c[i * n + j] = dot(row, &col, fmt, mode, strategy);
+        }
+    }
+    c
+}
+
+/// FP32 reference GEMM (row-major), for error measurement.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::error::avg_roundoff_error;
+    const RNE: Rounding = Rounding::NearestEven;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn fp32_strategies_agree_with_reference() {
+        let a = seq(6, |i| i as f32 * 0.5 - 1.0);
+        let b = seq(6, |i| 1.0 - i as f32 * 0.25);
+        let c_ref = gemm_f32(&a, &b, 2, 3, 2);
+        for s in [AccumStrategy::WideThenCast, AccumStrategy::LowPrecision, AccumStrategy::Kahan] {
+            let c = gemm(&a, &b, 2, 3, 2, FpFormat::FP32, RNE, s);
+            for (x, y) in c.iter().zip(&c_ref) {
+                assert!((x - y).abs() < 1e-5, "{s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig12_wide_cast_hides_accumulator_error() {
+        // A long dot product of small terms: the wide accumulator gets the
+        // right answer and casts once; the low-precision accumulator stalls
+        // (paper Fig 12's point — the results genuinely differ).
+        let f = FpFormat::new(4, 2);
+        let a = vec![1.0f32; 256];
+        let b = vec![0.5f32; 256];
+        let wide = dot(&a, &b, f, RNE, AccumStrategy::WideThenCast);
+        let low = dot(&a, &b, f, RNE, AccumStrategy::LowPrecision);
+        // exact = 128; wide rounds 128 into the format (may saturate to max
+        // or INF depending on range) but low stalls far earlier.
+        assert!(low < wide, "low={low} wide={wide}");
+    }
+
+    #[test]
+    fn kahan_improves_gemm_accuracy() {
+        let f = FpFormat::E4M3;
+        let m = 4;
+        let k = 128;
+        let n = 4;
+        let a = seq(m * k, |i| ((i * 2654435761) % 1000) as f32 / 1000.0 - 0.5);
+        let b = seq(k * n, |i| ((i * 40503) % 1000) as f32 / 1000.0 - 0.5);
+        let c_ref = gemm_f32(&a, &b, m, k, n);
+        let c_low = gemm(&a, &b, m, k, n, f, RNE, AccumStrategy::LowPrecision);
+        let c_kah = gemm(&a, &b, m, k, n, f, RNE, AccumStrategy::Kahan);
+        let e_low = avg_roundoff_error(&c_ref, &c_low);
+        let e_kah = avg_roundoff_error(&c_ref, &c_kah);
+        assert!(e_kah <= e_low, "kahan={e_kah} naive={e_low}");
+    }
+
+    #[test]
+    fn gemm_shapes() {
+        let a = vec![1.0; 3 * 5];
+        let b = vec![1.0; 5 * 2];
+        let c = gemm(&a, &b, 3, 5, 2, FpFormat::FP32, RNE, AccumStrategy::WideThenCast);
+        assert_eq!(c.len(), 6);
+        assert!(c.iter().all(|&x| x == 5.0));
+    }
+}

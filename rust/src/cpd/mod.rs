@@ -1,0 +1,31 @@
+//! CPD — the Customized-Precision Deep-learning substrate (paper §5).
+//!
+//! Everything the paper's CPD system provides, in Rust:
+//!
+//! * [`FpFormat`] — an arbitrary floating-point format with
+//!   `exp_bits ∈ [2, 8]` and `man_bits ∈ [0, 23]`, IEEE-754-like layout
+//!   (sign / biased exponent / mantissa, all-ones exponent reserved for
+//!   `INF`/`NaN`, subnormals supported).
+//! * [`cast`] — bit-exact FP32 → custom → FP32 quantization with
+//!   round-to-nearest-even (the paper's choice, §4), plus toward-zero and
+//!   stochastic rounding for comparison studies.
+//! * [`accum`] — low-precision accumulators (every intermediate value is
+//!   re-quantized, the behaviour in paper Fig 12) and the Kahan-compensated
+//!   variant (paper §5.1.1).
+//! * [`gemm`] — GEMM with a customized-precision accumulator, both naive
+//!   and Kahan (paper §5.1, Fig 12).
+//! * [`error`] — the average relative round-off error of Eq. 5.
+
+pub mod accum;
+pub mod cast;
+pub mod error;
+pub mod format;
+pub mod gemm;
+
+pub use accum::{KahanAccumulator, LowPrecisionAccumulator};
+pub use cast::{
+    ceil_log2_abs, quantize, quantize_shifted, quantize_shifted_slice, quantize_slice,
+    quantize_slice_inplace, quantize_slice_into, Rounding,
+};
+pub use error::{avg_roundoff_error, max_roundoff_error};
+pub use format::FpFormat;

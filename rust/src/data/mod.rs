@@ -1,0 +1,77 @@
+//! Deterministic synthetic datasets (DESIGN.md §3 substitutions).
+//!
+//! The paper trains on CIFAR-10, ImageNet and cityscapes — none available
+//! here — so each workload is replaced by a deterministic synthetic
+//! generator of the same tensor shapes whose gradients exhibit the
+//! property APS exploits: per-layer gradient scales spread over many
+//! orders of magnitude (verified by the Fig 1/2 reproductions).
+//!
+//! * [`synthetic`] — Gaussian-mixture image classification (CIFAR-like).
+//! * [`segmentation`] — procedural shape masks (cityscapes stand-in).
+//! * [`corpus`] — a synthetic token stream with Zipfian unigram statistics
+//!   and local structure, for the transformer e2e driver.
+//! * [`rng`] — the SplitMix64/xoshiro PRNG all generators share, so every
+//!   experiment is bit-reproducible from its seed.
+
+pub mod corpus;
+pub mod rng;
+pub mod segmentation;
+pub mod synthetic;
+
+pub use rng::Rng;
+
+/// A classification minibatch: `images` is NHWC flattened, `labels` is
+/// one `u32` class id per example.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub batch_size: usize,
+}
+
+/// A segmentation minibatch: per-pixel integer labels.
+#[derive(Clone, Debug)]
+pub struct SegBatch {
+    pub images: Vec<f32>,
+    /// `batch × h × w` class ids.
+    pub masks: Vec<u32>,
+    pub batch_size: usize,
+}
+
+/// A language-model minibatch: token ids and next-token targets.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub tokens: Vec<u32>,
+    pub targets: Vec<u32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+/// Shard `global_batch` examples across `world` workers; worker `w` gets
+/// the `w`-th contiguous slice. Panics unless evenly divisible (the
+/// paper's experiments all use divisible batch sizes).
+pub fn shard_range(global_batch: usize, world: usize, w: usize) -> std::ops::Range<usize> {
+    assert!(global_batch % world == 0, "batch {global_batch} not divisible by world {world}");
+    let per = global_batch / world;
+    w * per..(w + 1) * per
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_the_batch() {
+        let world = 8;
+        let covered: Vec<usize> =
+            (0..world).flat_map(|w| shard_range(4096, world, w)).collect();
+        assert_eq!(covered.len(), 4096);
+        assert_eq!(covered, (0..4096).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_batch_panics() {
+        let _ = shard_range(10, 3, 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Deterministic PRNG shared by every data generator and initializer.
+//!
+//! xoshiro256++ seeded via SplitMix64 — fast, well-distributed, and
+//! trivially reproducible (no global state, no platform dependence). All
+//! experiment results in EXPERIMENTS.md are keyed by these seeds.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (any u64 works, including 0).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for per-worker / per-epoch splits).
+    pub fn fork(&self, stream: u64) -> Rng {
+        Rng::new(self.s[0] ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-9 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill with N(0, std²).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for o in out.iter_mut() {
+            *o = self.normal() * std;
+        }
+    }
+
+    /// Zipf-like sample over [0, n): P(k) ∝ 1/(k+1).
+    pub fn zipf(&mut self, n: usize) -> usize {
+        // Inverse-CDF on the harmonic weights via rejection-free cumsum
+        // would be O(n); use the standard approximation instead:
+        // k = floor(exp(u * ln(n+1))) - 1 gives ≈ 1/(k+1) mass.
+        let u = self.uniform().max(1e-7);
+        let k = ((u * ((n as f32 + 1.0).ln())).exp() - 1.0) as usize;
+        k.min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent_streams() {
+        let base = Rng::new(7);
+        let mut f1 = base.fork(1);
+        let mut f2 = base.fork(2);
+        let v1: Vec<u64> = (0..16).map(|_| f1.next_u64()).collect();
+        let v2: Vec<u64> = (0..16).map(|_| f2.next_u64()).collect();
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 40_000;
+        let (mut m1, mut m2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.03, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.05, "var={m2}");
+    }
+
+    #[test]
+    fn zipf_is_head_heavy() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 16];
+        for _ in 0..10_000 {
+            counts[r.zipf(16)] += 1;
+        }
+        assert!(counts[0] > counts[8], "{counts:?}");
+        assert!(counts.iter().sum::<usize>() == 10_000);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(4);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

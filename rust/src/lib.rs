@@ -1,0 +1,39 @@
+//! # aps-cpd — Auto-Precision Scaling for Distributed Deep Learning
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Auto-Precision Scaling for Distributed Deep Learning"* (Han, Demmel,
+//! Si, You). The crate contains:
+//!
+//! * [`cpd`] — the **C**ustomized-**P**recision **D**eep-learning numeric
+//!   substrate: arbitrary `(exp_bits, man_bits)` floating-point formats,
+//!   bit-exact round-to-nearest-even casts, low-precision accumulation,
+//!   Kahan summation, and low-precision GEMM (paper §5).
+//! * [`collectives`] — a simulated N-worker cluster with ring and
+//!   hierarchical all-reduce whose reduction *order* and operand precision
+//!   are faithfully emulated (paper §4.2, Tables 8–9).
+//! * [`aps`] — Algorithm 1: layer-wise automatic power-of-two scaling for
+//!   low-precision gradient communication, plus the loss-scaling and
+//!   no-scaling baselines (paper §3).
+//! * [`optim`] — momentum SGD, Nesterov, LARS, LR schedules (paper §4.1).
+//! * [`data`] — deterministic synthetic datasets standing in for CIFAR-10,
+//!   cityscapes and a token corpus (see DESIGN.md §3 substitutions).
+//! * [`runtime`] — PJRT loader/executor for the JAX-lowered HLO artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs on the training path.
+//! * [`coordinator`] — the distributed-training driver tying it together.
+//! * [`perfmodel`] — the α–β communication cost model (paper Fig 11).
+//! * [`metrics`] — accuracy / mIoU / histograms / round-off error (Eq. 5).
+
+pub mod aps;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod cpd;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,224 @@
+//! `aps` — the launcher CLI for the APS/CPD system.
+//!
+//! Subcommands:
+//! * `train --config <toml>` — run a distributed-training experiment.
+//! * `formats [names…]` — print Table 1 (representable ranges).
+//! * `comm [--world N]` — price gradient sync with the α–β model (Fig 11).
+//! * `roundoff [--world N --format F]` — Table 9 round-off sweep.
+//! * `gradshow --model M` — gradient exponent histograms (Figs 1–2).
+
+use anyhow::Result;
+use aps_cpd::aps::{SyncMethod, SyncOptions};
+use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
+use aps_cpd::config::ExperimentConfig;
+use aps_cpd::coordinator::{Trainer, TrainerSetup};
+use aps_cpd::cpd::{avg_roundoff_error, FpFormat};
+use aps_cpd::data::Rng;
+use aps_cpd::metrics::ExpHistogram;
+use aps_cpd::perfmodel::{fig11_table, NetworkModel};
+use aps_cpd::runtime::Engine;
+use aps_cpd::util::cli::Args;
+use aps_cpd::util::table::Table;
+
+const USAGE: &str = "\
+aps — Auto-Precision Scaling for distributed deep learning
+
+USAGE:
+  aps train    --config <file.toml> [--artifacts DIR] [--log-every N]
+  aps formats  [e5m2 e4m3 fp16 …]
+  aps comm     [--world N]
+  aps roundoff [--world N] [--format e5m2] [--elements N] [--seed S]
+  aps gradshow --model NAME [--artifacts DIR] [--world N] [--warm-steps N]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => train(&args),
+        Some("formats") => cmd_formats(&args.positional),
+        Some("comm") => cmd_comm(args.get_usize("world", 32)?),
+        Some("roundoff") => cmd_roundoff(&args),
+        Some("gradshow") => cmd_gradshow(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_path(args.require("config")?)?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let engine = Engine::cpu()?;
+    eprintln!("PJRT platform: {}", engine.platform());
+    let model = engine.load_model(&artifacts, &cfg.model)?;
+    eprintln!(
+        "model {} — {} params in {} tensors, local batch {}",
+        model.spec.name,
+        model.spec.total_params(),
+        model.spec.params.len(),
+        model.spec.batch
+    );
+
+    let sync = SyncOptions::new(cfg.method)
+        .with_topology(cfg.topology)
+        .with_kahan(cfg.kahan)
+        .with_fp32_last_layer(cfg.fp32_last_layer);
+
+    let mut setup = TrainerSetup::new(cfg.world_size, sync);
+    setup.hybrid = cfg.hybrid;
+    setup.optimizer = cfg.optimizer;
+    setup.schedule = cfg.schedule.clone();
+    setup.epochs = cfg.epochs;
+    setup.steps_per_epoch = cfg.steps_per_epoch;
+    setup.eval_examples = cfg.eval_examples;
+    setup.track_roundoff = cfg.track_roundoff;
+    setup.seed = cfg.seed;
+    setup.log_every = args.get_usize("log-every", 10)?;
+
+    let mut trainer = Trainer::new(&model, setup)?;
+    let outcome = trainer.train(cfg.name.clone())?;
+
+    println!("== {} ==", outcome.name);
+    println!(
+        "final {} = {:.4}",
+        trainer.workload().metric_name(),
+        outcome.final_metric
+    );
+    if let Some(macc) = outcome.final_macc {
+        println!("final mAcc = {macc:.4}");
+    }
+    println!("steps = {}, wall = {:.1}s", outcome.steps_run, outcome.wall_secs);
+    println!(
+        "comm/worker: payload {} KiB, exponent-phase {} B{}",
+        outcome.comm_payload_bytes / 1024,
+        outcome.comm_exponent_bytes,
+        if outcome.diverged { "  [DIVERGED]" } else { "" }
+    );
+    if !outcome.roundoff.points.is_empty() {
+        println!("mean Eq.5 round-off = {:.4}", outcome.mean_roundoff());
+    }
+    Ok(())
+}
+
+fn cmd_formats(names: &[String]) -> Result<()> {
+    let list: Vec<FpFormat> = if names.is_empty() {
+        vec![
+            FpFormat::FP32,
+            FpFormat::FP16,
+            FpFormat::BF16,
+            FpFormat::E6M9,
+            FpFormat::E5M2,
+            FpFormat::E4M3,
+            FpFormat::E3M0,
+        ]
+    } else {
+        names
+            .iter()
+            .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
+            .collect::<Result<_>>()?
+    };
+    let mut t = Table::new(&["format", "exp bits", "man bits", "range"]);
+    for f in list {
+        let (lo, hi) = f.exponent_range();
+        t.row(&[
+            f.to_string(),
+            f.exp_bits.to_string(),
+            f.man_bits.to_string(),
+            format!("[2^{lo}, 2^{hi}]"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_comm(world: usize) -> Result<()> {
+    let rows = fig11_table(&NetworkModel::v100_nccl(), world);
+    let mut t = Table::new(&["layer", "fp16 ms", "exp ms", "payload ms", "aps ms", "speedup"]);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.3}", r.fp16_ms),
+            format!("{:.4}", r.aps_exp_phase_ms),
+            format!("{:.3}", r.aps_payload_ms),
+            format!("{:.3}", r.aps_total_ms),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_roundoff(args: &Args) -> Result<()> {
+    let world = args.get_usize("world", 256)?;
+    let fmt: FpFormat = args
+        .get("format", "e5m2")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let elements = args.get_usize("elements", 4096)?;
+    let seed = args.get_u64("seed", 42)?;
+
+    let mut rng = Rng::new(seed);
+    let contribs: Vec<Vec<f32>> = (0..world)
+        .map(|_| (0..elements).map(|_| rng.normal() * 0.01).collect())
+        .collect();
+    let exact: Vec<f32> = (0..elements)
+        .map(|i| contribs.iter().map(|c| c[i] as f64).sum::<f64>() as f32)
+        .collect();
+    let cluster = SimCluster::new(world);
+    let mut t = Table::new(&["topology", "Eq.5 round-off"]);
+    let mut groups: Vec<usize> = vec![4, 8, 16, 32, 64];
+    groups.retain(|g| world % g == 0 && *g <= world);
+    for g in groups {
+        let (out, _) = cluster.all_reduce_sum(
+            &contribs,
+            Topology::Hierarchical { group_size: g },
+            ReduceOptions::low_precision(fmt),
+        );
+        t.row(&[
+            format!("hierarchical k={g}"),
+            format!("{:.2}%", 100.0 * avg_roundoff_error(&exact, &out)),
+        ]);
+    }
+    let (out, _) =
+        cluster.all_reduce_sum(&contribs, Topology::Ring, ReduceOptions::low_precision(fmt));
+    t.row(&[
+        format!("ring ({world})"),
+        format!("{:.2}%", 100.0 * avg_roundoff_error(&exact, &out)),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_gradshow(args: &Args) -> Result<()> {
+    let model_name = args.require("model")?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let world = args.get_usize("world", 8)?;
+    let warm_steps = args.get_usize("warm-steps", 5)?;
+
+    let engine = Engine::cpu()?;
+    let model = engine.load_model(&artifacts, &model_name)?;
+    let sync = SyncOptions::new(SyncMethod::Fp32);
+    let mut setup = TrainerSetup::new(world, sync);
+    setup.epochs = 1;
+    setup.steps_per_epoch = warm_steps;
+    let mut trainer = Trainer::new(&model, setup)?;
+    // A few warm steps so gradients are not at-init artifacts.
+    let mut out = Default::default();
+    for s in 0..warm_steps {
+        trainer.step(0, s, &mut out)?;
+    }
+    let grads = trainer.snapshot_gradients(warm_steps)?;
+    for (l, g) in grads.iter().enumerate() {
+        let mut h = ExpHistogram::gradient_window();
+        h.add_all(g);
+        println!(
+            "--- layer {l} ({}, {} elems, p50 2^{}) ---",
+            model.spec.params[l].name,
+            g.len(),
+            h.percentile_exp(50.0)
+        );
+        print!("{}", h.ascii(40));
+    }
+    Ok(())
+}

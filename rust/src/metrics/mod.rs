@@ -1,0 +1,358 @@
+//! Evaluation metrics and distribution tooling.
+//!
+//! * classification accuracy (Tables 4–8)
+//! * mIoU / mAcc for segmentation (Table 3)
+//! * exponent histograms of gradient values (Figs 1, 2, 5)
+//! * under/overflow fractions for a format + scale (Fig 5)
+//! * a small loss-curve recorder used by every training run.
+
+use crate::cpd::FpFormat;
+
+/// Top-1 accuracy given per-example logits (`n × classes`) and labels.
+pub fn top1_accuracy(logits: &[f32], labels: &[u32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for (i, &lab) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best as u32 == lab {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+/// Segmentation confusion-matrix metrics (paper Table 3's mIoU / mAcc).
+#[derive(Clone, Debug)]
+pub struct SegmentationMetrics {
+    classes: usize,
+    /// `confusion[t * classes + p]` = pixels with true `t` predicted `p`.
+    confusion: Vec<u64>,
+}
+
+impl SegmentationMetrics {
+    pub fn new(classes: usize) -> Self {
+        SegmentationMetrics { classes, confusion: vec![0; classes * classes] }
+    }
+
+    /// Accumulate per-pixel logits (`pixels × classes`) against a mask.
+    pub fn update_from_logits(&mut self, logits: &[f32], mask: &[u32]) {
+        assert_eq!(logits.len(), mask.len() * self.classes);
+        for (i, &t) in mask.iter().enumerate() {
+            let row = &logits[i * self.classes..(i + 1) * self.classes];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            self.confusion[t as usize * self.classes + best] += 1;
+        }
+    }
+
+    /// Accumulate hard predictions against a mask.
+    pub fn update(&mut self, pred: &[u32], mask: &[u32]) {
+        assert_eq!(pred.len(), mask.len());
+        for (&p, &t) in pred.iter().zip(mask) {
+            self.confusion[t as usize * self.classes + p as usize] += 1;
+        }
+    }
+
+    /// Mean intersection-over-union over classes present in the reference.
+    pub fn miou(&self) -> f64 {
+        let c = self.classes;
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for k in 0..c {
+            let tp = self.confusion[k * c + k];
+            let fp: u64 = (0..c).filter(|&t| t != k).map(|t| self.confusion[t * c + k]).sum();
+            let fn_: u64 = (0..c).filter(|&p| p != k).map(|p| self.confusion[k * c + p]).sum();
+            let denom = tp + fp + fn_;
+            if tp + fn_ == 0 {
+                continue; // class absent from reference
+            }
+            sum += tp as f64 / denom.max(1) as f64;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Mean per-class pixel accuracy (paper's mAcc).
+    pub fn macc(&self) -> f64 {
+        let c = self.classes;
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for k in 0..c {
+            let tp = self.confusion[k * c + k];
+            let total: u64 = (0..c).map(|p| self.confusion[k * c + p]).sum();
+            if total == 0 {
+                continue;
+            }
+            sum += tp as f64 / total as f64;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+/// Histogram of binary exponents (`floor(log2 |x|)`) — the x-axis of the
+/// paper's Figs 1, 2 and 5 gradient-distribution plots.
+#[derive(Clone, Debug)]
+pub struct ExpHistogram {
+    /// Exponent of the first bucket (inclusive).
+    pub min_exp: i32,
+    /// Bucket `i` counts values with exponent `min_exp + i`.
+    pub counts: Vec<u64>,
+    /// Exact zeros (no exponent).
+    pub zeros: u64,
+    /// Values below `min_exp` / at-or-above `min_exp + counts.len()`.
+    pub below: u64,
+    pub above: u64,
+}
+
+impl ExpHistogram {
+    pub fn new(min_exp: i32, max_exp: i32) -> Self {
+        assert!(max_exp > min_exp);
+        ExpHistogram {
+            min_exp,
+            counts: vec![0; (max_exp - min_exp) as usize],
+            zeros: 0,
+            below: 0,
+            above: 0,
+        }
+    }
+
+    /// Standard gradient window used by the figure reproductions.
+    pub fn gradient_window() -> Self {
+        Self::new(-40, 10)
+    }
+
+    pub fn add(&mut self, x: f32) {
+        if x == 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        if !x.is_finite() {
+            self.above += 1;
+            return;
+        }
+        let e = x.abs().log2().floor() as i32;
+        let idx = e - self.min_exp;
+        if idx < 0 {
+            self.below += 1;
+        } else if idx as usize >= self.counts.len() {
+            self.above += 1;
+        } else {
+            self.counts[idx as usize] += 1;
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.zeros + self.below + self.above
+    }
+
+    /// Fraction of (non-zero) mass whose exponent is below `e`.
+    pub fn frac_below(&self, e: i32) -> f64 {
+        let nz: u64 = self.counts.iter().sum::<u64>() + self.below + self.above;
+        if nz == 0 {
+            return 0.0;
+        }
+        let mut c = self.below;
+        for (i, &v) in self.counts.iter().enumerate() {
+            if self.min_exp + (i as i32) < e {
+                c += v;
+            }
+        }
+        c as f64 / nz as f64
+    }
+
+    /// Percentile exponent (0..=100) of the non-zero mass.
+    pub fn percentile_exp(&self, pct: f64) -> i32 {
+        let nz: u64 = self.counts.iter().sum::<u64>() + self.below + self.above;
+        let target = (nz as f64 * pct / 100.0) as u64;
+        let mut acc = self.below;
+        if acc >= target {
+            return self.min_exp - 1;
+        }
+        for (i, &v) in self.counts.iter().enumerate() {
+            acc += v;
+            if acc >= target {
+                return self.min_exp + i as i32;
+            }
+        }
+        self.min_exp + self.counts.len() as i32
+    }
+
+    /// Render an ASCII bar chart (benches print these as the "figures").
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let e = self.min_exp + i as i32;
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).ceil() as usize);
+            out.push_str(&format!("2^{e:>4} | {bar} {c}\n"));
+        }
+        out
+    }
+}
+
+/// Fractions of a sample that would underflow / overflow in `fmt` after
+/// scaling by `2^factor_exp` (paper Fig 5's curves).
+pub fn under_overflow_fracs(xs: &[f32], fmt: FpFormat, factor_exp: i32) -> (f64, f64) {
+    let lo = fmt.min_subnormal() / 2.0; // RNE cutoff to zero
+    let hi = fmt.max_value();
+    let scale = (factor_exp as f64).exp2();
+    let mut under = 0usize;
+    let mut over = 0usize;
+    let mut nonzero = 0usize;
+    for &x in xs {
+        if x == 0.0 {
+            continue;
+        }
+        nonzero += 1;
+        let v = (x as f64).abs() * scale;
+        if v < lo {
+            under += 1;
+        } else if v > hi {
+            over += 1;
+        }
+    }
+    if nonzero == 0 {
+        (0.0, 0.0)
+    } else {
+        (under as f64 / nonzero as f64, over as f64 / nonzero as f64)
+    }
+}
+
+/// Rolling record of scalar series (loss curves etc.) for EXPERIMENTS.md.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+    /// Mean of the final `k` values (smoothed endpoint for tables).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.points.len();
+        let s = &self.points[n.saturating_sub(k)..];
+        s.iter().map(|p| p.1).sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        // 2 classes; logits rows: [0.9, 0.1] → 0, [0.2, 0.8] → 1
+        let logits = vec![0.9, 0.1, 0.2, 0.8];
+        assert_eq!(top1_accuracy(&logits, &[0, 1], 2), 1.0);
+        assert_eq!(top1_accuracy(&logits, &[1, 1], 2), 0.5);
+    }
+
+    #[test]
+    fn miou_perfect_and_degenerate() {
+        let mut m = SegmentationMetrics::new(3);
+        m.update(&[0, 1, 2, 1], &[0, 1, 2, 1]);
+        assert!((m.miou() - 1.0).abs() < 1e-12);
+        assert!((m.macc() - 1.0).abs() < 1e-12);
+
+        let mut w = SegmentationMetrics::new(3);
+        w.update(&[1, 1, 1, 1], &[0, 0, 0, 0]);
+        assert_eq!(w.miou(), 0.0);
+    }
+
+    #[test]
+    fn miou_half_overlap() {
+        let mut m = SegmentationMetrics::new(2);
+        // class 1: true {a,b}, predicted correctly on a only; class 0 ok.
+        m.update(&[1, 0, 0], &[1, 1, 0]);
+        // IoU(1) = 1/2, IoU(0) = 1/2 → mIoU = 0.5
+        assert!((m.miou() - 0.5).abs() < 1e-9, "{}", m.miou());
+    }
+
+    #[test]
+    fn exp_histogram() {
+        let mut h = ExpHistogram::new(-4, 4);
+        h.add_all(&[1.0, 1.5, 0.25, 0.0, 1e-9, 1e9]);
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.below, 1);
+        assert_eq!(h.above, 1);
+        assert_eq!(h.counts[(0 - h.min_exp) as usize], 2); // 1.0 and 1.5
+        assert_eq!(h.counts[(-2 - h.min_exp) as usize], 1); // 0.25
+        assert_eq!(h.total(), 6);
+        assert!(!h.ascii(20).is_empty());
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut h = ExpHistogram::new(-8, 8);
+        for i in 0..100 {
+            h.add(2f32.powi(-(i % 8)));
+        }
+        let p50 = h.percentile_exp(50.0);
+        assert!((-8..=0).contains(&p50));
+        assert!(h.percentile_exp(100.0) >= p50);
+    }
+
+    #[test]
+    fn fig5_fracs_move_with_scale() {
+        let fmt = FpFormat::E5M2;
+        let xs: Vec<f32> = (1..1000).map(|i| i as f32 * 1e-7).collect();
+        let (u0, o0) = under_overflow_fracs(&xs, fmt, 0);
+        let (u1, o1) = under_overflow_fracs(&xs, fmt, 20);
+        assert!(u1 < u0, "scaling up reduces underflow");
+        assert!(o1 >= o0);
+        let (u2, _) = under_overflow_fracs(&xs, fmt, 60);
+        assert_eq!(u2, 0.0);
+    }
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::new("loss");
+        for i in 0..10 {
+            s.push(i as f64, i as f64);
+        }
+        assert_eq!(s.tail_mean(2), 8.5);
+        assert_eq!(s.last(), Some(9.0));
+    }
+}

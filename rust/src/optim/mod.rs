@@ -1,0 +1,213 @@
+//! Optimizers and LR schedules used by the paper's experiments (§4.1).
+//!
+//! * [`Sgd`] — momentum SGD (ResNet18 recipe: m=0.9, wd=1e-4) and
+//!   Nesterov momentum (DavidNet recipe: m=0.9, wd=2.56e-1).
+//! * [`Lars`] — layer-wise adaptive rate scaling (You et al. [30]),
+//!   the §4.1 LARS study (Table 5, Fig 9).
+//! * [`schedule`] — warmup + step decay (ResNet18), linear up/down
+//!   (DavidNet), and the ImageNet 90-epoch recipe (ResNet50).
+
+pub mod schedule;
+
+pub use schedule::LrSchedule;
+
+
+/// One model parameter tensor with its optimizer state.
+#[derive(Clone, Debug)]
+pub struct ParamState {
+    /// Momentum buffer, same length as the parameter.
+    pub momentum: Vec<f32>,
+}
+
+/// Optimizer configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerKind {
+    /// Momentum SGD: `v = m·v + g + wd·w ; w -= lr·v`.
+    Sgd { momentum: f32, weight_decay: f32, nesterov: bool },
+    /// LARS: layer-wise trust ratio `η·‖w‖/(‖g‖ + wd·‖w‖)` scales the
+    /// local LR before the momentum update (You et al. [30]).
+    Lars { momentum: f32, weight_decay: f32, eta: f32, epsilon: f32 },
+}
+
+impl OptimizerKind {
+    /// Paper's ResNet18/CIFAR recipe (§4.1).
+    pub fn resnet18_recipe() -> Self {
+        OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false }
+    }
+    /// Paper's DavidNet/CIFAR recipe (§4.1): Nesterov, wd γ=0.256.
+    pub fn davidnet_recipe() -> Self {
+        OptimizerKind::Sgd { momentum: 0.9, weight_decay: 0.256, nesterov: true }
+    }
+    /// LARS recipe for the Table 5 study.
+    pub fn lars_recipe() -> Self {
+        OptimizerKind::Lars { momentum: 0.9, weight_decay: 1e-4, eta: 0.001, epsilon: 1e-9 }
+    }
+}
+
+/// A full optimizer over a list of parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    states: Vec<ParamState>,
+}
+
+impl Optimizer {
+    /// Create state for parameters with the given lengths.
+    pub fn new(kind: OptimizerKind, param_lens: &[usize]) -> Self {
+        let states = param_lens
+            .iter()
+            .map(|&n| ParamState { momentum: vec![0.0; n] })
+            .collect();
+        Optimizer { kind, states }
+    }
+
+    /// Apply one update step in place. `params[l]` and `grads[l]` are the
+    /// layer-`l` tensors; `lr` comes from the schedule.
+    pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.states.len());
+        match self.kind {
+            OptimizerKind::Sgd { momentum, weight_decay, nesterov } => {
+                for ((w, g), st) in params.iter_mut().zip(grads).zip(&mut self.states) {
+                    sgd_update(w, g, &mut st.momentum, lr, momentum, weight_decay, nesterov);
+                }
+            }
+            OptimizerKind::Lars { momentum, weight_decay, eta, epsilon } => {
+                for ((w, g), st) in params.iter_mut().zip(grads).zip(&mut self.states) {
+                    lars_update(w, g, &mut st.momentum, lr, momentum, weight_decay, eta, epsilon);
+                }
+            }
+        }
+    }
+
+    /// The LARS trust ratio for one layer (exposed for the Table 5 study:
+    /// LARS's sensitivity to low-precision gradients acts through this).
+    pub fn lars_trust_ratio(w: &[f32], g: &[f32], weight_decay: f32, eta: f32, eps: f32) -> f32 {
+        let wn = l2_norm(w);
+        let gn = l2_norm(g);
+        if wn == 0.0 || gn == 0.0 {
+            1.0
+        } else {
+            eta * wn / (gn + weight_decay * wn + eps)
+        }
+    }
+}
+
+fn sgd_update(
+    w: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    lr: f32,
+    m: f32,
+    wd: f32,
+    nesterov: bool,
+) {
+    for i in 0..w.len() {
+        let grad = g[i] + wd * w[i];
+        v[i] = m * v[i] + grad;
+        let upd = if nesterov { grad + m * v[i] } else { v[i] };
+        w[i] -= lr * upd;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lars_update(
+    w: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    lr: f32,
+    m: f32,
+    wd: f32,
+    eta: f32,
+    eps: f32,
+) {
+    let trust = Optimizer::lars_trust_ratio(w, g, wd, eta, eps);
+    let local_lr = lr * trust;
+    for i in 0..w.len() {
+        let grad = g[i] + wd * w[i];
+        v[i] = m * v[i] + local_lr * grad;
+        w[i] -= v[i];
+    }
+}
+
+/// Euclidean norm with f64 accumulation.
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_plain_descends_quadratic() {
+        // f(w) = 0.5 w², grad = w; GD with momentum must converge to 0.
+        let mut opt = Optimizer::new(
+            OptimizerKind::Sgd { momentum: 0.9, weight_decay: 0.0, nesterov: false },
+            &[1],
+        );
+        let mut w = vec![vec![10.0f32]];
+        for _ in 0..200 {
+            let g = vec![vec![w[0][0]]];
+            opt.step(&mut w, &g, 0.05);
+        }
+        assert!(w[0][0].abs() < 1e-3, "w={}", w[0][0]);
+    }
+
+    #[test]
+    fn nesterov_differs_from_heavy_ball() {
+        let mk = |nesterov| {
+            let mut opt = Optimizer::new(
+                OptimizerKind::Sgd { momentum: 0.9, weight_decay: 0.0, nesterov },
+                &[1],
+            );
+            let mut w = vec![vec![1.0f32]];
+            for _ in 0..3 {
+                let g = vec![vec![w[0][0]]];
+                opt.step(&mut w, &g, 0.1);
+            }
+            w[0][0]
+        };
+        assert_ne!(mk(true), mk(false));
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut opt = Optimizer::new(
+            OptimizerKind::Sgd { momentum: 0.0, weight_decay: 0.1, nesterov: false },
+            &[2],
+        );
+        let mut w = vec![vec![1.0f32, -1.0]];
+        let g = vec![vec![0.0f32, 0.0]];
+        opt.step(&mut w, &g, 1.0);
+        assert!(w[0][0] < 1.0 && w[0][1] > -1.0);
+    }
+
+    #[test]
+    fn lars_trust_ratio_scaling() {
+        // Gradient 10× larger norm → trust ratio 10× smaller (approx).
+        let w = vec![1.0f32; 100];
+        let g1 = vec![0.1f32; 100];
+        let g2 = vec![1.0f32; 100];
+        let t1 = Optimizer::lars_trust_ratio(&w, &g1, 0.0, 0.001, 0.0);
+        let t2 = Optimizer::lars_trust_ratio(&w, &g2, 0.0, 0.001, 0.0);
+        assert!((t1 / t2 - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lars_converges_quadratic() {
+        let mut opt = Optimizer::new(OptimizerKind::lars_recipe(), &[4]);
+        let mut w = vec![vec![5.0f32, -3.0, 2.0, 1.0]];
+        for _ in 0..3000 {
+            let g = vec![w[0].clone()];
+            opt.step(&mut w, &g, 10.0);
+        }
+        assert!(l2_norm(&w[0]) < 0.5, "‖w‖={}", l2_norm(&w[0]));
+    }
+
+    #[test]
+    fn zero_grad_zero_norm_guard() {
+        let t = Optimizer::lars_trust_ratio(&[0.0], &[0.0], 0.1, 0.001, 1e-9);
+        assert_eq!(t, 1.0);
+    }
+}

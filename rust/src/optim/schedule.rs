@@ -1,0 +1,114 @@
+//! Learning-rate schedules from the paper's recipes (§4.1–§4.2).
+
+
+/// A learning-rate schedule evaluated per epoch (fractional epochs allowed
+/// so warmup can be per-step).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Constant LR.
+    Constant { lr: f32 },
+    /// Linear warmup from `warmup_from` to `peak` over `warmup_epochs`,
+    /// then ×`decay_factor` at each epoch in `decay_at` (ResNet18 recipe:
+    /// warmup 0.1→1.6 over 5 epochs, ×0.1 at 40 and 80).
+    WarmupStep {
+        warmup_from: f32,
+        peak: f32,
+        warmup_epochs: f32,
+        decay_at: Vec<f32>,
+        decay_factor: f32,
+    },
+    /// Linear ramp 0→`peak` over `up_epochs`, hold, then linear down to 0
+    /// over the final `down_epochs` of `total_epochs` (DavidNet recipe:
+    /// up 5 epochs to 0.4, down over the last 20).
+    Triangular {
+        peak: f32,
+        up_epochs: f32,
+        down_epochs: f32,
+        total_epochs: f32,
+    },
+}
+
+impl LrSchedule {
+    /// Paper's ResNet18/CIFAR recipe.
+    pub fn resnet18_recipe() -> Self {
+        LrSchedule::WarmupStep {
+            warmup_from: 0.1,
+            peak: 1.6,
+            warmup_epochs: 5.0,
+            decay_at: vec![40.0, 80.0],
+            decay_factor: 0.1,
+        }
+    }
+
+    /// Paper's DavidNet/CIFAR recipe (§4.1): 0→0.4 over 5 epochs, then
+    /// linearly to zero over the last 20 of 30 epochs.
+    pub fn davidnet_recipe(total_epochs: f32) -> Self {
+        LrSchedule::Triangular {
+            peak: 0.4,
+            up_epochs: 5.0,
+            down_epochs: 20.0_f32.min(total_epochs - 5.0),
+            total_epochs,
+        }
+    }
+
+    /// LR at a (fractional) epoch.
+    pub fn at(&self, epoch: f32) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::WarmupStep { warmup_from, peak, warmup_epochs, decay_at, decay_factor } => {
+                if epoch < *warmup_epochs && *warmup_epochs > 0.0 {
+                    warmup_from + (peak - warmup_from) * (epoch / warmup_epochs)
+                } else {
+                    let decays = decay_at.iter().filter(|&&e| epoch >= e).count() as i32;
+                    peak * decay_factor.powi(decays)
+                }
+            }
+            LrSchedule::Triangular { peak, up_epochs, down_epochs, total_epochs } => {
+                if epoch < *up_epochs && *up_epochs > 0.0 {
+                    peak * (epoch / up_epochs)
+                } else {
+                    let down_start = total_epochs - down_epochs;
+                    if epoch >= down_start && *down_epochs > 0.0 {
+                        (peak * (1.0 - (epoch - down_start) / down_epochs)).max(0.0)
+                    } else {
+                        *peak
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_step_shape() {
+        let s = LrSchedule::resnet18_recipe();
+        assert!((s.at(0.0) - 0.1).abs() < 1e-6);
+        assert!((s.at(2.5) - 0.85).abs() < 1e-6); // halfway up
+        assert!((s.at(5.0) - 1.6).abs() < 1e-6);
+        assert!((s.at(39.9) - 1.6).abs() < 1e-6);
+        assert!((s.at(40.0) - 0.16).abs() < 1e-6);
+        assert!((s.at(80.0) - 0.016).abs() < 1e-6);
+    }
+
+    #[test]
+    fn triangular_shape() {
+        let s = LrSchedule::davidnet_recipe(30.0);
+        assert_eq!(s.at(0.0), 0.0);
+        assert!((s.at(5.0) - 0.4).abs() < 1e-6);
+        assert!((s.at(10.0) - 0.4).abs() < 1e-6); // plateau
+        assert!((s.at(20.0) - 0.2).abs() < 1e-6); // halfway down
+        assert!(s.at(30.0).abs() < 1e-6);
+        assert!(s.at(31.0) >= 0.0); // never negative
+    }
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::Constant { lr: 0.01 };
+        assert_eq!(s.at(0.0), 0.01);
+        assert_eq!(s.at(100.0), 0.01);
+    }
+}

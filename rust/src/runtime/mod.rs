@@ -1,0 +1,506 @@
+//! PJRT runtime — loads and executes the JAX-lowered HLO artifacts.
+//!
+//! The compile path (`make artifacts`) runs Python **once**: each model's
+//! `loss_and_grads` (and an eval function) is lowered by
+//! `python/compile/aot.py` to HLO *text* plus a JSON [`ModelSpec`]. This
+//! module is the only place that touches the `xla` crate: it compiles the
+//! text with the PJRT CPU client and exposes typed `train_step` /
+//! `eval_*` calls to the coordinator. Python never runs on this path.
+//!
+//! HLO text (not serialized protos) is the interchange format — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure, Context};
+use std::path::{Path, PathBuf};
+
+/// What a model's eval artifact returns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalOutput {
+    /// Per-example (or per-pixel) logits — classifier / segmenter.
+    Logits,
+    /// A scalar mean loss — language model.
+    Loss,
+}
+
+/// Element type of the model's `x` input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Metadata emitted by `aot.py` alongside each pair of HLO artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Parameter tensors in artifact argument order.
+    pub params: Vec<ParamSpec>,
+    /// Per-exec batch the artifacts were lowered at.
+    pub batch: usize,
+    /// Per-example `x` shape (e.g. `[32, 32, 3]`, or `[seq_len]` for LM).
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    /// Per-example `y` shape (`[]` scalar label, `[h, w]` mask, `[s]` LM).
+    pub y_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub eval_output: EvalOutput,
+    pub train_artifact: String,
+    pub eval_artifact: String,
+    /// Seed used for the reference init emitted in `<name>.init.json`.
+    pub init_seed: u64,
+    /// Vmapped one-dispatch training artifacts keyed by worker count
+    /// (`<name>.train_w{W}.hlo.txt`, see aot.py MULTI_WORLDS).
+    pub multi_train: std::collections::BTreeMap<usize, String>,
+}
+
+impl ModelSpec {
+    /// Parse the JSON document `aot.py` writes (snake_case keys).
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let x_dtype = match j.get("x_dtype")?.as_str()? {
+            "f32" => XDtype::F32,
+            "i32" => XDtype::I32,
+            other => bail!("unknown x_dtype {other:?}"),
+        };
+        let eval_output = match j.get("eval_output")?.as_str()? {
+            "logits" => EvalOutput::Logits,
+            "loss" => EvalOutput::Loss,
+            other => bail!("unknown eval_output {other:?}"),
+        };
+        Ok(ModelSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            params,
+            batch: j.get("batch")?.as_usize()?,
+            x_shape: j.get("x_shape")?.as_usize_vec()?,
+            x_dtype,
+            y_shape: j.get("y_shape")?.as_usize_vec()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            eval_output,
+            train_artifact: j.get("train_artifact")?.as_str()?.to_string(),
+            eval_artifact: j.get("eval_artifact")?.as_str()?.to_string(),
+            init_seed: j.get("init_seed")?.as_u64()?,
+            multi_train: match j.opt("multi_train") {
+                Some(m) => m
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, v)| {
+                        Ok((
+                            k.parse::<usize>()
+                                .map_err(|e| anyhow!("multi_train key {k:?}: {e}"))?,
+                            v.as_str()?.to_string(),
+                        ))
+                    })
+                    .collect::<Result<_>>()?,
+                None => Default::default(),
+            },
+        })
+    }
+
+    pub fn param_lens(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.len()).collect()
+    }
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+    pub fn x_elems_per_example(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+    pub fn y_elems_per_example(&self) -> usize {
+        self.y_shape.iter().product()
+    }
+}
+
+/// The PJRT client (one per process).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile a model's artifacts from `dir` (e.g. `artifacts/`).
+    pub fn load_model(&self, dir: impl AsRef<Path>, name: &str) -> Result<Model> {
+        let dir = dir.as_ref();
+        let spec_path = dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&spec_path)
+            .with_context(|| format!("reading {spec_path:?} — run `make artifacts`?"))?;
+        let spec = ModelSpec::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing {spec_path:?}"))?;
+        let train = self.compile_hlo(&dir.join(&spec.train_artifact))?;
+        let eval = self.compile_hlo(&dir.join(&spec.eval_artifact))?;
+        let mut multi_train = std::collections::BTreeMap::new();
+        for (&world, fname) in &spec.multi_train {
+            multi_train.insert(world, self.compile_hlo(&dir.join(fname))?);
+        }
+        Ok(Model { spec, train, eval, multi_train, dir: dir.to_path_buf() })
+    }
+
+    /// Compile one HLO text file.
+    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    /// Load the standalone Pallas quantize kernel artifact
+    /// (`quantize.hlo.txt`): `(x[f32;N], factor_exp, exp_bits, man_bits)
+    /// → f32[N]`. Used to cross-check the Rust cast path.
+    pub fn load_quantizer(&self, dir: impl AsRef<Path>) -> Result<QuantizeKernel> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("quantize.json"))
+            .context("reading quantize.json — run `make artifacts`?")?;
+        let j = Json::parse(&text)?;
+        let artifact = j.get("artifact")?.as_str()?.to_string();
+        let n = j.get("n")?.as_usize()?;
+        let exe = self.compile_hlo(&dir.join(&artifact))?;
+        Ok(QuantizeKernel { exe, n })
+    }
+}
+
+/// The AOT-compiled Pallas quantize kernel.
+pub struct QuantizeKernel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Fixed element count the kernel was lowered at.
+    pub n: usize,
+}
+
+impl QuantizeKernel {
+    /// Quantize `xs` (padded/chunked to the kernel's fixed size) with the
+    /// given shift and format.
+    pub fn run(&self, xs: &[f32], factor_exp: i32, exp_bits: u8, man_bits: u8) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.n) {
+            let mut buf = chunk.to_vec();
+            buf.resize(self.n, 0.0);
+            let x = xla::Literal::vec1(&buf);
+            let fe = xla::Literal::scalar(factor_exp);
+            let eb = xla::Literal::scalar(exp_bits as i32);
+            let mb = xla::Literal::scalar(man_bits as i32);
+            let res = self
+                .exe
+                .execute::<xla::Literal>(&[x, fe, eb, mb])
+                .map_err(|e| anyhow!("quantize exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("quantize sync: {e:?}"))?;
+            let lit = res.to_tuple1().map_err(|e| anyhow!("quantize tuple: {e:?}"))?;
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("quantize vec: {e:?}"))?;
+            out.extend_from_slice(&v[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+/// Parameter tensors pre-converted to PJRT literals (see
+/// [`Model::prepare_params`]).
+pub struct PreparedParams {
+    literals: Vec<xla::Literal>,
+}
+
+/// A compiled model: train + eval executables and the spec.
+pub struct Model {
+    pub spec: ModelSpec,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    /// Vmapped training executables keyed by worker count.
+    multi_train: std::collections::BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Model {
+    /// Load the reference initial parameters emitted by `aot.py`
+    /// (`<name>.init.json`) so Rust and Python start from identical
+    /// weights.
+    pub fn initial_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(format!("{}.init.json", self.spec.name));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`?"))?;
+        let j = Json::parse(&text)?;
+        let flat: Vec<Vec<f32>> = j
+            .as_arr()?
+            .iter()
+            .map(|a| a.as_f32_vec())
+            .collect::<Result<_>>()?;
+        ensure!(
+            flat.len() == self.spec.params.len(),
+            "init param count {} != spec {}",
+            flat.len(),
+            self.spec.params.len()
+        );
+        for (f, p) in flat.iter().zip(&self.spec.params) {
+            ensure!(f.len() == p.len(), "param {} length mismatch", p.name);
+        }
+        Ok(flat)
+    }
+
+    /// Build the parameter literals once; reuse across many executions in
+    /// the same step (all simulated workers share parameters, so this
+    /// saves `world_size − 1` conversions per training step).
+    pub fn prepare_params(&self, params: &[Vec<f32>]) -> Result<PreparedParams> {
+        Ok(PreparedParams { literals: self.param_literals(params)? })
+    }
+
+    fn param_literals(&self, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+        ensure!(params.len() == self.spec.params.len(), "param count mismatch");
+        params
+            .iter()
+            .zip(&self.spec.params)
+            .map(|(p, s)| {
+                let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(p)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {}: {e:?}", s.name))
+            })
+            .collect()
+    }
+
+    fn x_literal(&self, x_f32: Option<&[f32]>, x_i32: Option<&[i32]>) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![self.spec.batch as i64];
+        dims.extend(self.spec.x_shape.iter().map(|&d| d as i64));
+        let lit = match self.spec.x_dtype {
+            XDtype::F32 => {
+                let x = x_f32.ok_or_else(|| anyhow!("model expects f32 x"))?;
+                xla::Literal::vec1(x)
+            }
+            XDtype::I32 => {
+                let x = x_i32.ok_or_else(|| anyhow!("model expects i32 x"))?;
+                xla::Literal::vec1(x)
+            }
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape x: {e:?}"))
+    }
+
+    fn y_literal(&self, y: &[i32]) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![self.spec.batch as i64];
+        dims.extend(self.spec.y_shape.iter().map(|&d| d as i64));
+        xla::Literal::vec1(y)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape y: {e:?}"))
+    }
+
+    /// One forward+backward: returns `(loss, per-layer gradients)`.
+    ///
+    /// `x` length must be `batch * x_elems_per_example`; labels length
+    /// `batch * y_elems_per_example`.
+    pub fn train_step(
+        &self,
+        params: &[Vec<f32>],
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let prepared = self.prepare_params(params)?;
+        self.train_step_prepared(&prepared, x_f32, x_i32, y)
+    }
+
+    /// `train_step` against pre-converted parameter literals (the
+    /// coordinator's per-step fast path).
+    pub fn train_step_prepared(
+        &self,
+        prepared: &PreparedParams,
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let x = self.x_literal(x_f32, x_i32)?;
+        let yl = self.y_literal(y)?;
+        let mut args: Vec<&xla::Literal> = prepared.literals.iter().collect();
+        args.push(&x);
+        args.push(&yl);
+        let res = self
+            .train
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("train exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train sync: {e:?}"))?;
+        let mut parts = res.to_tuple().map_err(|e| anyhow!("train tuple: {e:?}"))?;
+        ensure!(
+            parts.len() == 1 + self.spec.params.len(),
+            "expected loss + {} grads, got {} outputs",
+            self.spec.params.len(),
+            parts.len()
+        );
+        let grads: Vec<Vec<f32>> = parts
+            .drain(1..)
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("grad vec: {e:?}")))
+            .collect::<Result<_>>()?;
+        let loss = parts[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss scalar: {e:?}"))?;
+        Ok((loss, grads))
+    }
+
+    /// True when a vmapped artifact exists for `world` workers.
+    pub fn has_multi_train(&self, world: usize) -> bool {
+        self.multi_train.contains_key(&world)
+    }
+
+    /// All workers' forward+backward in ONE dispatch via the vmapped
+    /// artifact: `x_all`/`y_all` hold every worker's shard concatenated
+    /// along a leading worker axis. Returns `(mean_loss, grads[w][layer])`.
+    pub fn train_step_multi(
+        &self,
+        prepared: &PreparedParams,
+        world: usize,
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<Vec<f32>>>)> {
+        let exe = self
+            .multi_train
+            .get(&world)
+            .ok_or_else(|| anyhow!("no vmapped artifact for world={world}"))?;
+        let mut x_dims: Vec<i64> = vec![world as i64, self.spec.batch as i64];
+        x_dims.extend(self.spec.x_shape.iter().map(|&d| d as i64));
+        let x = match self.spec.x_dtype {
+            XDtype::F32 => xla::Literal::vec1(
+                x_f32.ok_or_else(|| anyhow!("model expects f32 x"))?,
+            ),
+            XDtype::I32 => xla::Literal::vec1(
+                x_i32.ok_or_else(|| anyhow!("model expects i32 x"))?,
+            ),
+        }
+        .reshape(&x_dims)
+        .map_err(|e| anyhow!("reshape multi x: {e:?}"))?;
+        let mut y_dims: Vec<i64> = vec![world as i64, self.spec.batch as i64];
+        y_dims.extend(self.spec.y_shape.iter().map(|&d| d as i64));
+        let yl = xla::Literal::vec1(y)
+            .reshape(&y_dims)
+            .map_err(|e| anyhow!("reshape multi y: {e:?}"))?;
+
+        let mut args: Vec<&xla::Literal> = prepared.literals.iter().collect();
+        args.push(&x);
+        args.push(&yl);
+        let res = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("multi train exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("multi train sync: {e:?}"))?;
+        let mut parts = res.to_tuple().map_err(|e| anyhow!("multi tuple: {e:?}"))?;
+        ensure!(
+            parts.len() == 1 + self.spec.params.len(),
+            "expected loss + {} stacked grads, got {}",
+            self.spec.params.len(),
+            parts.len()
+        );
+        let loss = parts[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("multi loss: {e:?}"))?;
+        // grads[layer] is [world, …]; split into per-worker tensors.
+        let mut per_worker: Vec<Vec<Vec<f32>>> =
+            vec![Vec::with_capacity(self.spec.params.len()); world];
+        for (l, lit) in parts.drain(1..).enumerate() {
+            let flat = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("multi grad vec: {e:?}"))?;
+            let len = self.spec.params[l].len();
+            ensure!(flat.len() == world * len, "stacked grad {l} size mismatch");
+            for w in 0..world {
+                per_worker[w].push(flat[w * len..(w + 1) * len].to_vec());
+            }
+        }
+        Ok((loss, per_worker))
+    }
+
+    /// Eval forward pass: logits (or scalar loss for LM) for one batch.
+    pub fn eval_step(
+        &self,
+        params: &[Vec<f32>],
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+        y: Option<&[i32]>,
+    ) -> Result<Vec<f32>> {
+        let mut args = self.param_literals(params)?;
+        args.push(self.x_literal(x_f32, x_i32)?);
+        if self.spec.eval_output == EvalOutput::Loss {
+            let y = y.ok_or_else(|| anyhow!("LM eval needs targets"))?;
+            args.push(self.y_literal(y)?);
+        }
+        let res = self
+            .eval
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("eval exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval sync: {e:?}"))?;
+        let lit = res.to_tuple1().map_err(|e| anyhow!("eval tuple: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("eval vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC_JSON: &str = r#"{
+        "name": "mlp",
+        "params": [
+            {"name": "w1", "shape": [192, 64]},
+            {"name": "b1", "shape": [64]}
+        ],
+        "batch": 32, "x_shape": [8, 8, 3], "x_dtype": "f32", "y_shape": [],
+        "num_classes": 10, "eval_output": "logits",
+        "train_artifact": "mlp.train.hlo.txt",
+        "eval_artifact": "mlp.eval.hlo.txt", "init_seed": 7
+    }"#;
+
+    #[test]
+    fn spec_parses_from_python_json() {
+        let spec = ModelSpec::from_json(&Json::parse(SPEC_JSON).unwrap()).unwrap();
+        assert_eq!(spec.total_params(), 192 * 64 + 64);
+        assert_eq!(spec.param_lens(), vec![192 * 64, 64]);
+        assert_eq!(spec.x_elems_per_example(), 192);
+        assert_eq!(spec.y_elems_per_example(), 1);
+        assert_eq!(spec.x_dtype, XDtype::F32);
+        assert_eq!(spec.eval_output, EvalOutput::Logits);
+        assert_eq!(spec.init_seed, 7);
+    }
+
+    #[test]
+    fn spec_rejects_bad_enums() {
+        let bad = SPEC_JSON.replace("\"f32\"", "\"f64\"");
+        assert!(ModelSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+        let bad = SPEC_JSON.replace("\"logits\"", "\"probs\"");
+        assert!(ModelSpec::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+}

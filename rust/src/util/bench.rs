@@ -1,0 +1,151 @@
+//! Micro-benchmark harness (criterion stand-in).
+//!
+//! `benches/*.rs` are `harness = false` binaries; they use [`Bench`] to
+//! time closures with warmup + repeated samples and report median /
+//! mean ± spread, plus optional throughput. Timings go to stdout in a
+//! fixed-width format that EXPERIMENTS.md quotes directly.
+
+use std::time::Instant;
+
+/// One benchmark's timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations per sample (amortizes timer overhead for fast bodies).
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, samples: 15, iters_per_sample: 1 }
+    }
+}
+
+/// Result of one measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration seconds, one entry per sample (already divided by
+    /// `iters_per_sample`).
+    pub seconds: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        let mut s = self.seconds.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+    pub fn mean(&self) -> f64 {
+        self.seconds.iter().sum::<f64>() / self.seconds.len().max(1) as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.seconds.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.seconds.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// `"  name                    median 12.3 µs  (min 11.9, max 13.0)"`
+    pub fn report(&self) -> String {
+        format!(
+            "  {:<44} median {:>10}  (min {}, max {})",
+            self.name,
+            fmt_secs(self.median()),
+            fmt_secs(self.min()),
+            fmt_secs(self.max())
+        )
+    }
+
+    /// Report with throughput derived from `bytes` processed per iter.
+    pub fn report_throughput(&self, bytes: u64) -> String {
+        let gibs = bytes as f64 / self.median() / (1u64 << 30) as f64;
+        format!("{}  [{:.2} GiB/s]", self.report(), gibs)
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
+    }
+
+    /// Time `f`, preventing the compiler from eliding it via its returned
+    /// value (the closure should return something data-dependent).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut seconds = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            seconds.push(t0.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        Measurement { name: name.to_string(), seconds }
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { warmup_iters: 1, samples: 5, iters_per_sample: 10 };
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(m.seconds.len(), 5);
+        assert!(m.median() > 0.0);
+        assert!(m.min() <= m.median() && m.median() <= m.max());
+        assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+        assert_eq!(fmt_secs(f64::NAN), "n/a");
+    }
+
+    #[test]
+    fn median_even_odd() {
+        let m = Measurement { name: "x".into(), seconds: vec![1.0, 3.0, 2.0] };
+        assert_eq!(m.median(), 2.0);
+        let m = Measurement { name: "x".into(), seconds: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(m.median(), 2.5);
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal `--flag value` command-line parsing for the `aps` binary and
+//! the examples (no external dependencies).
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: a subcommand, positionals, and `--key value` /
+/// `--switch` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). The first token that
+    /// does not start with `--` becomes the subcommand; `--key value`
+    /// pairs and bare `--switch`es may appear anywhere after it.
+    pub fn from_env() -> Args {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter(iter: impl IntoIterator<Item = String>) -> Args {
+        let tokens: Vec<String> = iter.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.push((k.to_string(), Some(v.to_string())));
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.flags.push((name.to_string(), Some(tokens[i + 1].clone())));
+                    i += 1;
+                } else {
+                    args.flags.push((name.to_string(), None));
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// String flag with a default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.clone())
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.clone())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Integer flag with a default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.iter().rev().find(|(k, _)| k == key) {
+            None => Ok(default),
+            Some((_, None)) => bail!("flag --{key} needs a value"),
+            Some((_, Some(v))) => {
+                v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}"))
+            }
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(key, default as usize)? as u64)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.iter().rev().find(|(k, _)| k == key) {
+            None => Ok(default),
+            Some((_, None)) => bail!("flag --{key} needs a value"),
+            Some((_, Some(v))) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Boolean switch (`--foo` present, or `--foo true/false`).
+    pub fn has(&self, key: &str) -> bool {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_deref() != Some("false"))
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB: a bare token after `--switch` is consumed as its value
+        // (`--switch extra` is ambiguous), so positionals go before
+        // switches or between `--key value` pairs.
+        let a = parse("train extra --config c.toml --log-every 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config", "x"), "c.toml");
+        assert_eq!(a.get_usize("log-every", 0).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("run --seed=7");
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 7);
+        assert_eq!(a.get_u64("other", 42).unwrap(), 42);
+        assert!(!a.has("missing"));
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn switch_false() {
+        let a = parse("x --flag false");
+        assert!(!a.has("flag"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = parse("x --n 1 --n 2");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 2);
+    }
+}

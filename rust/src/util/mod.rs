@@ -1,0 +1,26 @@
+//! Self-contained utility substrates.
+//!
+//! This repository builds fully offline with only the `xla` bindings and
+//! `anyhow` as external dependencies, so the small infrastructure crates a
+//! project would normally pull in are implemented here:
+//!
+//! * [`json`] — a complete JSON parser + serializer (artifact specs,
+//!   golden vectors, experiment records).
+//! * [`toml`] — the TOML subset used by `configs/*.toml` (sections,
+//!   scalar keys, arrays of scalars).
+//! * [`cli`] — declarative-ish `--flag value` argument parsing.
+//! * [`bench`] — a micro-benchmark harness (median-of-runs timing) used
+//!   by `benches/*` in place of criterion.
+//! * [`par`] — scoped-thread parallel helpers for the element-wise hot
+//!   loops (quantize, reduction folds).
+//! * [`ptest`] — a miniature property-testing harness (random cases +
+//!   input logging) used by the invariants suites.
+//! * [`table`] — fixed-width ASCII table rendering for bench reports.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod ptest;
+pub mod table;
+pub mod toml;

@@ -1,0 +1,103 @@
+//! Scoped-thread data parallelism for the element-wise hot loops.
+//!
+//! A tiny stand-in for rayon: split a mutable slice (or an index range)
+//! into per-core chunks and run a closure on each under `std::thread::scope`.
+//! Used by the quantize and all-reduce fold paths, which are embarrassingly
+//! parallel over elements.
+
+/// Number of worker threads to use (once-computed).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Minimum elements per thread before parallelism is worth spawning.
+pub const PAR_THRESHOLD: usize = 16 * 1024;
+
+/// Run `f(chunk_start_index, chunk)` over disjoint chunks of `data` in
+/// parallel. Falls back to a single call when the slice is small.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0usize;
+        for _ in 0..threads {
+            if rest.is_empty() {
+                break;
+            }
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            s.spawn(move || fref(start, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Parallel map over an index range, collecting results in order.
+pub fn par_map<T: Send, F>(count: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(count).max(1);
+    if threads <= 1 || count <= 1 {
+        return (0..count).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..count).map(|_| None).collect();
+    par_chunks_mut(&mut out, 1, |start, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(start + i));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0usize; 100_000];
+        par_chunks_mut(&mut v, 1024, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn small_input_single_thread() {
+        let mut v = vec![1i32; 10];
+        par_chunks_mut(&mut v, 1024, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(1000, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+        assert!(par_map(0, |i| i).is_empty());
+    }
+}

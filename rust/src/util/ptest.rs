@@ -1,0 +1,128 @@
+//! Miniature property-testing harness (proptest stand-in).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs from
+//! a deterministic seed; on failure it panics with the failing case's
+//! index and debug representation so the case can be replayed by seed.
+//! Generators are plain closures over [`crate::data::Rng`].
+
+use crate::data::Rng;
+use std::fmt::Debug;
+
+/// Default number of random cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. Panics on the first
+/// failing input, reporting the case index, seed and input.
+pub fn check<T: Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for a
+/// custom failure message.
+pub fn check_msg<T: Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed}): {msg}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod generators {
+    use crate::data::Rng;
+
+    /// A "nasty" f32: mixes normals across many scales, subnormals,
+    /// exact powers of two, zeros and boundary values.
+    pub fn nasty_f32(rng: &mut Rng) -> f32 {
+        match rng.below(10) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => {
+                // exact power of two in a wide range
+                let e = rng.below(60) as i32 - 30;
+                let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                s * (e as f32).exp2()
+            }
+            3 => f32::from_bits(rng.next_u64() as u32 & 0x007f_ffff), // subnormal
+            4 => {
+                let m = f32::MAX;
+                m * (rng.uniform() * 2.0 - 1.0)
+            }
+            _ => {
+                // log-uniform magnitude in [2^-30, 2^30]
+                let e = rng.range(-30.0, 30.0);
+                let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                s * e.exp2() * (1.0 + rng.uniform())
+            }
+        }
+    }
+
+    /// Vector of nasty floats with random length in [1, max_len].
+    pub fn nasty_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+        let n = 1 + rng.below(max_len);
+        (0..n).map(|_| nasty_f32(rng)).collect()
+    }
+
+    /// A small random format (exp 2..=8, man 0..=23).
+    pub fn format(rng: &mut Rng) -> crate::cpd::FpFormat {
+        crate::cpd::FpFormat::new(2 + rng.below(7) as u8, rng.below(24) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", 1, 50, |r| r.below(100), |_| {
+            true
+        });
+        check("counted", 2, 50, |r| r.below(100), |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_input() {
+        check("fails", 3, 100, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn nasty_generator_hits_special_values() {
+        let mut rng = crate::data::Rng::new(7);
+        let vals: Vec<f32> = (0..2000).map(|_| generators::nasty_f32(&mut rng)).collect();
+        assert!(vals.iter().any(|&v| v == 0.0));
+        assert!(vals.iter().any(|&v| v != 0.0 && v.abs() < 1e-38), "subnormals");
+        assert!(vals.iter().any(|&v| v.abs() > 1e20), "huge");
+        assert!(vals.iter().any(|&v| v < 0.0));
+    }
+}

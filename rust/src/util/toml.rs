@@ -1,0 +1,239 @@
+//! The TOML subset used by `configs/*.toml`.
+//!
+//! Supports: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / array-of-scalar values, `#` comments, and blank
+//! lines. (No nested tables, dotted keys, or multi-line strings — the
+//! experiment configs don't need them, and unknown syntax errors out
+//! loudly rather than being silently misread.)
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected non-negative integer, got {i}");
+        }
+        Ok(i as usize)
+    }
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: section name → key → value. Top-level keys live in
+/// the `""` section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    bail!("line {}: bad section name {name:?}", lineno + 1);
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+                let key = k.trim();
+                if key.is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                let value = parse_value(v.trim())
+                    .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+                doc.sections
+                    .get_mut(&current)
+                    .unwrap()
+                    .insert(key.to_string(), value);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Result<&BTreeMap<String, TomlValue>> {
+        self.sections
+            .get(name)
+            .ok_or_else(|| anyhow!("missing [{}] section", name))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Result<&TomlValue> {
+        self.section(section)?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing {section}.{key}"))
+    }
+
+    pub fn opt(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string {s:?}"))?;
+        if inner.contains('"') {
+            bail!("unsupported embedded quote in {s:?}");
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+top = 1
+
+[experiment]
+name = "table4"   # trailing comment
+seed = 42
+
+[sync]
+method = "aps"
+kahan = true
+scale = -2.5
+decay_at = [40.0, 80.0]
+big = 1_000_000
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.get("", "top").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(d.get("experiment", "name").unwrap().as_str().unwrap(), "table4");
+        assert_eq!(d.get("experiment", "seed").unwrap().as_usize().unwrap(), 42);
+        assert!(d.get("sync", "kahan").unwrap().as_bool().unwrap());
+        assert_eq!(d.get("sync", "scale").unwrap().as_f64().unwrap(), -2.5);
+        assert_eq!(d.get("sync", "big").unwrap().as_i64().unwrap(), 1_000_000);
+        let arr = match d.get("sync", "decay_at").unwrap() {
+            TomlValue::Arr(a) => a.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_f64().unwrap(), 40.0);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let d = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(d.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = zzz").is_err());
+        let d = TomlDoc::parse("[a]\nx = 1").unwrap();
+        assert!(d.get("b", "x").is_err());
+        assert!(d.get("a", "y").is_err());
+    }
+
+    #[test]
+    fn negative_usize_rejected() {
+        let d = TomlDoc::parse("k = -3").unwrap();
+        assert!(d.get("", "k").unwrap().as_usize().is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Golden-vector cross-test: the Rust `cpd::cast` implementation must be
+//! **bit-for-bit identical** to the Python oracle (`ref.quantize_ref`)
+//! that also feeds the Pallas kernel. `aot.py` emits
+//! `artifacts/quantize_golden.json` (inputs and expected outputs as u32
+//! bit patterns across formats and shifts); this test pins all three
+//! implementations together.
+
+use aps_cpd::cpd::{quantize_shifted, FpFormat, Rounding};
+use aps_cpd::util::json::Json;
+
+fn load() -> Option<Json> {
+    let text = std::fs::read_to_string("artifacts/quantize_golden.json").ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+#[test]
+fn rust_cast_matches_python_oracle_bit_for_bit() {
+    let Some(doc) = load() else {
+        eprintln!("skipping: artifacts/quantize_golden.json missing (run `make artifacts`)");
+        return;
+    };
+    let in_bits: Vec<u32> = doc
+        .get("in_bits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as u32)
+        .collect();
+    let xs: Vec<f32> = in_bits.iter().map(|&b| f32::from_bits(b)).collect();
+
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 30, "expected a full golden sweep");
+    let mut checked = 0usize;
+    for case in cases {
+        let eb = case.get("exp_bits").unwrap().as_usize().unwrap() as u8;
+        let mb = case.get("man_bits").unwrap().as_usize().unwrap() as u8;
+        let fe = case.get("factor_exp").unwrap().as_f64().unwrap() as i32;
+        let fmt = FpFormat::new(eb, mb);
+        let want: Vec<u32> = case
+            .get("out_bits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap() as u32)
+            .collect();
+        assert_eq!(want.len(), xs.len());
+        for (i, (&x, &wb)) in xs.iter().zip(&want).enumerate() {
+            let got = quantize_shifted(x, fe, fmt, Rounding::NearestEven);
+            let w = f32::from_bits(wb);
+            let ok = if got.is_nan() || w.is_nan() {
+                got.is_nan() && w.is_nan()
+            } else {
+                got.to_bits() == wb
+            };
+            assert!(
+                ok,
+                "fmt {fmt} fe {fe} input[{i}] = {x:e} (bits {:08x}): rust {got:e} ({:08x}) vs python {w:e} ({wb:08x})",
+                x.to_bits(),
+                got.to_bits()
+            );
+            checked += 1;
+        }
+    }
+    println!("golden cast: {checked} values bit-exact across {} cases", cases.len());
+}

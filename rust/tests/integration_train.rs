@@ -1,0 +1,183 @@
+//! End-to-end integration: train real models through the full stack
+//! (PJRT-executed JAX HLO → simulated cluster → APS → optimizer) and
+//! assert the paper's qualitative claims hold on the synthetic workloads:
+//!
+//! * FP32 training converges (loss decreases, accuracy ≫ chance);
+//! * APS-8bit matches FP32 closely;
+//! * aggressive loss scaling overflows where APS does not;
+//! * the hybrid schedule switches methods at the right epoch.
+
+use aps_cpd::aps::{SyncMethod, SyncOptions};
+use aps_cpd::coordinator::{Trainer, TrainerSetup};
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::optim::LrSchedule;
+use aps_cpd::runtime::{Engine, Model};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/mlp.json").exists()
+}
+
+fn load(engine: &Engine, name: &str) -> Model {
+    engine.load_model("artifacts", name).expect("load model")
+}
+
+fn quick_setup(world: usize, method: SyncMethod) -> TrainerSetup {
+    let mut s = TrainerSetup::new(world, SyncOptions::new(method));
+    s.epochs = 2;
+    s.steps_per_epoch = 12;
+    s.eval_examples = 256;
+    s.schedule = LrSchedule::Constant { lr: 0.08 };
+    s
+}
+
+#[test]
+fn mlp_fp32_training_converges() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+    let mut t = Trainer::new(&model, quick_setup(4, SyncMethod::Fp32)).unwrap();
+    let out = t.train("it-mlp-fp32").unwrap();
+    assert!(!out.diverged);
+    let first = out.loss.points.first().unwrap().1;
+    let last = out.loss.tail_mean(5);
+    assert!(last < first * 0.8, "loss {first} → {last}");
+    assert!(out.final_metric > 0.3, "accuracy {}", out.final_metric); // chance = 0.1
+}
+
+#[test]
+fn aps_8bit_tracks_fp32_and_naive_4bit_does_not() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+
+    let fp32 = Trainer::new(&model, quick_setup(4, SyncMethod::Fp32))
+        .unwrap()
+        .train("fp32")
+        .unwrap();
+    let aps = Trainer::new(
+        &model,
+        quick_setup(4, SyncMethod::Aps { fmt: FpFormat::E5M2 }),
+    )
+    .unwrap()
+    .train("aps-e5m2")
+    .unwrap();
+
+    assert!(!aps.diverged);
+    assert!(
+        aps.final_metric > fp32.final_metric - 0.12,
+        "APS {} vs FP32 {}",
+        aps.final_metric,
+        fp32.final_metric
+    );
+    // APS wire traffic is ~4× smaller than FP32.
+    assert!(aps.comm_payload_bytes * 3 < fp32.comm_payload_bytes);
+    // Its exponent phase is a rounding error of the payload.
+    assert!(aps.comm_exponent_bytes * 50 < aps.comm_payload_bytes);
+}
+
+#[test]
+fn overscaled_loss_scaling_overflows_aps_does_not() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+
+    // Factor 2^24 pushes E5M2 (max 2^15) into overflow immediately.
+    let mut s = quick_setup(4, SyncMethod::LossScaling { fmt: FpFormat::E5M2, factor_exp: 24 });
+    s.epochs = 1;
+    s.steps_per_epoch = 3;
+    let mut t = Trainer::new(&model, s).unwrap();
+    let mut out = Default::default();
+    t.step(0, 0, &mut out).unwrap();
+    let overflowed = out.underflow.points.len() == 1; // step ran
+    assert!(overflowed);
+
+    let mut s2 = quick_setup(4, SyncMethod::Aps { fmt: FpFormat::E5M2 });
+    s2.epochs = 1;
+    s2.steps_per_epoch = 3;
+    let mut t2 = Trainer::new(&model, s2).unwrap();
+    let out2 = t2.train("aps-safe").unwrap();
+    assert!(!out2.diverged);
+    assert!(out2.final_metric > 0.15);
+}
+
+#[test]
+fn hybrid_schedule_switches_precision() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+    let mut s = quick_setup(4, SyncMethod::Aps { fmt: FpFormat::E4M3 });
+    s.hybrid = Some(aps_cpd::aps::HybridSchedule {
+        fp32_epochs: 1,
+        low: SyncMethod::Aps { fmt: FpFormat::E4M3 },
+    });
+    s.epochs = 2;
+    s.steps_per_epoch = 6;
+    let mut t = Trainer::new(&model, s).unwrap();
+    let out = t.train("hybrid").unwrap();
+    assert!(!out.diverged);
+    // Epoch 0 ran FP32 (zero underflow); epoch 1 ran E4M3.
+    let e0_underflow: f64 = out.underflow.points[..6].iter().map(|p| p.1).sum();
+    assert_eq!(e0_underflow, 0.0, "FP32 phase must not underflow");
+}
+
+#[test]
+fn segmentation_and_lm_workloads_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+
+    let fcn = load(&engine, "fcn");
+    let mut s = quick_setup(2, SyncMethod::Aps { fmt: FpFormat::E4M3 });
+    s.epochs = 1;
+    s.steps_per_epoch = 6;
+    s.eval_examples = 32;
+    let mut t = Trainer::new(&fcn, s).unwrap();
+    let out = t.train("it-fcn").unwrap();
+    assert!(!out.diverged);
+    assert!(out.final_metric > 0.0 && out.final_metric <= 1.0);
+    assert!(out.final_macc.is_some());
+
+    let lm = load(&engine, "transformer");
+    let mut s = quick_setup(2, SyncMethod::Aps { fmt: FpFormat::E5M2 });
+    s.epochs = 1;
+    s.steps_per_epoch = 4;
+    s.eval_examples = 16;
+    s.schedule = LrSchedule::Constant { lr: 0.02 };
+    let mut t = Trainer::new(&lm, s).unwrap();
+    let out = t.train("it-lm").unwrap();
+    assert!(!out.diverged);
+    // LM metric is eval loss; it should be below uniform-vocab entropy.
+    assert!(out.final_metric < (512f64).ln() * 1.1, "loss {}", out.final_metric);
+}
+
+#[test]
+fn qat_model_with_embedded_pallas_kernel_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp_qat");
+    let mut s = quick_setup(2, SyncMethod::Fp32);
+    s.epochs = 1;
+    s.steps_per_epoch = 8;
+    let mut t = Trainer::new(&model, s).unwrap();
+    let out = t.train("it-qat").unwrap();
+    assert!(!out.diverged);
+    let first = out.loss.points.first().unwrap().1;
+    assert!(out.loss.tail_mean(3) < first, "QAT loss should decrease");
+}

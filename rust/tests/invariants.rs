@@ -1,0 +1,327 @@
+//! Property-based invariants (util::ptest) over the numeric substrate and
+//! the coordinator-state layer — the repository's proptest suite.
+
+use aps_cpd::aps::{self, SyncMethod, SyncOptions};
+use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
+use aps_cpd::cpd::{
+    avg_roundoff_error, quantize, quantize_shifted, FpFormat, Rounding,
+};
+use aps_cpd::data::Rng;
+use aps_cpd::util::ptest::{check, check_msg, generators};
+
+const RNE: Rounding = Rounding::NearestEven;
+
+#[test]
+fn prop_cast_idempotent() {
+    check_msg(
+        "quantize(quantize(x)) == quantize(x)",
+        11,
+        2000,
+        |rng| (generators::nasty_f32(rng), generators::format(rng)),
+        |&(x, fmt)| {
+            let q1 = quantize(x, fmt, RNE);
+            let q2 = quantize(q1, fmt, RNE);
+            if q1.is_nan() && q2.is_nan() {
+                return Ok(());
+            }
+            if q1.to_bits() == q2.to_bits() {
+                Ok(())
+            } else {
+                Err(format!("q1={q1:e} q2={q2:e}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_cast_monotone() {
+    check_msg(
+        "x <= y implies q(x) <= q(y)",
+        12,
+        2000,
+        |rng| {
+            let a = generators::nasty_f32(rng);
+            let b = generators::nasty_f32(rng);
+            (a.min(b), a.max(b), generators::format(rng))
+        },
+        |&(x, y, fmt)| {
+            if x.is_nan() || y.is_nan() {
+                return Ok(());
+            }
+            let qx = quantize(x, fmt, RNE);
+            let qy = quantize(y, fmt, RNE);
+            if qx <= qy {
+                Ok(())
+            } else {
+                Err(format!("q({x:e})={qx:e} > q({y:e})={qy:e}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_cast_bounded_relative_error_in_normal_range() {
+    // For values inside the format's normal range, RNE error ≤ ε/2·|x|.
+    check_msg(
+        "relative error ≤ 2^-(man+1) in normal range",
+        13,
+        2000,
+        |rng| {
+            let fmt = generators::format(rng);
+            // Sample x = ±m·2^e with integer e ∈ [e_min, e_max-1] and
+            // m ∈ [1,2): then |x| < 2^e_max ≤ max_value, safely inside
+            // the normal range (degenerate formats like E2M0 included).
+            let span = (fmt.max_exponent() - fmt.min_normal_exponent()) as usize;
+            let e = fmt.min_normal_exponent() + rng.below(span.max(1)) as i32;
+            let m = 1.0 + rng.uniform() * 0.999;
+            let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            (s * m * (e as f32).exp2(), fmt)
+        },
+        |&(x, fmt)| {
+            let q = quantize(x, fmt, RNE);
+            let rel = ((q - x) / x).abs() as f64;
+            let bound = fmt.epsilon() / 2.0 * 1.0001;
+            if rel <= bound {
+                Ok(())
+            } else {
+                Err(format!("rel {rel} > bound {bound}, q={q:e}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_shift_of_representable_is_lossless_within_range() {
+    // Fig 4 as a property: for representable v and shift k that keeps
+    // v·2^k inside the normal range, quantize_shifted is exactly v·2^k.
+    check_msg(
+        "power-of-two shifts are lossless",
+        14,
+        500,
+        |rng| {
+            // cap man_bits: enumerate_magnitudes is exponential in it
+            let fmt = aps_cpd::cpd::FpFormat::new(
+                2 + rng.below(7) as u8,
+                rng.below(7) as u8,
+            );
+            let vals = fmt.enumerate_magnitudes();
+            let v = vals[rng.below(vals.len())];
+            let k = rng.below(9) as i32 - 4;
+            (v, k, fmt)
+        },
+        |&(v, k, fmt)| {
+            if v == 0.0 {
+                return Ok(());
+            }
+            let shifted = v as f64 * (k as f64).exp2();
+            if shifted < fmt.min_normal() || shifted > fmt.max_value() {
+                return Ok(()); // outside: rounding may legally occur
+            }
+            let q = quantize_shifted(v, k, fmt, RNE) as f64;
+            if q == shifted {
+                Ok(())
+            } else {
+                Err(format!("{v:e}·2^{k} → {q:e}, want {shifted:e}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fp32_allreduce_topology_invariant_to_1ulp() {
+    check_msg(
+        "fp32 ring vs hierarchical agree to ~1 ulp",
+        15,
+        60,
+        |rng| {
+            let p = [4usize, 8, 16][rng.below(3)];
+            let n = 1 + rng.below(64);
+            let grads: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| rng.normal()).collect())
+                .collect();
+            grads
+        },
+        |grads| {
+            let p = grads.len();
+            let cluster = SimCluster::new(p);
+            let (r, _) = cluster.all_reduce_sum(grads, Topology::Ring, ReduceOptions::fp32());
+            let (h, _) = cluster.all_reduce_sum(
+                grads,
+                Topology::Hierarchical { group_size: if p % 4 == 0 { 4 } else { 2 } },
+                ReduceOptions::fp32(),
+            );
+            for (a, b) in r.iter().zip(&h) {
+                let tol = 1e-5 * a.abs().max(1.0);
+                if (a - b).abs() > tol {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aps_never_overflows() {
+    // Eq. 1–4: for any gradients and any format, APS's chosen factor must
+    // keep every wire value and every partial sum finite.
+    check_msg(
+        "APS wire values never overflow",
+        16,
+        80,
+        |rng| {
+            let p = 2 + rng.below(7);
+            let layers = 1 + rng.below(3);
+            let scale = (rng.range(-30.0, 30.0)).exp2();
+            let grads: Vec<Vec<Vec<f32>>> = (0..p)
+                .map(|_| {
+                    (0..layers)
+                        .map(|_| (0..16).map(|_| rng.normal() * scale).collect())
+                        .collect()
+                })
+                .collect();
+            let fmt = generators::format(rng);
+            (grads, fmt)
+        },
+        |(grads, fmt)| {
+            let cluster = SimCluster::new(grads.len());
+            let opts = SyncOptions::new(SyncMethod::Aps { fmt: *fmt });
+            let (out, report) = aps::synchronize(&cluster, grads, &opts);
+            if report.any_overflow() {
+                return Err("overflow on the wire".into());
+            }
+            for l in &out {
+                for v in l {
+                    if v.is_infinite() {
+                        return Err(format!("INF in output"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aps_rescues_underflowing_gradients() {
+    // In the regime APS exists for — gradients below the wire format's
+    // subnormal floor — the naive cast loses (almost) everything while
+    // APS's shift keeps the Eq.-5 error at the mantissa-rounding level.
+    // (Outside that regime APS and naive differ only by which end of the
+    // range absorbs rounding, so no pointwise ordering holds; see the
+    // table4/table9 benches for the aggregate picture.)
+    check_msg(
+        "APS ≪ naive when gradients underflow",
+        17,
+        60,
+        |rng| {
+            let p = 4;
+            // E5M2 subnormal floor is 2^-16; sample well below it.
+            let scale = (rng.range(-36.0, -22.0)).exp2();
+            let grads: Vec<Vec<Vec<f32>>> = (0..p)
+                .map(|_| {
+                    vec![(0..64).map(|_| rng.normal() * scale).collect()]
+                })
+                .collect();
+            grads
+        },
+        |grads| {
+            let cluster = SimCluster::new(grads.len());
+            let fmt = FpFormat::E5M2;
+            let exact = aps::reduce_exact(grads, true);
+            let (aps_out, _) = aps::synchronize(
+                &cluster,
+                grads,
+                &SyncOptions::new(SyncMethod::Aps { fmt }),
+            );
+            let (naive_out, _) = aps::synchronize(
+                &cluster,
+                grads,
+                &SyncOptions::new(SyncMethod::Naive { fmt }),
+            );
+            let e_aps = avg_roundoff_error(&exact[0], &aps_out[0]);
+            let e_naive = avg_roundoff_error(&exact[0], &naive_out[0]);
+            if e_naive > 0.9 && e_aps < 0.5 * e_naive {
+                Ok(())
+            } else {
+                Err(format!("aps {e_aps} vs naive {e_naive}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_kahan_better_than_plain_in_aggregate() {
+    // Kahan is not pointwise-better (compensation can round unluckily on
+    // any single element), but over many random reductions its mean Eq.-5
+    // error must beat the plain fold — the §5.1.1 claim.
+    let mut rng = Rng::new(18);
+    let mut sum_plain = 0.0f64;
+    let mut sum_kahan = 0.0f64;
+    let cases = 40;
+    for _ in 0..cases {
+        let p = 16;
+        let n = 32;
+        let grads: Vec<Vec<f32>> = (0..p)
+            .map(|_| {
+                (0..n)
+                    .map(|_| rng.normal() * (rng.range(-3.0, 3.0)).exp2())
+                    .collect()
+            })
+            .collect();
+        let cluster = SimCluster::new(p);
+        let exact: Vec<f32> = (0..n)
+            .map(|i| grads.iter().map(|g| g[i] as f64).sum::<f64>() as f32)
+            .collect();
+        let fmt = FpFormat::E4M3;
+        let plain = cluster
+            .all_reduce_sum(&grads, Topology::Ring, ReduceOptions::low_precision(fmt))
+            .0;
+        let kahan = cluster
+            .all_reduce_sum(
+                &grads,
+                Topology::Ring,
+                ReduceOptions { fmt, mode: RNE, kahan: true },
+            )
+            .0;
+        sum_plain += avg_roundoff_error(&exact, &plain);
+        sum_kahan += avg_roundoff_error(&exact, &kahan);
+    }
+    let mp = sum_plain / cases as f64;
+    let mk = sum_kahan / cases as f64;
+    assert!(mk < mp, "mean kahan {mk} >= mean plain {mp}");
+    println!("mean Eq.5 error: plain {mp:.4}, kahan {mk:.4}");
+}
+
+#[test]
+fn prop_stochastic_rounding_brackets() {
+    check(
+        "stochastic rounding returns a bracketing representable",
+        19,
+        2000,
+        |rng: &mut Rng| {
+            (
+                generators::nasty_f32(rng),
+                generators::format(rng),
+                rng.next_u64(),
+            )
+        },
+        |&(x, fmt, seed)| {
+            if !x.is_finite() {
+                return true;
+            }
+            let s = quantize(x, fmt, Rounding::Stochastic(seed));
+            let down = quantize(x, fmt, Rounding::TowardZero);
+            // s must be either the truncation or its outward neighbor
+            if s.is_nan() {
+                return false;
+            }
+            if s == down {
+                return true;
+            }
+            // outward neighbor: |s| >= |x| and s is representable
+            let q = quantize(s, fmt, RNE);
+            (q.is_nan() && s.is_nan() || q.to_bits() == s.to_bits()) && s.abs() >= x.abs().min(fmt.max_value() as f32)
+        },
+    );
+}

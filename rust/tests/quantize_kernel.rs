@@ -1,0 +1,46 @@
+//! L1↔L3 cross-test: execute the AOT-compiled Pallas quantize kernel
+//! through the PJRT runtime and compare against the Rust `cpd::cast`
+//! path on random tensors — the artifact a production deployment would
+//! ship must agree with the coordinator's own arithmetic.
+
+use aps_cpd::cpd::{quantize_shifted, FpFormat, Rounding};
+use aps_cpd::data::Rng;
+use aps_cpd::runtime::Engine;
+use aps_cpd::util::ptest::generators::nasty_f32;
+
+#[test]
+fn pallas_kernel_artifact_matches_rust_cast() {
+    if !std::path::Path::new("artifacts/quantize.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::cpu().expect("cpu client");
+    let kernel = engine.load_quantizer("artifacts").expect("quantize artifact");
+
+    let mut rng = Rng::new(99);
+    let xs: Vec<f32> = (0..kernel.n + 100).map(|_| nasty_f32(&mut rng)).collect();
+
+    for (fe, eb, mb) in [(0, 5, 2), (7, 4, 3), (-11, 3, 0), (3, 8, 7), (0, 8, 23)] {
+        let fmt = FpFormat::new(eb, mb);
+        let got = kernel.run(&xs, fe, eb, mb).expect("kernel run");
+        assert_eq!(got.len(), xs.len());
+        let mut mismatches = 0;
+        for (i, (&x, &g)) in xs.iter().zip(&got).enumerate() {
+            let want = quantize_shifted(x, fe, fmt, Rounding::NearestEven);
+            let ok = if want.is_nan() || g.is_nan() {
+                want.is_nan() && g.is_nan()
+            } else {
+                want.to_bits() == g.to_bits()
+            };
+            if !ok {
+                mismatches += 1;
+                if mismatches < 5 {
+                    eprintln!(
+                        "fmt ({eb},{mb}) fe {fe} [{i}] x={x:e}: kernel {g:e} rust {want:e}"
+                    );
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "fmt ({eb},{mb}) fe {fe}");
+    }
+}
