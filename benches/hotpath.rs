@@ -1,5 +1,6 @@
 //! Hot-path micro-benchmarks (§Perf): quantize throughput, all-reduce
-//! emulation throughput, APS end-to-end sync, and the PJRT train-step.
+//! emulation throughput, APS end-to-end sync (one-shot shim vs. the
+//! buffer-reusing SyncSession), and the PJRT train-step.
 //! Used by the performance pass in EXPERIMENTS.md §Perf.
 
 #[path = "support/mod.rs"]
@@ -8,6 +9,7 @@ mod support;
 use aps_cpd::aps::{self, SyncMethod, SyncOptions};
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
+use aps_cpd::sync::SyncSessionBuilder;
 use aps_cpd::util::bench::Bench;
 
 fn main() {
@@ -43,11 +45,21 @@ fn main() {
         println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
     }
 
-    // full APS synchronize (quantize + exponent phase + reduce + unscale)
+    // full APS sync (quantize + exponent phase + reduce + unscale):
+    // the deprecated one-shot shim (re-allocates every buffer per call)…
     let layered: Vec<Vec<Vec<f32>>> = grads.iter().map(|g| vec![g.clone()]).collect();
     let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
+    #[allow(deprecated)]
     let m = bench.run("aps::synchronize e5m2 (8w, 1 layer × 4Mi)", || {
         aps::synchronize(&cluster, &layered, &opts)
+    });
+    println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
+
+    // …vs. the SyncSession, which owns wire/output buffers across steps.
+    let mut session = SyncSessionBuilder::from_sync_options(world, &opts).build();
+    let m = bench.run("SyncSession::step aps e5m2 (8w, reused buffers)", || {
+        let (reduced, report) = session.step(&layered);
+        (reduced[0][0], report.payload_bytes)
     });
     println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
 

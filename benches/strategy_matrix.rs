@@ -1,0 +1,101 @@
+//! Strategy × collective matrix through the `SyncSession` hot path.
+//!
+//! Sweeps every built-in `SyncStrategy` over every built-in `Collective`
+//! on a synthetic multi-scale gradient set (no artifacts needed) and
+//! reports wire bytes/step, exponent-phase bytes, latency steps, mean
+//! wire underflow, and wall time per step. New codecs added through
+//! `StrategySpec` (or plugged straight into `SyncSessionBuilder`) get
+//! perf numbers here for free.
+//!
+//! Byte columns are as-simulated: ternary symbols ride a BF16 wire (a
+//! packed deployment ships 2 bits/elt) and top-k rides dense FP32 (a real
+//! deployment ships k (index, value) pairs).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder};
+use aps_cpd::util::bench::{fmt_secs, Bench};
+use aps_cpd::util::table::Table;
+
+fn main() {
+    support::header(
+        "strategy × collective matrix (SyncSession hot path)",
+        "sync module; paper Tables 2/4 methods + net-new codecs",
+    );
+
+    let world = 8;
+    // ResNet-ish spread: a big conv block, a medium layer, a tiny bias —
+    // with the Fig-2 scale disparity APS exists for.
+    let layers: &[(usize, f32)] = &[(1 << 16, 1e-4), (1 << 13, 1.0), (256, 1e-6)];
+    let grads: Vec<Vec<Vec<f32>>> = (0..world)
+        .map(|w| {
+            layers
+                .iter()
+                .enumerate()
+                .map(|(l, &(n, scale))| {
+                    (0..n)
+                        .map(|i| {
+                            let h = (w * 2654435761 + l * 97 + i * 131) % 4001;
+                            (h as f32 / 4001.0 - 0.5) * scale
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    let strategies = [
+        StrategySpec::Fp32,
+        StrategySpec::Naive { fmt: FpFormat::E5M2 },
+        StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 8 },
+        StrategySpec::Aps { fmt: FpFormat::E5M2 },
+        StrategySpec::Aps { fmt: FpFormat::E4M3 },
+        StrategySpec::Ternary { seed: 42 },
+        StrategySpec::TopK { frac: 0.25 },
+    ];
+    let collectives = [Topology::Ring, Topology::Hierarchical { group_size: 4 }];
+
+    let bench = Bench::quick();
+    let mut t = Table::new(&[
+        "strategy",
+        "collective",
+        "payload KiB/step",
+        "exp B",
+        "steps",
+        "underflow",
+        "wall/step",
+    ]);
+    for spec in strategies {
+        for topo in collectives {
+            let mut session = SyncSessionBuilder::new(world)
+                .spec(spec)
+                .with_topology(topo)
+                .build();
+            let m = bench.run("step", || {
+                let (reduced, report) = session.step(&grads);
+                (reduced[0][0], report.payload_bytes)
+            });
+            let report = session.report().clone();
+            t.row(&[
+                format!("{spec:?}"),
+                format!("{topo:?}"),
+                format!("{}", report.payload_bytes / 1024),
+                format!("{}", report.exponent_bytes),
+                format!("{}", report.steps),
+                format!("{:.4}", report.underflow_frac()),
+                fmt_secs(m.median()),
+            ]);
+        }
+    }
+    t.print();
+    support::shape_note();
+    println!(
+        "\n(bytes are per worker per step; fp32 baseline payload = {} KiB)",
+        (layers.iter().map(|&(n, _)| n as u64).sum::<u64>() * 4 * 2 * (world as u64 - 1)
+            / world as u64)
+            / 1024
+    );
+}

@@ -1,8 +1,7 @@
 //! APS — Auto-Precision Scaling (paper §3, Algorithm 1).
 //!
-//! The gradient-synchronization layer of the system. Given every worker's
-//! per-layer gradients, [`synchronize`] produces the globally reduced
-//! gradients under one of four methods:
+//! The paper-level vocabulary of gradient synchronization. The four
+//! methods of Table 2 are described by the closed [`SyncMethod`] enum:
 //!
 //! * [`SyncMethod::Fp32`] — the FP32 baseline (wire = 32 bits).
 //! * [`SyncMethod::Naive`] — cast to the low-precision wire format with no
@@ -14,13 +13,22 @@
 //!   format even after summation across all `N` workers (Eq. 1–4), using a
 //!   1-byte-per-layer exponent all-reduce to agree on the factor.
 //!
-//! The reduction itself runs through [`crate::collectives`] so the wire
+//! Since the [`crate::sync`] redesign, the *execution* of these methods
+//! lives in [`crate::sync::strategies`] (one [`crate::sync::SyncStrategy`]
+//! impl per method, plus net-new codecs the closed enum cannot name), and
+//! the hot path is a buffer-reusing [`crate::sync::SyncSession`]. The
+//! [`synchronize`] free function survives as a deprecated one-shot shim
+//! over a throwaway session; [`legacy::synchronize`] preserves the
+//! pre-trait implementation so the equivalence suite can pin the new path
+//! bit-for-bit against the old one.
+//!
+//! All reductions run through [`crate::collectives`] so the wire
 //! precision and summation order are emulated faithfully.
 
 pub mod policy;
 
-use crate::collectives::{ReduceOptions, ReduceStats, SimCluster, Topology};
-use crate::cpd::{quantize_shifted_slice, FpFormat, Rounding};
+use crate::collectives::{SimCluster, Topology};
+use crate::cpd::{FpFormat, Rounding};
 
 pub use policy::{HybridSchedule, LayerPolicy};
 
@@ -85,6 +93,10 @@ impl SyncOptions {
         self.topo = topo;
         self
     }
+    pub fn with_rounding(mut self, rounding: Rounding) -> Self {
+        self.rounding = rounding;
+        self
+    }
     pub fn with_kahan(mut self, kahan: bool) -> Self {
         self.kahan = kahan;
         self
@@ -97,10 +109,21 @@ impl SyncOptions {
         self.average = yes;
         self
     }
+    pub fn with_fused(mut self, yes: bool) -> Self {
+        self.fused = yes;
+        self
+    }
+}
+
+impl Default for SyncOptions {
+    /// FP32 sync over a ring with averaging — the baseline configuration.
+    fn default() -> Self {
+        SyncOptions::new(SyncMethod::Fp32)
+    }
 }
 
 /// Per-layer diagnostics from one synchronization.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerReport {
     /// The power-of-two exponent APS (or loss scaling) applied.
     pub factor_exp: i32,
@@ -113,7 +136,7 @@ pub struct LayerReport {
 }
 
 /// Aggregate result of one synchronization call.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SyncReport {
     pub layers: Vec<LayerReport>,
     /// Wire bytes per worker for the gradient payload phase.
@@ -178,138 +201,180 @@ pub fn local_max_exp(grad: &[f32], world_size: usize) -> Option<i32> {
     Some(c as i32)
 }
 
-/// Synchronize one training step's gradients.
+/// Synchronize one training step's gradients (one-shot shim).
 ///
 /// `grads[w][l]` is worker `w`'s gradient for layer `l` (all workers agree
 /// on layer count and shapes). Returns the reduced per-layer gradients and
 /// a [`SyncReport`].
+///
+/// Deprecated: this builds and discards a full [`crate::sync::SyncSession`]
+/// per call, re-paying every buffer allocation the session exists to
+/// amortize. Build the session once and call
+/// [`crate::sync::SyncSession::step`] per training step instead:
+///
+/// ```
+/// use aps_cpd::aps::{SyncMethod, SyncOptions};
+/// use aps_cpd::sync::SyncSessionBuilder;
+///
+/// let opts = SyncOptions::new(SyncMethod::Fp32);
+/// let mut session = SyncSessionBuilder::from_sync_options(2, &opts).build();
+/// let grads = vec![vec![vec![1.0f32; 8]]; 2];
+/// let (reduced, report) = session.step(&grads);
+/// assert_eq!(reduced[0][0], 1.0);
+/// assert_eq!(report.layers.len(), 1);
+/// ```
+#[deprecated(
+    since = "0.2.0",
+    note = "build a sync::SyncSession via sync::SyncSessionBuilder and call step(); \
+            see the migration notes in lib.rs"
+)]
 pub fn synchronize(
     cluster: &SimCluster,
     grads: &[Vec<Vec<f32>>],
     opts: &SyncOptions,
 ) -> (Vec<Vec<f32>>, SyncReport) {
-    let world = cluster.world_size;
-    assert_eq!(grads.len(), world, "one gradient set per worker");
-    let num_layers = grads[0].len();
-    assert!(grads.iter().all(|g| g.len() == num_layers), "ragged layer counts");
+    let mut session =
+        crate::sync::SyncSessionBuilder::from_sync_options(cluster.world_size, opts).build();
+    let (reduced, report) = session.step(grads);
+    (reduced.to_vec(), report.clone())
+}
 
-    let mut report = SyncReport {
-        layers: vec![LayerReport::default(); num_layers],
-        messages: if opts.fused { 1 } else { num_layers },
-        ..Default::default()
-    };
+/// The pre-trait implementation of [`synchronize`], kept verbatim so the
+/// equivalence suite (`rust/tests/strategy_layer.rs`) can assert the
+/// strategy/session path is bit-identical to it. Not part of the public
+/// API surface; do not call from new code.
+#[doc(hidden)]
+pub mod legacy {
+    use super::{local_max_exp, LayerReport, SyncMethod, SyncOptions, SyncReport};
+    use crate::collectives::{ReduceOptions, ReduceStats, SimCluster};
+    use crate::cpd::{quantize_shifted_slice, FpFormat};
 
-    // ---- Phase 1 (APS only): agree on per-layer scaling factors. -------
-    let factor_exps: Vec<i32> = match opts.method {
-        SyncMethod::Aps { fmt } => {
-            // Each worker contributes one i8 exponent per layer; one
-            // max-all-reduce over the vector E (Algorithm 1 line 4).
-            let contribs: Vec<Vec<i8>> = grads
+    /// See the module docs: the original closed-enum synchronize.
+    pub fn synchronize(
+        cluster: &SimCluster,
+        grads: &[Vec<Vec<f32>>],
+        opts: &SyncOptions,
+    ) -> (Vec<Vec<f32>>, SyncReport) {
+        let world = cluster.world_size;
+        assert_eq!(grads.len(), world, "one gradient set per worker");
+        let num_layers = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == num_layers), "ragged layer counts");
+
+        let mut report = SyncReport {
+            layers: vec![LayerReport::default(); num_layers],
+            messages: if opts.fused { 1 } else { num_layers },
+            ..Default::default()
+        };
+
+        // ---- Phase 1 (APS only): agree on per-layer scaling factors. ---
+        let factor_exps: Vec<i32> = match opts.method {
+            SyncMethod::Aps { fmt } => {
+                // Each worker contributes one i8 exponent per layer; one
+                // max-all-reduce over the vector E (Algorithm 1 line 4).
+                let contribs: Vec<Vec<i8>> = grads
+                    .iter()
+                    .map(|wg| {
+                        wg.iter()
+                            .map(|g| {
+                                local_max_exp(g, world)
+                                    .map(|e| e.clamp(-128, 127) as i8)
+                                    .unwrap_or(i8::MIN)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let (max_exps, stats) = cluster.all_reduce_max_i8(&contribs);
+                report.exponent_bytes = stats.bytes_per_worker;
+                report.steps += stats.steps;
+                max_exps
+                    .iter()
+                    .map(|&me| {
+                        if me == i8::MIN {
+                            0 // all-zero layer: no scaling needed
+                        } else {
+                            fmt.max_exponent() - me as i32
+                        }
+                    })
+                    .collect()
+            }
+            SyncMethod::LossScaling { factor_exp, .. } => vec![factor_exp; num_layers],
+            _ => vec![0; num_layers],
+        };
+
+        // ---- Phase 2: scale, cast, all-reduce, cast back, unscale. -----
+        let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(num_layers);
+        let wire_fmt = opts.method.wire_format();
+
+        for l in 0..num_layers {
+            let n = grads[0][l].len();
+            let layer_fmt = if opts.fp32_last_layer && l == num_layers - 1 {
+                FpFormat::FP32
+            } else {
+                wire_fmt
+            };
+            let fe = if layer_fmt.is_fp32() { 0 } else { factor_exps[l] };
+
+            // Per-worker: shift by 2^fe and cast into the wire format (one
+            // rounding — the shift is exponent arithmetic, §3.3.1).
+            let mut nonzero_in = 0usize;
+            let mut zero_out = 0usize;
+            let mut inf_out = 0usize;
+            let contribs: Vec<Vec<f32>> = grads
                 .iter()
                 .map(|wg| {
-                    wg.iter()
-                        .map(|g| {
-                            local_max_exp(g, world)
-                                .map(|e| e.clamp(-128, 127) as i8)
-                                .unwrap_or(i8::MIN)
-                        })
-                        .collect()
-                })
-                .collect();
-            let (max_exps, stats) = cluster.all_reduce_max_i8(&contribs);
-            report.exponent_bytes = stats.bytes_per_worker;
-            report.steps += stats.steps;
-            max_exps
-                .iter()
-                .map(|&me| {
-                    if me == i8::MIN {
-                        0 // all-zero layer: no scaling needed
-                    } else {
-                        fmt.max_exponent() - me as i32
-                    }
-                })
-                .collect()
-        }
-        SyncMethod::LossScaling { factor_exp, .. } => vec![factor_exp; num_layers],
-        _ => vec![0; num_layers],
-    };
-
-    // ---- Phase 2: scale, cast, all-reduce, cast back, unscale. ---------
-    let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(num_layers);
-    let mut payload_elems_fp32 = 0u64; // elements sent at 4 bytes
-    let mut payload_elems_low = 0u64; // elements sent at wire width
-    let wire_fmt = opts.method.wire_format();
-
-    for l in 0..num_layers {
-        let n = grads[0][l].len();
-        let layer_fmt = if opts.fp32_last_layer && l == num_layers - 1 {
-            FpFormat::FP32
-        } else {
-            wire_fmt
-        };
-        let fe = if layer_fmt.is_fp32() { 0 } else { factor_exps[l] };
-
-        // Per-worker: shift by 2^fe and cast into the wire format (one
-        // rounding — the shift is exponent arithmetic, §3.3.1).
-        let mut nonzero_in = 0usize;
-        let mut zero_out = 0usize;
-        let mut inf_out = 0usize;
-        let contribs: Vec<Vec<f32>> = grads
-            .iter()
-            .map(|wg| {
-                let src = &wg[l];
-                let q = quantize_shifted_slice(src, fe, layer_fmt, opts.rounding);
-                for (&x, &qq) in src.iter().zip(&q) {
-                    if x != 0.0 {
-                        nonzero_in += 1;
-                        if qq == 0.0 {
-                            zero_out += 1;
+                    let src = &wg[l];
+                    let q = quantize_shifted_slice(src, fe, layer_fmt, opts.rounding);
+                    for (&x, &qq) in src.iter().zip(&q) {
+                        if x != 0.0 {
+                            nonzero_in += 1;
+                            if qq == 0.0 {
+                                zero_out += 1;
+                            }
+                        }
+                        if qq.is_infinite() {
+                            inf_out += 1;
                         }
                     }
-                    if qq.is_infinite() {
-                        inf_out += 1;
-                    }
-                }
-                q
-            })
-            .collect();
+                    q
+                })
+                .collect();
 
-        let ropts = ReduceOptions { fmt: layer_fmt, mode: opts.rounding, kahan: opts.kahan };
-        let (mut sum, stats): (Vec<f32>, ReduceStats) =
-            cluster.all_reduce_sum(&contribs, opts.topo, ropts);
+            let ropts =
+                ReduceOptions { fmt: layer_fmt, mode: opts.rounding, kahan: opts.kahan };
+            let (mut sum, stats): (Vec<f32>, ReduceStats) =
+                cluster.all_reduce_sum(&contribs, opts.topo, ropts);
 
-        // Cast back up (already f32 storage) and undo the shift; average.
-        let unscale = -(fe as i64) as i32;
-        let div = if opts.average { world as f64 } else { 1.0 };
-        let m = (unscale as f64).exp2() / div;
-        for v in sum.iter_mut() {
-            *v = (*v as f64 * m) as f32;
+            // Cast back up (already f32 storage) and undo the shift; average.
+            let unscale = -(fe as i64) as i32;
+            let div = if opts.average { world as f64 } else { 1.0 };
+            let m = (unscale as f64).exp2() / div;
+            for v in sum.iter_mut() {
+                *v = (*v as f64 * m) as f32;
+            }
+
+            report.layers[l] = LayerReport {
+                factor_exp: fe,
+                underflow_frac: if nonzero_in == 0 {
+                    0.0
+                } else {
+                    zero_out as f64 / nonzero_in as f64
+                },
+                overflow_frac: inf_out as f64 / (n * world).max(1) as f64,
+                elements: n,
+            };
+            report.payload_bytes += stats.bytes_per_worker;
+            if !opts.fused {
+                report.steps += stats.steps;
+            }
+            reduced.push(sum);
+        }
+        if opts.fused {
+            // One fused message: pay the per-message step count once.
+            report.steps += opts.topo.steps(world);
         }
 
-        report.layers[l] = LayerReport {
-            factor_exp: fe,
-            underflow_frac: if nonzero_in == 0 { 0.0 } else { zero_out as f64 / nonzero_in as f64 },
-            overflow_frac: inf_out as f64 / (n * world).max(1) as f64,
-            elements: n,
-        };
-        if layer_fmt.is_fp32() {
-            payload_elems_fp32 += n as u64;
-        } else {
-            payload_elems_low += n as u64;
-        }
-        report.payload_bytes += stats.bytes_per_worker;
-        if !opts.fused {
-            report.steps += stats.steps;
-        }
-        reduced.push(sum);
+        (reduced, report)
     }
-    if opts.fused {
-        // One fused message: pay the per-message step count once.
-        report.steps += opts.topo.steps(world);
-    }
-    let _ = (payload_elems_fp32, payload_elems_low);
-
-    (reduced, report)
 }
 
 /// The exact (f64-accumulated, FP32-wire) reduction used as the reference
@@ -337,6 +402,7 @@ pub fn reduce_exact(grads: &[Vec<Vec<f32>>], average: bool) -> Vec<Vec<f32>> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim IS the unit under test (it drives the session path)
 mod tests {
     use super::*;
     use crate::cpd::avg_roundoff_error;

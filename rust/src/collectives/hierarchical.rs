@@ -18,12 +18,27 @@
 use super::{fold_step, ring, ReduceOptions, ReduceStats};
 use crate::util::par;
 
-/// Run hierarchical all-reduce with groups of `group_size`.
+/// Run hierarchical all-reduce with groups of `group_size`, allocating
+/// the output (wrapper over [`all_reduce_into`]).
 pub fn all_reduce(
     contribs: &[Vec<f32>],
     group_size: usize,
     opts: ReduceOptions,
 ) -> (Vec<f32>, ReduceStats) {
+    let mut out = vec![0.0f32; contribs[0].len()];
+    let stats = all_reduce_into(contribs, group_size, &mut out, opts);
+    (out, stats)
+}
+
+/// Hierarchical all-reduce into a caller-provided buffer. The per-group
+/// partial sums are still allocated internally (one `n`-element vector
+/// per group); the flat-ring phase and the result reuse `out`.
+pub fn all_reduce_into(
+    contribs: &[Vec<f32>],
+    group_size: usize,
+    out: &mut [f32],
+    opts: ReduceOptions,
+) -> ReduceStats {
     let p = contribs.len();
     let n = contribs[0].len();
     assert!(group_size >= 1, "group size must be positive");
@@ -35,7 +50,7 @@ pub fn all_reduce(
 
     // Phase 1: intra-group fold at each master, in rank order
     // (parallel across groups — they are independent).
-    let mut partials: Vec<Vec<f32>> = par::par_map(num_groups, |g| {
+    let partials: Vec<Vec<f32>> = par::par_map(num_groups, |g| {
         {
             let base = g * group_size;
             let mut acc = contribs[base].clone();
@@ -58,10 +73,11 @@ pub fn all_reduce(
     });
 
     // Phase 2: ring all-reduce across masters.
-    let (reduced, ring_stats) = if num_groups > 1 {
-        ring::all_reduce(&partials, opts)
+    let ring_stats = if num_groups > 1 {
+        ring::all_reduce_into(&partials, out, opts)
     } else {
-        (std::mem::take(&mut partials[0]), ReduceStats::default())
+        out.copy_from_slice(&partials[0]);
+        ReduceStats::default()
     };
 
     // Phase 3: broadcast (pure data movement).
@@ -71,11 +87,10 @@ pub fn all_reduce(
     // (k-1)·n down. Report the master's (worst-case) traffic.
     let master_bytes =
         2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;
-    let stats = ReduceStats {
+    ReduceStats {
         bytes_per_worker: master_bytes,
         steps: 4 * (group_size - 1) + 2 * (num_groups.saturating_sub(1)),
-    };
-    (reduced, stats)
+    }
 }
 
 #[cfg(test)]

@@ -25,9 +25,10 @@ pub mod ring;
 use crate::cpd::{quantize, FpFormat, Rounding};
 
 /// All-reduce topology (paper §4.2 discusses the choice).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Topology {
     /// Flat ring all-reduce over all `p` workers.
+    #[default]
     Ring,
     /// Hierarchical all-reduce with groups of `group_size` workers.
     Hierarchical { group_size: usize },
@@ -44,6 +45,151 @@ impl Topology {
                 4 * (k - 1) + 2 * (world / k - 1)
             }
         }
+    }
+
+    /// Build the [`Collective`] implementing this topology over `world`
+    /// workers — the bridge from the closed enum to the open trait layer.
+    pub fn collective(&self, world: usize) -> Box<dyn Collective> {
+        match *self {
+            Topology::Ring => Box::new(RingCollective::new(world)),
+            Topology::Hierarchical { group_size } => {
+                Box::new(HierarchicalCollective::new(world, group_size))
+            }
+        }
+    }
+}
+
+/// A pluggable all-reduce implementation over a fixed set of simulated
+/// workers — the open counterpart of the closed [`Topology`] enum.
+///
+/// A collective owns its world size and writes reduced results into
+/// caller-provided buffers, so a [`crate::sync::SyncSession`] can drive
+/// it step after step without allocating element storage. Implementors
+/// must emulate the summation *order* and operand precision of the real
+/// schedule they model (see the module docs): given that, results are
+/// bit-identical to a real cluster running the same schedule.
+pub trait Collective {
+    /// Short human name (bench/report labels).
+    fn name(&self) -> &'static str;
+    /// Number of data-parallel workers.
+    fn world_size(&self) -> usize;
+    /// Latency-bound steps of one message through this collective (used
+    /// for fused-message accounting).
+    fn steps_per_message(&self) -> usize;
+    /// Sum-reduce `contribs` (one tensor per worker) elementwise into
+    /// `out`, in the wire precision and summation order of the schedule.
+    fn all_reduce_sum_into(
+        &self,
+        contribs: &[Vec<f32>],
+        out: &mut [f32],
+        opts: &ReduceOptions,
+    ) -> ReduceStats;
+    /// Max-reduce small integer payloads into `out` — the 1-byte-per-layer
+    /// exponent agreement phase (APS Algorithm 1 line 4). Max is
+    /// order-insensitive, so no precision emulation is needed; all
+    /// implementations account it as a ring over 1-byte entries, matching
+    /// the pre-trait `SimCluster::all_reduce_max_i8`.
+    fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats;
+}
+
+/// Shared i8 max-reduce body (values + ring traffic accounting).
+fn max_i8_into(contribs: &[Vec<i8>], out: &mut [i8], world: usize) -> ReduceStats {
+    assert_eq!(contribs.len(), world, "one contribution per worker");
+    let n = contribs[0].len();
+    assert_eq!(out.len(), n);
+    out.fill(i8::MIN);
+    for c in contribs {
+        assert_eq!(c.len(), n);
+        for (o, &v) in out.iter_mut().zip(c) {
+            *o = (*o).max(v);
+        }
+    }
+    ReduceStats {
+        bytes_per_worker: 2 * n as u64 * (world as u64 - 1) / world as u64,
+        steps: 2 * (world - 1),
+    }
+}
+
+/// Flat ring all-reduce over all workers ([`ring`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RingCollective {
+    world: usize,
+}
+
+impl RingCollective {
+    pub fn new(world: usize) -> Self {
+        assert!(world >= 1);
+        RingCollective { world }
+    }
+}
+
+impl Collective for RingCollective {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+    fn world_size(&self) -> usize {
+        self.world
+    }
+    fn steps_per_message(&self) -> usize {
+        Topology::Ring.steps(self.world)
+    }
+    fn all_reduce_sum_into(
+        &self,
+        contribs: &[Vec<f32>],
+        out: &mut [f32],
+        opts: &ReduceOptions,
+    ) -> ReduceStats {
+        assert_eq!(contribs.len(), self.world, "one contribution per worker");
+        if self.world == 1 {
+            out.copy_from_slice(&contribs[0]);
+            return ReduceStats::default();
+        }
+        ring::all_reduce_into(contribs, out, *opts)
+    }
+    fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
+        max_i8_into(contribs, out, self.world)
+    }
+}
+
+/// Grouped (hierarchical) all-reduce ([`hierarchical`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchicalCollective {
+    world: usize,
+    group_size: usize,
+}
+
+impl HierarchicalCollective {
+    pub fn new(world: usize, group_size: usize) -> Self {
+        assert!(world >= 1 && group_size >= 1);
+        HierarchicalCollective { world, group_size }
+    }
+}
+
+impl Collective for HierarchicalCollective {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+    fn world_size(&self) -> usize {
+        self.world
+    }
+    fn steps_per_message(&self) -> usize {
+        Topology::Hierarchical { group_size: self.group_size }.steps(self.world)
+    }
+    fn all_reduce_sum_into(
+        &self,
+        contribs: &[Vec<f32>],
+        out: &mut [f32],
+        opts: &ReduceOptions,
+    ) -> ReduceStats {
+        assert_eq!(contribs.len(), self.world, "one contribution per worker");
+        if self.world == 1 {
+            out.copy_from_slice(&contribs[0]);
+            return ReduceStats::default();
+        }
+        hierarchical::all_reduce_into(contribs, self.group_size, out, *opts)
+    }
+    fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
+        max_i8_into(contribs, out, self.world)
     }
 }
 
@@ -65,6 +211,13 @@ impl ReduceOptions {
     }
     pub fn low_precision(fmt: FpFormat) -> Self {
         ReduceOptions { fmt, mode: Rounding::NearestEven, kahan: false }
+    }
+}
+
+impl Default for ReduceOptions {
+    /// FP32 wire, round-to-nearest-even, no compensation.
+    fn default() -> Self {
+        ReduceOptions::fp32()
     }
 }
 
@@ -118,20 +271,8 @@ impl SimCluster {
     /// phase of APS (Algorithm 1 line 4). Max is order-insensitive, so no
     /// precision emulation is needed; traffic is 1 byte per entry.
     pub fn all_reduce_max_i8(&self, contribs: &[Vec<i8>]) -> (Vec<i8>, ReduceStats) {
-        assert_eq!(contribs.len(), self.world_size);
-        let n = contribs[0].len();
-        let mut out = vec![i8::MIN; n];
-        for c in contribs {
-            assert_eq!(c.len(), n);
-            for (o, &v) in out.iter_mut().zip(c) {
-                *o = (*o).max(v);
-            }
-        }
-        let stats = ReduceStats {
-            bytes_per_worker: 2 * n as u64 * (self.world_size as u64 - 1)
-                / self.world_size as u64,
-            steps: 2 * (self.world_size - 1),
-        };
+        let mut out = vec![i8::MIN; contribs[0].len()];
+        let stats = max_i8_into(contribs, &mut out, self.world_size);
         (out, stats)
     }
 }

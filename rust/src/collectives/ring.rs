@@ -16,11 +16,26 @@
 use super::{fold_step, ReduceOptions, ReduceStats};
 use crate::util::par;
 
-/// Run ring all-reduce over per-worker contributions.
+/// Run ring all-reduce over per-worker contributions, allocating the
+/// output (wrapper over [`all_reduce_into`]).
 pub fn all_reduce(contribs: &[Vec<f32>], opts: ReduceOptions) -> (Vec<f32>, ReduceStats) {
+    let mut out = vec![0.0f32; contribs[0].len()];
+    let stats = all_reduce_into(contribs, &mut out, opts);
+    (out, stats)
+}
+
+/// Ring all-reduce into a caller-provided buffer — the allocation-free
+/// variant behind [`crate::collectives::Collective`]. Only O(p) pointer
+/// bookkeeping is allocated per call — except with `opts.kahan`, whose
+/// per-chunk compensation vectors still total O(n) per call.
+pub fn all_reduce_into(
+    contribs: &[Vec<f32>],
+    out: &mut [f32],
+    opts: ReduceOptions,
+) -> ReduceStats {
     let p = contribs.len();
     let n = contribs[0].len();
-    let mut out = vec![0.0f32; n];
+    assert_eq!(out.len(), n);
 
     // Chunk boundaries: chunk c covers [bounds[c], bounds[c+1]).
     let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
@@ -28,7 +43,7 @@ pub fn all_reduce(contribs: &[Vec<f32>], opts: ReduceOptions) -> (Vec<f32>, Redu
     // Each chunk's fold is independent → parallelize over chunks.
     // Manual split (chunks are uneven when p ∤ n).
     let mut slices: Vec<&mut [f32]> = Vec::with_capacity(p);
-    let mut rest = out.as_mut_slice();
+    let mut rest = out;
     for c in 0..p {
         let len = bounds[c + 1] - bounds[c];
         let (head, tail) = rest.split_at_mut(len);
@@ -93,11 +108,10 @@ pub fn all_reduce(contribs: &[Vec<f32>], opts: ReduceOptions) -> (Vec<f32>, Redu
     // scaled by the wire width in bytes.
     let elt_bytes = wire_bytes(opts);
     let moved = 2 * (p as u64 - 1) * (n as u64) / p as u64;
-    let stats = ReduceStats {
+    ReduceStats {
         bytes_per_worker: moved * elt_bytes as u64,
         steps: 2 * (p - 1),
-    };
-    (out, stats)
+    }
 }
 
 /// Width of one element on the wire, rounded up to whole bytes (the paper

@@ -10,6 +10,7 @@ use crate::aps::{HybridSchedule, SyncMethod};
 use crate::collectives::Topology;
 use crate::cpd::FpFormat;
 use crate::optim::{LrSchedule, OptimizerKind};
+use crate::sync::StrategySpec;
 use crate::util::toml::TomlDoc;
 use crate::Result;
 use anyhow::{anyhow, Context};
@@ -27,7 +28,9 @@ pub struct ExperimentConfig {
     pub world_size: usize,
     pub topology: Topology,
 
-    pub method: SyncMethod,
+    /// The synchronization strategy, parsed by name from `sync.method`
+    /// (`fp32 | naive | loss_scaling | aps | ternary | topk`).
+    pub strategy: StrategySpec,
     pub kahan: bool,
     pub fp32_last_layer: bool,
     pub hybrid: Option<HybridSchedule>,
@@ -91,12 +94,32 @@ impl ExperimentConfig {
             .map(|v| v.as_i64())
             .transpose()?
             .unwrap_or(0) as i32;
-        let method = match doc.get("sync", "method")?.as_str()? {
-            "fp32" => SyncMethod::Fp32,
-            "naive" => SyncMethod::Naive { fmt },
-            "loss_scaling" => SyncMethod::LossScaling { fmt, factor_exp: loss_scale_exp },
-            "aps" => SyncMethod::Aps { fmt },
-            other => return Err(anyhow!("unknown sync.method {other:?}")),
+        let topk_frac = doc
+            .opt("sync", "topk_frac")
+            .map(|v| v.as_f32())
+            .transpose()?
+            .unwrap_or(0.25);
+        let ternary_seed = doc
+            .opt("sync", "ternary_seed")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .map(|s| s as u64)
+            .unwrap_or(seed);
+        let strategy = match doc.get("sync", "method")?.as_str()? {
+            "fp32" => StrategySpec::Fp32,
+            "naive" => StrategySpec::Naive { fmt },
+            "loss_scaling" => StrategySpec::LossScaling { fmt, factor_exp: loss_scale_exp },
+            "aps" => StrategySpec::Aps { fmt },
+            "ternary" => StrategySpec::Ternary { seed: ternary_seed },
+            "topk" => {
+                if topk_frac <= 0.0 || topk_frac > 1.0 {
+                    return Err(anyhow!("sync.topk_frac must be in (0, 1], got {topk_frac}"));
+                }
+                StrategySpec::TopK { frac: topk_frac }
+            }
+            other => return Err(anyhow!(
+                "unknown sync.method {other:?} (fp32|naive|loss_scaling|aps|ternary|topk)"
+            )),
         };
         let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let fp32_last_layer = doc
@@ -110,7 +133,12 @@ impl ExperimentConfig {
             .transpose()?
             .unwrap_or(0);
         let hybrid = if hybrid_fp32_epochs > 0 {
-            Some(HybridSchedule { fp32_epochs: hybrid_fp32_epochs, low: method })
+            // `low` mirrors the strategy when it has a legacy method name;
+            // for codecs outside the closed enum the trainer's strategy
+            // override carries the real low-precision codec and `low` is
+            // never consulted.
+            let low = strategy.as_sync_method().unwrap_or(SyncMethod::Fp32);
+            Some(HybridSchedule { fp32_epochs: hybrid_fp32_epochs, low })
         } else {
             None
         };
@@ -179,7 +207,7 @@ impl ExperimentConfig {
             seed,
             world_size,
             topology,
-            method,
+            strategy,
             kahan,
             fp32_last_layer,
             hybrid,
@@ -226,7 +254,7 @@ optimizer = "nesterov"
         let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.topology, Topology::Hierarchical { group_size: 4 });
-        assert_eq!(cfg.method, SyncMethod::Aps { fmt: FpFormat::E4M3 });
+        assert_eq!(cfg.strategy, StrategySpec::Aps { fmt: FpFormat::E4M3 });
         assert!(cfg.kahan);
         assert!(cfg.hybrid.is_none());
         match cfg.optimizer {
@@ -253,7 +281,7 @@ steps_per_epoch = 2
         let cfg = ExperimentConfig::from_toml_str(minimal).unwrap();
         assert_eq!(cfg.seed, 42);
         assert_eq!(cfg.topology, Topology::Ring);
-        assert_eq!(cfg.method, SyncMethod::Fp32);
+        assert_eq!(cfg.strategy, StrategySpec::Fp32);
         assert_eq!(cfg.eval_examples, 256);
         assert!(!cfg.track_roundoff);
     }
@@ -284,8 +312,27 @@ steps_per_epoch = 2
             .replace("method = \"aps\"", "method = \"loss_scaling\"\nloss_scale_exp = 12");
         let cfg = ExperimentConfig::from_toml_str(&ls).unwrap();
         assert_eq!(
-            cfg.method,
-            SyncMethod::LossScaling { fmt: FpFormat::E4M3, factor_exp: 12 }
+            cfg.strategy,
+            StrategySpec::LossScaling { fmt: FpFormat::E4M3, factor_exp: 12 }
         );
+    }
+
+    #[test]
+    fn ternary_and_topk_parse_by_name() {
+        let t = SAMPLE.replace("method = \"aps\"", "method = \"ternary\"");
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        // ternary seed defaults to the experiment seed
+        assert_eq!(cfg.strategy, StrategySpec::Ternary { seed: 7 });
+
+        let t = SAMPLE.replace("method = \"aps\"", "method = \"ternary\"\nternary_seed = 99");
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        assert_eq!(cfg.strategy, StrategySpec::Ternary { seed: 99 });
+
+        let k = SAMPLE.replace("method = \"aps\"", "method = \"topk\"\ntopk_frac = 0.1");
+        let cfg = ExperimentConfig::from_toml_str(&k).unwrap();
+        assert_eq!(cfg.strategy, StrategySpec::TopK { frac: 0.1 });
+
+        let bad = SAMPLE.replace("method = \"aps\"", "method = \"topk\"\ntopk_frac = 1.5");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
     }
 }

@@ -2,12 +2,12 @@
 
 use super::Workload;
 use crate::aps::{self, HybridSchedule, SyncOptions};
-use crate::collectives::SimCluster;
 use crate::cpd::avg_roundoff_error;
 use crate::data::shard_range;
 use crate::metrics::{top1_accuracy, SegmentationMetrics, Series};
 use crate::optim::{LrSchedule, Optimizer, OptimizerKind};
 use crate::runtime::Model;
+use crate::sync::{StrategySpec, SyncSession, SyncSessionBuilder};
 use crate::Result;
 use anyhow::ensure;
 use std::time::Instant;
@@ -17,7 +17,12 @@ use std::time::Instant;
 pub struct TrainerSetup {
     pub world_size: usize,
     pub sync: SyncOptions,
-    /// Optional hybrid-precision schedule (overrides `sync.method` per epoch).
+    /// Strategy override: when set, it supersedes `sync.method` (this is
+    /// how codecs outside the closed `SyncMethod` enum — ternary, top-k,
+    /// or anything user-built — reach the trainer).
+    pub strategy: Option<StrategySpec>,
+    /// Optional hybrid-precision schedule (FP32 for the first
+    /// `fp32_epochs`, the configured strategy afterwards).
     pub hybrid: Option<HybridSchedule>,
     pub optimizer: OptimizerKind,
     pub schedule: LrSchedule,
@@ -37,6 +42,7 @@ impl TrainerSetup {
         TrainerSetup {
             world_size,
             sync,
+            strategy: None,
             hybrid: None,
             optimizer: OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false },
             schedule: LrSchedule::Constant { lr: 0.05 },
@@ -93,7 +99,13 @@ pub struct Trainer<'m> {
     model: &'m Model,
     setup: TrainerSetup,
     workload: Workload,
-    cluster: SimCluster,
+    /// The long-lived synchronization pipeline (strategy + collective +
+    /// reusable wire buffers).
+    session: SyncSession,
+    /// The strategy in effect outside the hybrid schedule's FP32 phase.
+    low_spec: StrategySpec,
+    /// What the session currently runs (tracks hybrid epoch switches).
+    current_spec: StrategySpec,
     pub params: Vec<Vec<f32>>,
     optimizer: Optimizer,
 }
@@ -107,8 +119,19 @@ impl<'m> Trainer<'m> {
         );
         let params = model.initial_params()?;
         let optimizer = Optimizer::new(setup.optimizer, &model.spec.param_lens());
-        let cluster = SimCluster::new(setup.world_size);
-        Ok(Trainer { model, setup, workload, cluster, params, optimizer })
+        // The strategy override wins; otherwise the hybrid schedule's low
+        // method, otherwise the plain sync method (legacy semantics).
+        let low_spec = setup.strategy.unwrap_or_else(|| match &setup.hybrid {
+            Some(h) => StrategySpec::from(h.low),
+            None => StrategySpec::from(setup.sync.method),
+        });
+        // The hybrid warm-epoch rule lives in step() alone; it swaps the
+        // strategy before the first sync if epoch 0 is an FP32 epoch.
+        let current_spec = low_spec;
+        let session = SyncSessionBuilder::from_sync_options(setup.world_size, &setup.sync)
+            .spec(current_spec)
+            .build();
+        Ok(Trainer { model, setup, workload, session, low_spec, current_spec, params, optimizer })
     }
 
     pub fn spec(&self) -> &crate::runtime::ModelSpec {
@@ -188,21 +211,27 @@ impl<'m> Trainer<'m> {
     }
 
     /// One full training step: grads → sync → optimizer. Returns the mean
-    /// worker loss. `epoch` selects the hybrid-precision method.
+    /// worker loss. `epoch` selects the hybrid-precision strategy.
     pub fn step(&mut self, epoch: usize, step: usize, out: &mut TrainOutcome) -> Result<f32> {
         let (loss, worker_grads) = self.worker_grads(step)?;
 
-        let mut sync = self.setup.sync;
-        if let Some(h) = &self.setup.hybrid {
-            sync.method = h.method_at(epoch);
+        // Hybrid schedule: FP32 strategy for the warm epochs, the
+        // configured strategy afterwards; swapping keeps all buffers.
+        let desired = match &self.setup.hybrid {
+            Some(h) if epoch < h.fp32_epochs => StrategySpec::Fp32,
+            _ => self.low_spec,
+        };
+        if desired != self.current_spec {
+            self.session.set_strategy(desired.build());
+            self.current_spec = desired;
         }
-        let (reduced, report) = aps::synchronize(&self.cluster, &worker_grads, &sync);
+        let (reduced, report) = self.session.step(&worker_grads);
 
         if self.setup.track_roundoff {
-            let exact = aps::reduce_exact(&worker_grads, sync.average);
+            let exact = aps::reduce_exact(&worker_grads, self.setup.sync.average);
             let mut err_sum = 0.0;
             let mut elems = 0usize;
-            for (e, r) in exact.iter().zip(&reduced) {
+            for (e, r) in exact.iter().zip(reduced) {
                 err_sum += avg_roundoff_error(e, r) * e.len() as f64;
                 elems += e.len();
             }
@@ -215,7 +244,7 @@ impl<'m> Trainer<'m> {
         // Global step → fractional epoch for the LR schedule.
         let epoch_f = step as f32 / self.setup.steps_per_epoch.max(1) as f32;
         let lr = self.setup.schedule.at(epoch_f);
-        self.optimizer.step(&mut self.params, &reduced, lr);
+        self.optimizer.step(&mut self.params, reduced, lr);
 
         if !loss.is_finite() {
             out.diverged = true;

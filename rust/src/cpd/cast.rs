@@ -18,10 +18,11 @@
 use super::format::FpFormat;
 
 /// Rounding mode used when casting into the low-precision format.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Rounding {
     /// Round to nearest, ties to even — the paper's choice (§4) and the
     /// mode used by every experiment in this repository.
+    #[default]
     NearestEven,
     /// Truncate toward zero (for comparison studies).
     TowardZero,
@@ -171,6 +172,21 @@ pub fn quantize_shifted_slice(
     mode: Rounding,
 ) -> Vec<f32> {
     let mut out = vec![0.0; xs.len()];
+    quantize_shifted_slice_into(xs, factor_exp, fmt, mode, &mut out);
+    out
+}
+
+/// [`quantize_shifted_slice`] into a caller-provided buffer — the
+/// allocation-free variant [`crate::sync::SyncSession`] uses on the wire
+/// path. Bit-identical to the allocating version.
+pub fn quantize_shifted_slice_into(
+    xs: &[f32],
+    factor_exp: i32,
+    fmt: FpFormat,
+    mode: Rounding,
+    out: &mut [f32],
+) {
+    assert_eq!(xs.len(), out.len());
     // Hoist the mode match out of the element loop; on multi-core hosts
     // chunk across threads (pure elementwise work), on single-core run
     // the direct loop (the closure/thread plumbing alone costs ~2×).
@@ -197,11 +213,10 @@ pub fn quantize_shifted_slice(
         }
     };
     if crate::util::par::num_threads() > 1 && xs.len() >= crate::util::par::PAR_THRESHOLD {
-        crate::util::par::par_chunks_mut(&mut out, crate::util::par::PAR_THRESHOLD, run);
+        crate::util::par::par_chunks_mut(out, crate::util::par::PAR_THRESHOLD, run);
     } else {
-        run(0, &mut out);
+        run(0, out);
     }
-    out
 }
 
 /// Quantize a slice elementwise, allocating the output.

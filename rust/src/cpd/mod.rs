@@ -24,8 +24,9 @@ pub mod gemm;
 
 pub use accum::{KahanAccumulator, LowPrecisionAccumulator};
 pub use cast::{
-    ceil_log2_abs, quantize, quantize_shifted, quantize_shifted_slice, quantize_slice,
-    quantize_slice_inplace, quantize_slice_into, Rounding,
+    ceil_log2_abs, quantize, quantize_shifted, quantize_shifted_slice,
+    quantize_shifted_slice_into, quantize_slice, quantize_slice_inplace, quantize_slice_into,
+    Rounding,
 };
 pub use error::{avg_roundoff_error, max_roundoff_error};
 pub use format::FpFormat;

@@ -8,12 +8,19 @@
 //!   substrate: arbitrary `(exp_bits, man_bits)` floating-point formats,
 //!   bit-exact round-to-nearest-even casts, low-precision accumulation,
 //!   Kahan summation, and low-precision GEMM (paper §5).
-//! * [`collectives`] — a simulated N-worker cluster with ring and
-//!   hierarchical all-reduce whose reduction *order* and operand precision
-//!   are faithfully emulated (paper §4.2, Tables 8–9).
-//! * [`aps`] — Algorithm 1: layer-wise automatic power-of-two scaling for
-//!   low-precision gradient communication, plus the loss-scaling and
-//!   no-scaling baselines (paper §3).
+//! * [`collectives`] — a simulated N-worker cluster whose reduction
+//!   *order* and operand precision are faithfully emulated (paper §4.2,
+//!   Tables 8–9). Topologies are pluggable behind the
+//!   [`collectives::Collective`] trait (ring and hierarchical in-tree).
+//! * [`sync`] — the gradient-synchronization layer: a pluggable
+//!   [`sync::SyncStrategy`] codec trait (prepare → encode → reduce →
+//!   decode) and a buffer-reusing [`sync::SyncSession`] that owns one
+//!   strategy, one collective, and all hot-path scratch. The paper's four
+//!   methods are strategy impls; TernGrad-style ternarization and top-k
+//!   sparsification ship as net-new codecs.
+//! * [`aps`] — the paper-level method vocabulary ([`aps::SyncMethod`],
+//!   Algorithm 1 helpers, [`aps::SyncReport`]) and the deprecated
+//!   `aps::synchronize` shim.
 //! * [`optim`] — momentum SGD, Nesterov, LARS, LR schedules (paper §4.1).
 //! * [`data`] — deterministic synthetic datasets standing in for CIFAR-10,
 //!   cityscapes and a token corpus (see DESIGN.md §3 substitutions).
@@ -22,6 +29,34 @@
 //! * [`coordinator`] — the distributed-training driver tying it together.
 //! * [`perfmodel`] — the α–β communication cost model (paper Fig 11).
 //! * [`metrics`] — accuracy / mIoU / histograms / round-off error (Eq. 5).
+//!
+//! ## Migrating from `aps::synchronize`
+//!
+//! `aps::synchronize(&cluster, &grads, &opts)` is deprecated (kept for
+//! one release as a shim). It allocated every wire buffer, the output
+//! tensors and the report on each call; the replacement owns them across
+//! steps:
+//!
+//! ```
+//! use aps_cpd::aps::{SyncMethod, SyncOptions};
+//! use aps_cpd::sync::SyncSessionBuilder;
+//!
+//! let opts = SyncOptions::new(SyncMethod::Fp32);
+//! // once, at trainer construction:
+//! let mut session = SyncSessionBuilder::from_sync_options(4, &opts).build();
+//! // every training step:
+//! let grads = vec![vec![vec![0.5f32; 16]]; 4];
+//! let (reduced, report) = session.step(&grads);
+//! assert_eq!(reduced.len(), 1);
+//! assert!(!report.any_overflow());
+//! ```
+//!
+//! New codecs implement [`sync::SyncStrategy`] and plug in via
+//! [`sync::SyncSessionBuilder::strategy`]; new topologies implement
+//! [`collectives::Collective`] and plug in via
+//! [`sync::SyncSessionBuilder::collective`]. Configs name built-in
+//! strategies (`fp32 | naive | loss_scaling | aps | ternary | topk`)
+//! through [`sync::StrategySpec`].
 
 pub mod aps;
 pub mod collectives;
@@ -33,6 +68,7 @@ pub mod metrics;
 pub mod optim;
 pub mod perfmodel;
 pub mod runtime;
+pub mod sync;
 pub mod util;
 
 /// Crate-wide result type.

@@ -60,12 +60,17 @@ fn train(args: &Args) -> Result<()> {
         model.spec.batch
     );
 
-    let sync = SyncOptions::new(cfg.method)
+    // The legacy SyncOptions.method mirrors the strategy when it has a
+    // closed-enum name; the strategy override below is authoritative and
+    // also carries codecs the enum cannot name (ternary, topk).
+    let method = cfg.strategy.as_sync_method().unwrap_or(SyncMethod::Fp32);
+    let sync = SyncOptions::new(method)
         .with_topology(cfg.topology)
         .with_kahan(cfg.kahan)
         .with_fp32_last_layer(cfg.fp32_last_layer);
 
     let mut setup = TrainerSetup::new(cfg.world_size, sync);
+    setup.strategy = Some(cfg.strategy);
     setup.hybrid = cfg.hybrid;
     setup.optimizer = cfg.optimizer;
     setup.schedule = cfg.schedule.clone();

@@ -16,6 +16,12 @@ use crate::Result;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::path::{Path, PathBuf};
 
+#[doc(hidden)]
+pub mod xla_stub;
+// The PJRT seam: this module is written against the real `xla` crate's
+// API; offline builds alias it to the in-tree stub (see xla_stub docs).
+use self::xla_stub as xla;
+
 /// What a model's eval artifact returns.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EvalOutput {

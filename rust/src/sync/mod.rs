@@ -1,0 +1,319 @@
+//! The pluggable gradient-synchronization layer.
+//!
+//! The paper treats APS as one point in an open family of low-precision
+//! gradient-synchronization codecs (FP32, naive cast, loss scaling, APS,
+//! hybrid — and beyond: TernGrad, Deep Gradient Compression, …). This
+//! module is the extension point that makes the family open:
+//!
+//! * [`SyncStrategy`] — a codec: `prepare` (agree on per-layer scale
+//!   factors across workers), `encode` (one worker's layer → wire
+//!   values), `decode` (reduced wire values → gradient scale), plus
+//!   [`SyncStrategy::wire_format`] / [`SyncStrategy::extra_bytes`] for
+//!   traffic accounting. The four paper methods are
+//!   [`strategies::Fp32Strategy`], [`strategies::NaiveStrategy`],
+//!   [`strategies::LossScalingStrategy`] and [`strategies::ApsStrategy`];
+//!   [`strategies::TernaryStrategy`] (TernGrad-style) and
+//!   [`strategies::TopKStrategy`] (sparsification) prove extensibility.
+//! * [`crate::collectives::Collective`] — a pluggable all-reduce
+//!   (ring / hierarchical today), consumed by strategies and the session.
+//! * [`SyncSession`] — owns one strategy, one collective and all scratch
+//!   buffers (wire tensors, exponent vectors, per-layer reports);
+//!   [`SyncSession::step`] synchronizes one training step's gradients
+//!   with no per-step element-storage allocation. Build it with
+//!   [`SyncSessionBuilder`].
+//!
+//! The legacy free function `aps::synchronize` survives as a deprecated
+//! shim over a throwaway session; `aps::legacy::synchronize` keeps the
+//! pre-trait implementation for the bit-identity equivalence suite.
+
+pub mod session;
+pub mod strategies;
+
+pub use crate::aps::{LayerReport, SyncReport};
+pub use session::{SyncSession, SyncSessionBuilder};
+pub use strategies::{
+    ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, TernaryStrategy, TopKStrategy,
+};
+
+use crate::aps::SyncMethod;
+use crate::collectives::{Collective, ReduceStats};
+use crate::cpd::{FpFormat, Rounding};
+
+/// Borrowed view of every worker's per-layer gradients for one step
+/// (`grads[w][l]` = worker `w`'s gradient tensor for layer `l`).
+pub struct GradView<'a> {
+    workers: &'a [Vec<Vec<f32>>],
+}
+
+impl<'a> GradView<'a> {
+    /// Wrap worker-major gradients, checking all workers agree on the
+    /// layer count and every layer's length (codecs and the session size
+    /// wire buffers from worker 0, so ragged inputs must fail loudly
+    /// here, as the legacy reduce's assert did).
+    pub fn new(workers: &'a [Vec<Vec<f32>>]) -> Self {
+        assert!(!workers.is_empty(), "need at least one worker");
+        let layers = workers[0].len();
+        assert!(workers.iter().all(|g| g.len() == layers), "ragged layer counts");
+        for l in 0..layers {
+            let n = workers[0][l].len();
+            assert!(
+                workers.iter().all(|g| g[l].len() == n),
+                "ragged layer lengths at layer {l}"
+            );
+        }
+        GradView { workers }
+    }
+
+    pub fn world(&self) -> usize {
+        self.workers.len()
+    }
+    pub fn num_layers(&self) -> usize {
+        self.workers[0].len()
+    }
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.workers[0][layer].len()
+    }
+    /// Worker `w`'s gradient for `layer`.
+    pub fn layer_of(&self, w: usize, layer: usize) -> &'a [f32] {
+        &self.workers[w][layer]
+    }
+    /// All worker tensors for use as collective contributions.
+    pub fn workers(&self) -> &'a [Vec<Vec<f32>>] {
+        self.workers
+    }
+}
+
+/// Per-layer power-of-two factors agreed in a strategy's prepare phase,
+/// plus the agreement scratch (owned by the session, reused every step).
+#[derive(Debug, Default)]
+pub struct Factors {
+    /// Per-layer factor exponent (the shift APS/loss-scaling applies, or
+    /// the scale exponent of a ternary codec). Zero for unscaled codecs.
+    pub(crate) exps: Vec<i32>,
+    /// Per-worker × per-layer i8 contributions to the exponent max-reduce.
+    pub(crate) i8_contribs: Vec<Vec<i8>>,
+    /// Reduced per-layer maxima.
+    pub(crate) i8_max: Vec<i8>,
+}
+
+impl Factors {
+    /// The agreed factor exponent for `layer`.
+    pub fn exp(&self, layer: usize) -> i32 {
+        self.exps[layer]
+    }
+    /// All per-layer factor exponents.
+    pub fn exps(&self) -> &[i32] {
+        &self.exps
+    }
+
+    /// Reset to `num_layers` zeroed factors (reusing storage).
+    pub(crate) fn reset(&mut self, num_layers: usize) {
+        self.exps.clear();
+        self.exps.resize(num_layers, 0);
+    }
+
+    /// Size the i8 agreement scratch for `world × num_layers`.
+    pub(crate) fn ensure_i8(&mut self, world: usize, num_layers: usize) {
+        self.i8_contribs.resize(world, Vec::new());
+        for c in &mut self.i8_contribs {
+            c.clear();
+            c.resize(num_layers, 0);
+        }
+        self.i8_max.clear();
+        self.i8_max.resize(num_layers, i8::MIN);
+    }
+}
+
+/// Everything [`SyncStrategy::encode`] / [`SyncStrategy::decode`] need to
+/// know about the layer being processed.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCtx {
+    /// Layer index and total layer count.
+    pub layer: usize,
+    pub num_layers: usize,
+    /// Worker whose gradient is being encoded (encode only).
+    pub worker: usize,
+    /// Number of data-parallel workers.
+    pub world: usize,
+    /// The factor exponent agreed for this layer (0 when the layer's wire
+    /// format is FP32 — e.g. under the fp32-last-layer policy).
+    pub factor_exp: i32,
+    /// The wire format for *this* layer (fp32-last-layer already applied).
+    pub fmt: FpFormat,
+    /// True when the fp32-last-layer policy protects this layer: codecs
+    /// must send it dense at full precision. Explicit because FP32-wire
+    /// codecs (e.g. top-k) cannot infer the policy from `fmt` alone.
+    pub fp32_passthrough: bool,
+    /// Rounding for wire casts.
+    pub rounding: Rounding,
+    /// Whether the session divides the reduced sum by the world size.
+    pub average: bool,
+    /// Monotone step counter (seeds stochastic codecs deterministically).
+    pub step: u64,
+}
+
+/// A gradient-synchronization codec.
+///
+/// A strategy is pure policy: it never owns communication or reduction
+/// buffers (the [`SyncSession`] does) and talks to the network only via
+/// the [`Collective`] handed into [`SyncStrategy::prepare`]. Methods take
+/// `&mut self` so implementations may keep internal scratch (e.g. the
+/// top-k selection buffer).
+pub trait SyncStrategy {
+    /// Short human name (config/report/bench labels).
+    fn name(&self) -> &'static str;
+
+    /// The wire format gradient payloads travel (and partial sums are
+    /// re-quantized) in. `FP32` means the codec is full-precision.
+    fn wire_format(&self) -> FpFormat;
+
+    /// Phase 1: agree on per-layer factors across workers, writing them
+    /// into `factors` (already reset to zeros) and returning the wire
+    /// traffic of the agreement. The default needs no agreement.
+    fn prepare(
+        &mut self,
+        grads: &GradView,
+        collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        let _ = (grads, collective, factors);
+        ReduceStats::default()
+    }
+
+    /// Phase 2: encode one worker's layer gradient into wire values
+    /// (`out.len() == src.len()`; every element must be written).
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]);
+
+    /// Phase 3: transform the reduced wire values back to gradient scale
+    /// in place (undo the factor shift, apply averaging).
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx);
+
+    /// Extra wire bytes per synchronization beyond the payload and
+    /// prepare phases (e.g. a per-layer scalar broadcast). Default: none.
+    fn extra_bytes(&self, num_layers: usize) -> u64 {
+        let _ = num_layers;
+        0
+    }
+}
+
+/// Undo the power-of-two shift and apply data-parallel averaging —
+/// bit-identical to the pre-trait `aps::synchronize` epilogue (f64
+/// arithmetic, single rounding back to f32).
+pub(crate) fn unscale_in_place(xs: &mut [f32], factor_exp: i32, world: usize, average: bool) {
+    let unscale = -(factor_exp as i64) as i32;
+    let div = if average { world as f64 } else { 1.0 };
+    let m = (unscale as f64).exp2() / div;
+    for v in xs.iter_mut() {
+        *v = (*v as f64 * m) as f32;
+    }
+}
+
+/// A buildable description of a built-in strategy — what configs and CLI
+/// flags parse into. The *open* extension point is
+/// [`SyncSessionBuilder::strategy`], which accepts any boxed
+/// [`SyncStrategy`]; this enum only enumerates the codecs shipped in-tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StrategySpec {
+    /// Full-precision baseline.
+    Fp32,
+    /// Low-precision cast, no scaling.
+    Naive { fmt: FpFormat },
+    /// One global hand-chosen power-of-two factor.
+    LossScaling { fmt: FpFormat, factor_exp: i32 },
+    /// Auto-Precision Scaling (Algorithm 1).
+    Aps { fmt: FpFormat },
+    /// TernGrad-style stochastic ternarization.
+    Ternary { seed: u64 },
+    /// Top-k magnitude sparsification (keep the largest `frac` share).
+    TopK { frac: f32 },
+}
+
+impl StrategySpec {
+    /// Instantiate the strategy this spec describes.
+    pub fn build(&self) -> Box<dyn SyncStrategy> {
+        match *self {
+            StrategySpec::Fp32 => Box::new(Fp32Strategy),
+            StrategySpec::Naive { fmt } => Box::new(NaiveStrategy::new(fmt)),
+            StrategySpec::LossScaling { fmt, factor_exp } => {
+                Box::new(LossScalingStrategy::new(fmt, factor_exp))
+            }
+            StrategySpec::Aps { fmt } => Box::new(ApsStrategy::new(fmt)),
+            StrategySpec::Ternary { seed } => Box::new(TernaryStrategy::new(seed)),
+            StrategySpec::TopK { frac } => Box::new(TopKStrategy::new(frac)),
+        }
+    }
+
+    /// The legacy closed-enum method, when this spec has one.
+    pub fn as_sync_method(&self) -> Option<SyncMethod> {
+        match *self {
+            StrategySpec::Fp32 => Some(SyncMethod::Fp32),
+            StrategySpec::Naive { fmt } => Some(SyncMethod::Naive { fmt }),
+            StrategySpec::LossScaling { fmt, factor_exp } => {
+                Some(SyncMethod::LossScaling { fmt, factor_exp })
+            }
+            StrategySpec::Aps { fmt } => Some(SyncMethod::Aps { fmt }),
+            StrategySpec::Ternary { .. } | StrategySpec::TopK { .. } => None,
+        }
+    }
+}
+
+impl From<SyncMethod> for StrategySpec {
+    fn from(m: SyncMethod) -> Self {
+        match m {
+            SyncMethod::Fp32 => StrategySpec::Fp32,
+            SyncMethod::Naive { fmt } => StrategySpec::Naive { fmt },
+            SyncMethod::LossScaling { fmt, factor_exp } => {
+                StrategySpec::LossScaling { fmt, factor_exp }
+            }
+            SyncMethod::Aps { fmt } => StrategySpec::Aps { fmt },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrips_legacy_methods() {
+        for m in [
+            SyncMethod::Fp32,
+            SyncMethod::Naive { fmt: FpFormat::E5M2 },
+            SyncMethod::LossScaling { fmt: FpFormat::E4M3, factor_exp: 7 },
+            SyncMethod::Aps { fmt: FpFormat::E3M0 },
+        ] {
+            let spec = StrategySpec::from(m);
+            assert_eq!(spec.as_sync_method(), Some(m));
+        }
+        assert_eq!(StrategySpec::Ternary { seed: 1 }.as_sync_method(), None);
+        assert_eq!(StrategySpec::TopK { frac: 0.25 }.as_sync_method(), None);
+    }
+
+    #[test]
+    fn grad_view_shape() {
+        let grads = vec![vec![vec![1.0f32; 4], vec![2.0; 2]]; 3];
+        let v = GradView::new(&grads);
+        assert_eq!(v.world(), 3);
+        assert_eq!(v.num_layers(), 2);
+        assert_eq!(v.layer_len(1), 2);
+        assert_eq!(v.layer_of(2, 0), &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged layer counts")]
+    fn grad_view_rejects_ragged() {
+        let grads = vec![vec![vec![1.0f32; 4]], vec![]];
+        let _ = GradView::new(&grads);
+    }
+
+    #[test]
+    fn unscale_matches_legacy_formula() {
+        let mut xs = vec![8.0f32, -2.0, 0.5];
+        unscale_in_place(&mut xs, 2, 4, true);
+        // 2^-2 / 4 = 1/16
+        assert_eq!(xs, vec![0.5, -0.125, 0.03125]);
+        let mut ys = vec![3.0f32];
+        unscale_in_place(&mut ys, 0, 8, false);
+        assert_eq!(ys, vec![3.0]);
+    }
+}

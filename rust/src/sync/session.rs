@@ -1,0 +1,376 @@
+//! [`SyncSession`] — the hot-path owner of one strategy, one collective,
+//! and every buffer gradient synchronization needs step after step.
+//!
+//! The pre-trait `aps::synchronize` free function re-allocated all wire
+//! tensors, the output tensors and the report on every call. A session
+//! allocates them once (growing to the largest layer on first use) and
+//! then runs [`SyncSession::step`] with no per-step element-storage
+//! allocation — only O(world) pointer bookkeeping inside the ring split.
+//! (Two acknowledged exceptions, tracked in ROADMAP.md: Kahan
+//! compensation vectors and hierarchical per-group partials still
+//! allocate inside the collective when those modes are enabled.)
+//! Reports and reduced gradients are returned by reference into
+//! session-owned storage; reusing a session yields bit-identical results
+//! to fresh calls (pinned by `rust/tests/strategy_layer.rs`).
+
+use super::{Factors, GradView, LayerCtx, StrategySpec, SyncStrategy};
+use crate::aps::{LayerReport, SyncOptions, SyncReport};
+use crate::collectives::{Collective, ReduceOptions, Topology};
+use crate::cpd::{FpFormat, Rounding};
+
+/// Builder for [`SyncSession`] (the `SyncOptions` knobs carried over,
+/// plus the strategy/collective plug points).
+pub struct SyncSessionBuilder {
+    world: usize,
+    strategy: Option<Box<dyn SyncStrategy>>,
+    topology: Topology,
+    collective: Option<Box<dyn Collective>>,
+    rounding: Rounding,
+    kahan: bool,
+    average: bool,
+    fp32_last_layer: bool,
+    fused: bool,
+}
+
+impl SyncSessionBuilder {
+    /// Start a builder for `world_size` workers. Defaults: FP32 strategy,
+    /// ring collective, round-to-nearest-even, averaging on, no Kahan, no
+    /// fp32-last-layer, unfused messages.
+    pub fn new(world_size: usize) -> Self {
+        assert!(world_size >= 1);
+        SyncSessionBuilder {
+            world: world_size,
+            strategy: None,
+            topology: Topology::Ring,
+            collective: None,
+            rounding: Rounding::NearestEven,
+            kahan: false,
+            average: true,
+            fp32_last_layer: false,
+            fused: false,
+        }
+    }
+
+    /// Carry every knob of a legacy [`SyncOptions`] over (the migration
+    /// path for pre-trait callers).
+    pub fn from_sync_options(world_size: usize, opts: &SyncOptions) -> Self {
+        SyncSessionBuilder::new(world_size)
+            .spec(StrategySpec::from(opts.method))
+            .with_topology(opts.topo)
+            .with_rounding(opts.rounding)
+            .with_kahan(opts.kahan)
+            .with_average(opts.average)
+            .with_fp32_last_layer(opts.fp32_last_layer)
+            .with_fused(opts.fused)
+    }
+
+    /// Plug in any strategy — the open extension point.
+    pub fn strategy(mut self, strategy: Box<dyn SyncStrategy>) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Use a built-in strategy described by `spec`.
+    pub fn spec(self, spec: StrategySpec) -> Self {
+        self.strategy(spec.build())
+    }
+
+    /// Plug in any collective (overrides [`Self::with_topology`]).
+    pub fn collective(mut self, collective: Box<dyn Collective>) -> Self {
+        self.collective = Some(collective);
+        self
+    }
+
+    /// Use the built-in collective for `topo`.
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topology = topo;
+        self
+    }
+
+    pub fn with_rounding(mut self, rounding: Rounding) -> Self {
+        self.rounding = rounding;
+        self
+    }
+
+    pub fn with_kahan(mut self, kahan: bool) -> Self {
+        self.kahan = kahan;
+        self
+    }
+
+    pub fn with_average(mut self, yes: bool) -> Self {
+        self.average = yes;
+        self
+    }
+
+    pub fn with_fp32_last_layer(mut self, yes: bool) -> Self {
+        self.fp32_last_layer = yes;
+        self
+    }
+
+    /// Lazy all-reduce: account all layers as one fused message.
+    pub fn with_fused(mut self, yes: bool) -> Self {
+        self.fused = yes;
+        self
+    }
+
+    pub fn build(self) -> SyncSession {
+        let world = self.world;
+        let collective =
+            self.collective.unwrap_or_else(|| self.topology.collective(world));
+        assert_eq!(collective.world_size(), world, "collective world size mismatch");
+        SyncSession {
+            strategy: self.strategy.unwrap_or_else(|| StrategySpec::Fp32.build()),
+            collective,
+            rounding: self.rounding,
+            kahan: self.kahan,
+            average: self.average,
+            fp32_last_layer: self.fp32_last_layer,
+            fused: self.fused,
+            factors: Factors::default(),
+            wire: Vec::new(),
+            reduced: Vec::new(),
+            report: SyncReport::default(),
+            steps_done: 0,
+        }
+    }
+}
+
+impl Default for SyncSessionBuilder {
+    /// Single-worker FP32 session (mostly useful in tests).
+    fn default() -> Self {
+        SyncSessionBuilder::new(1)
+    }
+}
+
+/// A long-lived gradient-synchronization pipeline: strategy + collective
+/// + reusable scratch. See the module docs.
+pub struct SyncSession {
+    strategy: Box<dyn SyncStrategy>,
+    collective: Box<dyn Collective>,
+    rounding: Rounding,
+    kahan: bool,
+    average: bool,
+    fp32_last_layer: bool,
+    fused: bool,
+    factors: Factors,
+    /// Per-worker wire buffers for the layer currently in flight
+    /// (capacity grows to the largest layer, then stays).
+    wire: Vec<Vec<f32>>,
+    /// Per-layer reduced gradients (the step output).
+    reduced: Vec<Vec<f32>>,
+    report: SyncReport,
+    steps_done: u64,
+}
+
+impl SyncSession {
+    /// Synchronize one training step's gradients (`grads[w][l]` = worker
+    /// `w`'s layer-`l` gradient). Returns the reduced per-layer gradients
+    /// and the step's [`SyncReport`], both borrowed from session storage
+    /// (valid until the next `step` call).
+    pub fn step(&mut self, grads: &[Vec<Vec<f32>>]) -> (&[Vec<f32>], &SyncReport) {
+        let view = GradView::new(grads);
+        let world = self.collective.world_size();
+        assert_eq!(view.world(), world, "one gradient set per worker");
+        let num_layers = view.num_layers();
+
+        // Reset the report in place (no reallocation in steady state).
+        self.report.layers.clear();
+        self.report.layers.resize(num_layers, LayerReport::default());
+        self.report.payload_bytes = 0;
+        self.report.exponent_bytes = 0;
+        self.report.steps = 0;
+        self.report.messages = if self.fused { 1 } else { num_layers };
+
+        // ---- Phase 1: agree on per-layer factors. ----------------------
+        self.factors.reset(num_layers);
+        let pstats =
+            self.strategy.prepare(&view, self.collective.as_ref(), &mut self.factors);
+        self.report.exponent_bytes = pstats.bytes_per_worker;
+        self.report.steps += pstats.steps;
+
+        // ---- Phase 2: encode, reduce, decode — layer by layer. ---------
+        self.wire.resize(world, Vec::new());
+        self.reduced.resize(num_layers, Vec::new());
+        let base_fmt = self.strategy.wire_format();
+
+        for l in 0..num_layers {
+            let n = view.layer_len(l);
+            let fp32_passthrough = self.fp32_last_layer && l == num_layers - 1;
+            let layer_fmt = if fp32_passthrough { FpFormat::FP32 } else { base_fmt };
+            let fe = if layer_fmt.is_fp32() { 0 } else { self.factors.exp(l) };
+            let mut ctx = LayerCtx {
+                layer: l,
+                num_layers,
+                worker: 0,
+                world,
+                factor_exp: fe,
+                fmt: layer_fmt,
+                fp32_passthrough,
+                rounding: self.rounding,
+                average: self.average,
+                step: self.steps_done,
+            };
+
+            let mut nonzero_in = 0usize;
+            let mut zero_out = 0usize;
+            let mut inf_out = 0usize;
+            for w in 0..world {
+                ctx.worker = w;
+                let src = view.layer_of(w, l);
+                let buf = &mut self.wire[w];
+                buf.resize(n, 0.0);
+                self.strategy.encode(src, &ctx, buf);
+                for (&x, &q) in src.iter().zip(self.wire[w].iter()) {
+                    if x != 0.0 {
+                        nonzero_in += 1;
+                        if q == 0.0 {
+                            zero_out += 1;
+                        }
+                    }
+                    if q.is_infinite() {
+                        inf_out += 1;
+                    }
+                }
+            }
+
+            let ropts = ReduceOptions { fmt: layer_fmt, mode: self.rounding, kahan: self.kahan };
+            let out = &mut self.reduced[l];
+            out.resize(n, 0.0);
+            let stats = self.collective.all_reduce_sum_into(&self.wire, out, &ropts);
+            self.strategy.decode(out, &ctx);
+
+            self.report.layers[l] = LayerReport {
+                factor_exp: fe,
+                underflow_frac: if nonzero_in == 0 {
+                    0.0
+                } else {
+                    zero_out as f64 / nonzero_in as f64
+                },
+                overflow_frac: inf_out as f64 / (n * world).max(1) as f64,
+                elements: n,
+            };
+            self.report.payload_bytes += stats.bytes_per_worker;
+            if !self.fused {
+                self.report.steps += stats.steps;
+            }
+        }
+        if self.fused {
+            // One fused message: pay the per-message step count once.
+            self.report.steps += self.collective.steps_per_message();
+        }
+        self.report.payload_bytes += self.strategy.extra_bytes(num_layers);
+        self.steps_done += 1;
+        (&self.reduced, &self.report)
+    }
+
+    /// Swap the strategy, keeping the collective and all scratch (the
+    /// hybrid-precision schedule's epoch switch).
+    pub fn set_strategy(&mut self, strategy: Box<dyn SyncStrategy>) {
+        self.strategy = strategy;
+    }
+
+    /// The last step's report (empty before the first step).
+    pub fn report(&self) -> &SyncReport {
+        &self.report
+    }
+
+    /// The last step's reduced per-layer gradients.
+    pub fn reduced(&self) -> &[Vec<f32>] {
+        &self.reduced
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.collective.world_size()
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    pub fn collective_name(&self) -> &'static str {
+        self.collective.name()
+    }
+
+    /// Whether the session divides reduced sums by the world size.
+    pub fn averages(&self) -> bool {
+        self.average
+    }
+
+    /// Steps synchronized so far.
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aps::SyncMethod;
+
+    fn grads(world: usize, layers: &[usize]) -> Vec<Vec<Vec<f32>>> {
+        (0..world)
+            .map(|w| {
+                layers
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &n)| {
+                        (0..n).map(|i| ((w * 31 + l * 7 + i) % 13) as f32 * 0.25 - 1.5).collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builder_defaults_and_knobs() {
+        let s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_rounding(Rounding::TowardZero)
+            .with_fused(true)
+            .build();
+        assert_eq!(s.world_size(), 4);
+        assert_eq!(s.strategy_name(), "aps");
+        assert_eq!(s.collective_name(), "ring");
+        let d = SyncSessionBuilder::default().build();
+        assert_eq!(d.world_size(), 1);
+        assert_eq!(d.strategy_name(), "fp32");
+    }
+
+    #[test]
+    fn fp32_session_averages_exactly_for_world_1() {
+        let g = grads(1, &[16]);
+        let mut s = SyncSessionBuilder::new(1).spec(StrategySpec::Fp32).build();
+        let (out, report) = s.step(&g);
+        assert_eq!(out[0], g[0][0]);
+        assert_eq!(report.payload_bytes, 0);
+        assert_eq!(report.messages, 1);
+    }
+
+    #[test]
+    fn session_reports_match_legacy_shape() {
+        let g = grads(8, &[64, 32]);
+        let mut s = SyncSessionBuilder::new(8)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .build();
+        let (_, report) = s.step(&g);
+        assert_eq!(report.layers.len(), 2);
+        assert_eq!(report.messages, 2);
+        assert!(report.exponent_bytes > 0, "APS pays the exponent phase");
+        assert!(report.payload_bytes > 0);
+        assert_eq!(s.steps_done(), 1);
+    }
+
+    #[test]
+    fn set_strategy_keeps_buffers_and_switches_codec() {
+        let g = grads(4, &[32]);
+        let mut s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Naive { fmt: FpFormat::E5M2 })
+            .build();
+        let _ = s.step(&g);
+        assert_eq!(s.strategy_name(), "naive");
+        s.set_strategy(StrategySpec::from(SyncMethod::Fp32).build());
+        let (_, report) = s.step(&g);
+        assert_eq!(s.strategy_name(), "fp32");
+        assert_eq!(report.exponent_bytes, 0);
+    }
+}

@@ -1,0 +1,435 @@
+//! Built-in [`SyncStrategy`] implementations.
+//!
+//! The four paper methods ([`Fp32Strategy`], [`NaiveStrategy`],
+//! [`LossScalingStrategy`], [`ApsStrategy`]) are bit-identical
+//! re-implementations of the pre-trait `SyncMethod` paths — the
+//! equivalence suite in `rust/tests/strategy_layer.rs` pins them against
+//! `aps::legacy::synchronize`. [`TernaryStrategy`] and [`TopKStrategy`]
+//! are net-new codecs proving the trait layer is an open extension point
+//! (TernGrad [28] and Deep-Gradient-Compression-style sparsification from
+//! the related work).
+
+use super::{unscale_in_place, Factors, GradView, LayerCtx, SyncStrategy};
+use crate::aps::local_max_exp;
+use crate::collectives::{Collective, ReduceStats};
+use crate::cpd::{quantize_shifted_slice_into, FpFormat};
+
+/// Shared phase-2 encode of the four paper methods: shift by the agreed
+/// power-of-two factor and cast into the layer's wire format with a
+/// single rounding (the exact legacy wire path).
+#[inline]
+fn cast_encode(src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+    quantize_shifted_slice_into(src, ctx.factor_exp, ctx.fmt, ctx.rounding, out);
+}
+
+/// Full-precision baseline: FP32 on the wire, no factors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp32Strategy;
+
+impl SyncStrategy for Fp32Strategy {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+    fn wire_format(&self) -> FpFormat {
+        FpFormat::FP32
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        cast_encode(src, ctx, out);
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+}
+
+/// Cast to the low-precision wire format with no scaling (the paper's
+/// "no APS" rows: underflow/overflow-prone).
+#[derive(Clone, Copy, Debug)]
+pub struct NaiveStrategy {
+    fmt: FpFormat,
+}
+
+impl NaiveStrategy {
+    pub fn new(fmt: FpFormat) -> Self {
+        NaiveStrategy { fmt }
+    }
+}
+
+impl SyncStrategy for NaiveStrategy {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+    fn wire_format(&self) -> FpFormat {
+        self.fmt
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        cast_encode(src, ctx, out);
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+}
+
+/// One global, hand-chosen power-of-two factor for every layer
+/// (Micikevicius et al. [21]).
+#[derive(Clone, Copy, Debug)]
+pub struct LossScalingStrategy {
+    fmt: FpFormat,
+    factor_exp: i32,
+}
+
+impl LossScalingStrategy {
+    pub fn new(fmt: FpFormat, factor_exp: i32) -> Self {
+        LossScalingStrategy { fmt, factor_exp }
+    }
+}
+
+impl SyncStrategy for LossScalingStrategy {
+    fn name(&self) -> &'static str {
+        "loss_scaling"
+    }
+    fn wire_format(&self) -> FpFormat {
+        self.fmt
+    }
+    fn prepare(
+        &mut self,
+        _grads: &GradView,
+        _collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        factors.exps.fill(self.factor_exp);
+        ReduceStats::default()
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        cast_encode(src, ctx, out);
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+}
+
+/// Auto-Precision Scaling (paper Algorithm 1): each layer is shifted by
+/// the largest power-of-two factor that provably cannot overflow the
+/// wire format even after summation across all workers (Eq. 1–4), agreed
+/// via a 1-byte-per-layer exponent max-reduce.
+#[derive(Clone, Copy, Debug)]
+pub struct ApsStrategy {
+    fmt: FpFormat,
+}
+
+impl ApsStrategy {
+    pub fn new(fmt: FpFormat) -> Self {
+        ApsStrategy { fmt }
+    }
+}
+
+impl SyncStrategy for ApsStrategy {
+    fn name(&self) -> &'static str {
+        "aps"
+    }
+    fn wire_format(&self) -> FpFormat {
+        self.fmt
+    }
+    fn prepare(
+        &mut self,
+        grads: &GradView,
+        collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        let world = grads.world();
+        let layers = grads.num_layers();
+        factors.ensure_i8(world, layers);
+        // Algorithm 1 lines 3–4: each worker contributes one i8 exponent
+        // per layer, already inflated by the world size.
+        for w in 0..world {
+            for l in 0..layers {
+                factors.i8_contribs[w][l] = local_max_exp(grads.layer_of(w, l), world)
+                    .map(|e| e.clamp(-128, 127) as i8)
+                    .unwrap_or(i8::MIN);
+            }
+        }
+        let stats = collective.all_reduce_max_i8_into(&factors.i8_contribs, &mut factors.i8_max);
+        for (l, &me) in factors.i8_max.iter().enumerate() {
+            factors.exps[l] = if me == i8::MIN {
+                0 // all-zero layer: no scaling needed
+            } else {
+                self.fmt.max_exponent() - me as i32
+            };
+        }
+        stats
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        cast_encode(src, ctx, out);
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+}
+
+/// TernGrad-style stochastic ternarization (net-new codec).
+///
+/// Per layer, workers agree (via the same 1-byte exponent max-reduce APS
+/// uses) on a power-of-two scale `s = 2^e ≥ max_w max_i |g_i|`; each
+/// element is then sent as one of `{-s, 0, +s}`, taking `±s` with
+/// probability `|g|/s` (unbiased: `E[symbol] = g`). Symbols are
+/// deterministic in `(seed, step, worker, layer, element)` so runs are
+/// reproducible. The reduction runs in BF16 words — integer multiples of
+/// `s` up to 256 workers are exact, and the simulation accounts 2 bytes
+/// per element (a packed deployment would ship 2-bit symbols; see the
+/// strategy-matrix bench notes). Under the fp32-last-layer policy the
+/// final layer bypasses ternarization and is sent dense.
+#[derive(Clone, Copy, Debug)]
+pub struct TernaryStrategy {
+    seed: u64,
+}
+
+impl TernaryStrategy {
+    pub fn new(seed: u64) -> Self {
+        TernaryStrategy { seed }
+    }
+
+    /// One uniform draw in `[0, 1)` from the stream position.
+    fn unit(&self, step: u64, worker: u64, layer: u64, elem: u64) -> f32 {
+        let mut h = crate::cpd::cast::splitmix64(self.seed ^ step);
+        h = crate::cpd::cast::splitmix64(h ^ (worker << 32) ^ layer);
+        h = crate::cpd::cast::splitmix64(h ^ elem);
+        (h >> 40) as f32 / (1u64 << 24) as f32
+    }
+}
+
+impl SyncStrategy for TernaryStrategy {
+    fn name(&self) -> &'static str {
+        "ternary"
+    }
+    fn wire_format(&self) -> FpFormat {
+        FpFormat::BF16
+    }
+    fn prepare(
+        &mut self,
+        grads: &GradView,
+        collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        let world = grads.world();
+        // BF16's 7-bit mantissa keeps k·s exact only for |k| ≤ 256;
+        // beyond that partial sums round and the codec's unbiasedness
+        // silently breaks — fail fast instead.
+        assert!(world <= 256, "TernaryStrategy's BF16 wire is exact only up to 256 workers");
+        let layers = grads.num_layers();
+        factors.ensure_i8(world, layers);
+        // Agree on e = ceil(log2 max|g|) per layer (no world inflation —
+        // symbols are summed at gradient scale, not shifted).
+        for w in 0..world {
+            for l in 0..layers {
+                factors.i8_contribs[w][l] = local_max_exp(grads.layer_of(w, l), 1)
+                    .map(|e| e.clamp(-128, 127) as i8)
+                    .unwrap_or(i8::MIN);
+            }
+        }
+        let stats = collective.all_reduce_max_i8_into(&factors.i8_contribs, &mut factors.i8_max);
+        for (l, &me) in factors.i8_max.iter().enumerate() {
+            factors.exps[l] = if me == i8::MIN { 0 } else { me as i32 };
+        }
+        stats
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        if ctx.fp32_passthrough {
+            // fp32-last-layer policy: dense full-precision passthrough.
+            out.copy_from_slice(src);
+            return;
+        }
+        let s = crate::aps::ldexp_f32(1.0, ctx.factor_exp);
+        // factor_exp came through an i8 clamp, so s ∈ [2^-128, 2^127].
+        debug_assert!(s > 0.0 && s.is_finite(), "ternary scale 2^{}", ctx.factor_exp);
+        for (i, (&x, o)) in src.iter().zip(out.iter_mut()).enumerate() {
+            if x == 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            if !x.is_finite() {
+                // Propagate divergence onto the wire like every other
+                // strategy (f32::min would otherwise turn NaN into +s).
+                *o = x;
+                continue;
+            }
+            let p = (x.abs() / s).min(1.0);
+            let u = self.unit(ctx.step, ctx.worker as u64, ctx.layer as u64, i as u64);
+            *o = if u < p { if x < 0.0 { -s } else { s } } else { 0.0 };
+        }
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        // Symbols are already at gradient scale: only averaging remains.
+        unscale_in_place(reduced, 0, ctx.world, ctx.average);
+    }
+}
+
+/// Top-k magnitude sparsification (Deep Gradient Compression-style).
+///
+/// Each worker keeps its `frac` largest-magnitude elements per layer
+/// (at least one) at full FP32 precision and zeroes the rest; the dense
+/// sum then averages as usual. Dropped elements show up in the
+/// [`crate::aps::SyncReport`] as wire underflow — exactly what they are
+/// from the optimizer's point of view. Deterministic (threshold
+/// selection, no RNG), so sessions replay bit-identically. The
+/// simulation accounts dense FP32 words; a real deployment ships `k`
+/// (index, value) pairs.
+#[derive(Clone, Debug)]
+pub struct TopKStrategy {
+    frac: f32,
+    /// |src| scratch for threshold selection (reused across steps).
+    scratch: Vec<f32>,
+}
+
+impl TopKStrategy {
+    pub fn new(frac: f32) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "top-k fraction must be in (0, 1]");
+        TopKStrategy { frac, scratch: Vec::new() }
+    }
+}
+
+impl SyncStrategy for TopKStrategy {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+    fn wire_format(&self) -> FpFormat {
+        FpFormat::FP32
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        out.copy_from_slice(src);
+        if ctx.fp32_passthrough {
+            // fp32-last-layer policy: the protected layer stays dense
+            // (top-k's wire is FP32 everywhere, so the explicit flag is
+            // the only way to see the policy).
+            return;
+        }
+        let n = src.len();
+        if n == 0 {
+            return;
+        }
+        let k = ((self.frac as f64 * n as f64).ceil() as usize).clamp(1, n);
+        if k == n {
+            return;
+        }
+        self.scratch.clear();
+        self.scratch.extend(src.iter().map(|x| x.abs()));
+        // k-th largest magnitude as the keep threshold (ties all kept).
+        self.scratch.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+        let thresh = self.scratch[k - 1];
+        for o in out.iter_mut() {
+            if o.abs() < thresh {
+                *o = 0.0;
+            }
+        }
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        unscale_in_place(reduced, 0, ctx.world, ctx.average);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::RingCollective;
+    use crate::cpd::Rounding;
+
+    fn ctx(fmt: FpFormat, factor_exp: i32, world: usize) -> LayerCtx {
+        LayerCtx {
+            layer: 0,
+            num_layers: 1,
+            worker: 0,
+            world,
+            factor_exp,
+            fmt,
+            fp32_passthrough: false,
+            rounding: Rounding::NearestEven,
+            average: true,
+            step: 0,
+        }
+    }
+
+    #[test]
+    fn fp32_passthrough_keeps_codec_layers_dense() {
+        let src = vec![0.25f32, -0.125, 0.5, -1.0];
+        let c = LayerCtx { fp32_passthrough: true, ..ctx(FpFormat::FP32, 0, 4) };
+        let mut out = vec![0.0f32; 4];
+        TernaryStrategy::new(3).encode(&src, &c, &mut out);
+        assert_eq!(out, src);
+        let mut out = vec![0.0f32; 4];
+        TopKStrategy::new(0.25).encode(&src, &c, &mut out);
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn ternary_propagates_non_finite_gradients() {
+        let mut t = TernaryStrategy::new(1);
+        let src = vec![f32::NAN, f32::INFINITY, 0.5, -0.5];
+        let mut out = vec![0.0f32; 4];
+        t.encode(&src, &ctx(FpFormat::BF16, 0, 4), &mut out);
+        assert!(out[0].is_nan(), "NaN must stay visible on the wire");
+        assert!(out[1].is_infinite());
+        assert!(out[2] == 0.0 || out[2] == 1.0);
+    }
+
+    #[test]
+    fn ternary_symbols_are_ternary_and_unbiased_ish() {
+        let mut t = TernaryStrategy::new(7);
+        let grads = vec![vec![vec![0.3f32; 2000]]];
+        let view = GradView::new(&grads);
+        let coll = RingCollective::new(1);
+        let mut factors = Factors::default();
+        factors.reset(1);
+        t.prepare(&view, &coll, &mut factors);
+        let e = factors.exp(0);
+        // ceil(log2 0.3) = -1 → s = 0.5
+        assert_eq!(e, -1);
+        let s = 0.5f32;
+        let mut out = vec![0.0f32; 2000];
+        let c = ctx(t.wire_format(), e, 1);
+        t.encode(&grads[0][0], &c, &mut out);
+        let mut mean = 0.0f64;
+        for &o in &out {
+            assert!(o == 0.0 || o == s || o == -s, "symbol {o}");
+            mean += o as f64;
+        }
+        mean /= out.len() as f64;
+        // E[symbol] = 0.3; loose 3-sigma-ish bound for 2000 draws.
+        assert!((mean - 0.3).abs() < 0.04, "mean {mean}");
+    }
+
+    #[test]
+    fn ternary_is_deterministic_per_stream() {
+        let mut t = TernaryStrategy::new(9);
+        let src = vec![0.1f32, -0.2, 0.05, 0.7];
+        let c = ctx(FpFormat::BF16, 0, 4);
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        t.encode(&src, &c, &mut a);
+        t.encode(&src, &c, &mut b);
+        assert_eq!(a, b);
+        // a different worker gets a different stream
+        let c2 = LayerCtx { worker: 1, ..c };
+        let mut w1 = vec![0.0f32; 4];
+        t.encode(&src, &c2, &mut w1);
+        let _ = w1; // may or may not differ element-wise; just must run
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let mut t = TopKStrategy::new(0.5);
+        let src = vec![0.1f32, -4.0, 0.01, 2.0, -0.5, 0.0];
+        let mut out = vec![0.0f32; 6];
+        t.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
+        assert_eq!(out, vec![0.0, -4.0, 0.0, 2.0, -0.5, 0.0]);
+        // survivors are bitwise the source values
+        assert_eq!(out[1].to_bits(), src[1].to_bits());
+    }
+
+    #[test]
+    fn topk_always_keeps_at_least_one() {
+        let mut t = TopKStrategy::new(0.01);
+        let src = vec![1.0f32, 2.0, 3.0];
+        let mut out = vec![0.0f32; 3];
+        t.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 1);
+        assert_eq!(out[2], 3.0);
+    }
+}

@@ -1,8 +1,10 @@
 //! Self-contained utility substrates.
 //!
-//! This repository builds fully offline with only the `xla` bindings and
-//! `anyhow` as external dependencies, so the small infrastructure crates a
-//! project would normally pull in are implemented here:
+//! This repository builds fully offline with no registry dependencies at
+//! all (`anyhow` is vendored at `rust/vendor/anyhow`, the `xla` PJRT
+//! bindings are stubbed at `runtime::xla_stub`), so the small
+//! infrastructure crates a project would normally pull in are
+//! implemented here:
 //!
 //! * [`json`] — a complete JSON parser + serializer (artifact specs,
 //!   golden vectors, experiment records).

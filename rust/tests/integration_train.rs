@@ -12,6 +12,7 @@ use aps_cpd::coordinator::{Trainer, TrainerSetup};
 use aps_cpd::cpd::FpFormat;
 use aps_cpd::optim::LrSchedule;
 use aps_cpd::runtime::{Engine, Model};
+use aps_cpd::sync::StrategySpec;
 
 fn have_artifacts() -> bool {
     std::path::Path::new("artifacts/mlp.json").exists()
@@ -162,6 +163,27 @@ fn segmentation_and_lm_workloads_run() {
     assert!(!out.diverged);
     // LM metric is eval loss; it should be below uniform-vocab entropy.
     assert!(out.final_metric < (512f64).ln() * 1.1, "loss {}", out.final_metric);
+}
+
+#[test]
+fn ternary_codec_trains_mlp_without_divergence() {
+    // The net-new TernGrad-style strategy (outside the closed SyncMethod
+    // enum, reached via the TrainerSetup strategy override) must train
+    // the same workload the paper methods do without diverging.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+    let mut s = quick_setup(4, SyncMethod::Fp32);
+    s.strategy = Some(StrategySpec::Ternary { seed: 7 });
+    let mut t = Trainer::new(&model, s).unwrap();
+    let out = t.train("it-ternary").unwrap();
+    assert!(!out.diverged);
+    let first = out.loss.points.first().unwrap().1;
+    assert!(out.loss.tail_mean(5) < first, "ternary loss should decrease");
+    assert!(out.final_metric > 0.15, "accuracy {}", out.final_metric); // chance = 0.1
 }
 
 #[test]

@@ -1,6 +1,10 @@
 //! Property-based invariants (util::ptest) over the numeric substrate and
 //! the coordinator-state layer — the repository's proptest suite.
 
+// The deprecated `aps::synchronize` shim is exercised deliberately: it
+// drives the new strategy/session path through the legacy entry point.
+#![allow(deprecated)]
+
 use aps_cpd::aps::{self, SyncMethod, SyncOptions};
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{

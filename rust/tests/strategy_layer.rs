@@ -1,0 +1,441 @@
+//! The strategy/collective/session layer's integration suite:
+//!
+//! * **equivalence** — every legacy `SyncMethod`, run through its
+//!   `SyncStrategy` impl inside a `SyncSession`, is bit-identical
+//!   (gradients *and* `SyncReport` accounting) to the pre-trait
+//!   `aps::legacy::synchronize` across topologies and option knobs;
+//! * **reuse** — a session reused across ≥3 steps yields exactly the
+//!   reports and outputs of fresh sessions (the no-allocation design
+//!   cannot leak state between steps);
+//! * **properties** (util::ptest) — per-strategy encode/decode
+//!   round-trips on hostile random inputs;
+//! * **convergence** — the net-new ternary and top-k codecs train a
+//!   synthetic least-squares workload without divergence.
+
+use aps_cpd::aps::{legacy, SyncMethod, SyncOptions};
+use aps_cpd::collectives::{SimCluster, Topology};
+use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder};
+use aps_cpd::util::ptest::{check_msg, generators};
+
+/// Deterministic mixed-scale per-worker gradients (the Fig-2 situation).
+fn scaled_grads(world: usize, salt: usize, layers: &[(usize, f32)]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|w| {
+            layers
+                .iter()
+                .enumerate()
+                .map(|(l, &(n, scale))| {
+                    (0..n)
+                        .map(|i| {
+                            let h = (w * 2654435761 + l * 97 + i * 131 + salt * 7919) % 2003;
+                            (h as f32 / 2003.0 - 0.5) * scale
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_bit_identical(label: &str, world: usize, opts: &SyncOptions, grads: &[Vec<Vec<f32>>]) {
+    let cluster = SimCluster::new(world);
+    let (old_out, old_rep) = legacy::synchronize(&cluster, grads, opts);
+    let mut session = SyncSessionBuilder::from_sync_options(world, opts).build();
+    let (new_out, new_rep) = session.step(grads);
+
+    assert_eq!(old_out.len(), new_out.len(), "{label}: layer count");
+    for (l, (o, n)) in old_out.iter().zip(new_out.iter()).enumerate() {
+        assert_eq!(o.len(), n.len(), "{label}: layer {l} length");
+        for (i, (a, b)) in o.iter().zip(n.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: layer {l} elem {i}: legacy {a:e} vs session {b:e}"
+            );
+        }
+    }
+    assert_eq!(&old_rep, new_rep, "{label}: SyncReport accounting");
+}
+
+#[test]
+fn legacy_methods_bit_identical_through_session() {
+    let layers = [(96usize, 1.0f32), (64, 1e-6), (33, 2.5e3)];
+    let methods = [
+        SyncMethod::Fp32,
+        SyncMethod::Naive { fmt: FpFormat::E5M2 },
+        SyncMethod::Naive { fmt: FpFormat::E3M0 },
+        SyncMethod::LossScaling { fmt: FpFormat::E5M2, factor_exp: 8 },
+        SyncMethod::Aps { fmt: FpFormat::E5M2 },
+        SyncMethod::Aps { fmt: FpFormat::E4M3 },
+    ];
+    for (mi, method) in methods.into_iter().enumerate() {
+        for topo in [Topology::Ring, Topology::Hierarchical { group_size: 4 }] {
+            let world = 8;
+            let grads = scaled_grads(world, mi, &layers);
+            let base = SyncOptions::new(method).with_topology(topo);
+            assert_bit_identical(&format!("{method:?}/{topo:?}"), world, &base, &grads);
+        }
+    }
+}
+
+#[test]
+fn option_knobs_bit_identical_through_session() {
+    let world = 8;
+    let grads = scaled_grads(world, 3, &[(64, 1e-5), (48, 1.0)]);
+    let aps = SyncMethod::Aps { fmt: FpFormat::E5M2 };
+    let variants = [
+        ("kahan", SyncOptions::new(aps).with_kahan(true)),
+        ("fp32_last_layer", SyncOptions::new(aps).with_fp32_last_layer(true)),
+        ("fused", SyncOptions::new(aps).with_fused(true)),
+        ("no_average", SyncOptions::new(aps).with_average(false)),
+        ("toward_zero", SyncOptions::new(aps).with_rounding(Rounding::TowardZero)),
+        (
+            "everything",
+            SyncOptions::new(SyncMethod::Naive { fmt: FpFormat::E4M3 })
+                .with_topology(Topology::Hierarchical { group_size: 2 })
+                .with_kahan(true)
+                .with_fp32_last_layer(true)
+                .with_fused(true),
+        ),
+    ];
+    for (label, opts) in variants {
+        assert_bit_identical(label, world, &opts, &grads);
+    }
+}
+
+#[test]
+fn session_reuse_matches_fresh_calls_across_steps() {
+    // The no-allocation smoke test: one session reused over ≥3 distinct
+    // steps must produce exactly what a fresh session (and the legacy
+    // path) produces for each step — buffer reuse can't leak state.
+    // Layer sizes shrink and grow across steps to stress buffer resizing.
+    let world = 8;
+    let shapes: [&[(usize, f32)]; 4] =
+        [&[(64, 1.0), (32, 1e-6)], &[(16, 1e3), (8, 1e-4)], &[(128, 0.1), (5, 1.0)], &[(64, 1.0)]];
+    for spec in [
+        StrategySpec::Fp32,
+        StrategySpec::Aps { fmt: FpFormat::E5M2 },
+        StrategySpec::Naive { fmt: FpFormat::E4M3 },
+        StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        StrategySpec::TopK { frac: 0.5 },
+    ] {
+        let mut reused = SyncSessionBuilder::new(world).spec(spec).build();
+        for (step, layers) in shapes.iter().enumerate() {
+            let grads = scaled_grads(world, step, layers);
+            let (r_out, r_rep) = reused.step(&grads);
+            let r_out = r_out.to_vec();
+            let r_rep = r_rep.clone();
+            let mut fresh = SyncSessionBuilder::new(world).spec(spec).build();
+            let (f_out, f_rep) = fresh.step(&grads);
+            for (l, (a, b)) in r_out.iter().zip(f_out.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{spec:?} step {step} layer {l} elem {i}"
+                    );
+                }
+            }
+            assert_eq!(&r_rep, f_rep, "{spec:?} step {step} report");
+        }
+    }
+}
+
+#[test]
+fn ternary_sessions_replay_deterministically() {
+    // Stochastic codec, deterministic stream: two sessions with the same
+    // seed walking the same steps must agree bit-for-bit.
+    let world = 4;
+    let mut a = SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 11 }).build();
+    let mut b = SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 11 }).build();
+    for step in 0..3 {
+        let grads = scaled_grads(world, step, &[(64, 0.3), (32, 2.0)]);
+        let (oa, ra) = a.step(&grads);
+        let oa = oa.to_vec();
+        let ra = ra.clone();
+        let (ob, rb) = b.step(&grads);
+        assert_eq!(oa.as_slice(), ob, "step {step}");
+        assert_eq!(&ra, rb, "step {step} report");
+    }
+    // A different seed must (overwhelmingly) produce different symbols.
+    let mut c = SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 12 }).build();
+    let grads = scaled_grads(world, 0, &[(64, 0.3), (32, 2.0)]);
+    let (oc, _) = c.step(&grads);
+    let mut d = SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 11 }).build();
+    let (od, _) = d.step(&grads);
+    assert_ne!(oc, od, "seeds 11 vs 12 should diverge");
+}
+
+#[test]
+fn prop_naive_world1_is_pure_quantize() {
+    // With one worker and averaging off, a naive session is exactly the
+    // wire cast: output bits == quantize_shifted_slice(src, 0, fmt).
+    check_msg(
+        "naive session (world 1) == quantize",
+        31,
+        200,
+        |rng| (generators::nasty_vec(rng, 64), generators::format(rng)),
+        |(xs, fmt)| {
+            let grads = vec![vec![xs.clone()]];
+            let mut s = SyncSessionBuilder::new(1)
+                .spec(StrategySpec::Naive { fmt: *fmt })
+                .with_average(false)
+                .build();
+            let (out, _) = s.step(&grads);
+            let want = quantize_shifted_slice(xs, 0, *fmt, Rounding::NearestEven);
+            for (i, (a, b)) in want.iter().zip(out[0].iter()).enumerate() {
+                let same = (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits();
+                if !same {
+                    return Err(format!("elem {i}: want {a:e} got {b:e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fp32_world1_is_identity() {
+    check_msg(
+        "fp32 session (world 1, no average) is the identity",
+        32,
+        200,
+        |rng| generators::nasty_vec(rng, 64),
+        |xs| {
+            let grads = vec![vec![xs.clone()]];
+            let mut s =
+                SyncSessionBuilder::new(1).spec(StrategySpec::Fp32).with_average(false).build();
+            let (out, report) = s.step(&grads);
+            for (i, (a, b)) in xs.iter().zip(out[0].iter()).enumerate() {
+                let same = (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits();
+                if !same {
+                    return Err(format!("elem {i}: {a:e} -> {b:e}"));
+                }
+            }
+            if report.payload_bytes != 0 {
+                return Err("single worker moves no bytes".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aps_session_never_overflows() {
+    // Eq. 1–4 through the trait layer: any gradients, any format — no
+    // wire overflow and finite outputs.
+    check_msg(
+        "APS session never overflows",
+        33,
+        60,
+        |rng| {
+            let p = 2 + rng.below(7);
+            let layers = 1 + rng.below(3);
+            let scale = (rng.range(-30.0, 30.0)).exp2();
+            let grads: Vec<Vec<Vec<f32>>> = (0..p)
+                .map(|_| {
+                    (0..layers)
+                        .map(|_| (0..16).map(|_| rng.normal() * scale).collect())
+                        .collect()
+                })
+                .collect();
+            (grads, generators::format(rng))
+        },
+        |(grads, fmt)| {
+            let mut s = SyncSessionBuilder::new(grads.len())
+                .spec(StrategySpec::Aps { fmt: *fmt })
+                .build();
+            let (out, report) = s.step(grads);
+            if report.any_overflow() {
+                return Err("overflow on the wire".into());
+            }
+            if out.iter().flatten().any(|v| v.is_infinite()) {
+                return Err("INF in output".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ternary_outputs_are_symbol_averages() {
+    // Every reduced element is (k/world)·s for integer |k| ≤ world: the
+    // sum of world ternary symbols, exactly representable on a BF16 wire.
+    check_msg(
+        "ternary reduced values are k·s/world",
+        34,
+        80,
+        |rng| {
+            let world = 2 + rng.below(6);
+            let scale = (rng.range(-8.0, 8.0)).exp2();
+            let grads: Vec<Vec<Vec<f32>>> = (0..world)
+                .map(|_| vec![(0..24).map(|_| rng.normal() * scale).collect()])
+                .collect();
+            (grads, rng.next_u64())
+        },
+        |(grads, seed)| {
+            let world = grads.len();
+            let mut s = SyncSessionBuilder::new(world)
+                .spec(StrategySpec::Ternary { seed: *seed })
+                .build();
+            // the agreed scale: 2^(max ceil-log2 over all workers)
+            let max_abs = grads
+                .iter()
+                .flat_map(|w| w[0].iter())
+                .fold(0.0f32, |m, &x| m.max(x.abs()));
+            let (out, _) = s.step(grads);
+            if max_abs == 0.0 {
+                return if out[0].iter().all(|&v| v == 0.0) {
+                    Ok(())
+                } else {
+                    Err("zero grads must reduce to zero".into())
+                };
+            }
+            let e = (max_abs as f64).log2().ceil() as i32;
+            let s_scale = (e as f64).exp2();
+            for (i, &v) in out[0].iter().enumerate() {
+                let k = v as f64 * world as f64 / s_scale;
+                if (k - k.round()).abs() > 1e-4 || k.abs() > world as f64 + 1e-4 {
+                    return Err(format!("elem {i}: {v:e} is not k·s/p (k = {k})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_keeps_k_and_zeroes_rest() {
+    check_msg(
+        "top-k session output support is the union of kept elements",
+        35,
+        120,
+        |rng| {
+            let n = 4 + rng.below(60);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            (xs, 0.1 + rng.uniform() * 0.9)
+        },
+        |(xs, frac)| {
+            let frac32 = *frac as f32;
+            let grads = vec![vec![xs.clone()]];
+            let mut s = SyncSessionBuilder::new(1)
+                .spec(StrategySpec::TopK { frac: frac32 })
+                .with_average(false)
+                .build();
+            let (out, _) = s.step(&grads);
+            let n = xs.len();
+            // the same arithmetic the strategy uses (f32 frac widened)
+            let k = ((frac32 as f64 * n as f64).ceil() as usize).clamp(1, n);
+            let kept = out[0].iter().filter(|&&v| v != 0.0).count();
+            // ≥ k survivors is impossible to exceed except via magnitude
+            // ties; zeros in the input also shrink the support.
+            let nonzero_in = xs.iter().filter(|&&x| x != 0.0).count();
+            if kept > n || kept < k.min(nonzero_in) {
+                return Err(format!("kept {kept} of {n} (k = {k})"));
+            }
+            // survivors are bitwise the inputs
+            for (a, b) in xs.iter().zip(out[0].iter()) {
+                if *b != 0.0 && a.to_bits() != b.to_bits() {
+                    return Err(format!("survivor changed: {a:e} -> {b:e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Train `min ‖Xw − y‖²` with simulated data-parallel workers through a
+/// session; returns (initial mse, final mse, saw_nan).
+fn train_least_squares(spec: StrategySpec, steps: usize, lr: f32) -> (f64, f64, bool) {
+    let world = 4;
+    let d = 24;
+    let local_batch = 8;
+    let mut rng = Rng::new(1234);
+    let w_true: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let mut w = vec![0.0f32; d];
+    let mut session = SyncSessionBuilder::new(world).spec(spec).build();
+
+    let mse = |w: &[f32], rng: &mut Rng| -> f64 {
+        let mut acc = 0.0f64;
+        for _ in 0..64 {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let y: f32 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            let p: f32 = x.iter().zip(w).map(|(a, b)| a * b).sum();
+            acc += ((p - y) as f64).powi(2);
+        }
+        acc / 64.0
+    };
+
+    let mut eval_rng = Rng::new(77);
+    let initial = mse(&w, &mut eval_rng);
+    let mut saw_nan = false;
+    for _ in 0..steps {
+        // each worker: gradient of ½(w·x − y)² over its local batch
+        let grads: Vec<Vec<Vec<f32>>> = (0..world)
+            .map(|_| {
+                let mut g = vec![0.0f32; d];
+                for _ in 0..local_batch {
+                    let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    let y: f32 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+                    let p: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+                    let e = (p - y) / local_batch as f32;
+                    for (gi, xi) in g.iter_mut().zip(&x) {
+                        *gi += e * xi;
+                    }
+                }
+                vec![g]
+            })
+            .collect();
+        let (reduced, _) = session.step(&grads);
+        for (wi, gi) in w.iter_mut().zip(reduced[0].iter()) {
+            *wi -= lr * gi;
+            if !wi.is_finite() {
+                saw_nan = true;
+            }
+        }
+        if saw_nan {
+            break;
+        }
+    }
+    let mut eval_rng = Rng::new(77);
+    let final_mse = mse(&w, &mut eval_rng);
+    (initial, final_mse, saw_nan)
+}
+
+#[test]
+fn ternary_trains_without_divergence() {
+    let (initial, final_mse, saw_nan) = train_least_squares(
+        StrategySpec::Ternary { seed: 5 },
+        600,
+        0.05,
+    );
+    assert!(!saw_nan, "ternary diverged to NaN");
+    assert!(
+        final_mse < initial * 0.2,
+        "ternary failed to train: {initial:.4} -> {final_mse:.4}"
+    );
+}
+
+#[test]
+fn topk_trains_without_divergence() {
+    let (initial, final_mse, saw_nan) =
+        train_least_squares(StrategySpec::TopK { frac: 0.25 }, 400, 0.1);
+    assert!(!saw_nan, "top-k diverged to NaN");
+    assert!(
+        final_mse < initial * 0.2,
+        "top-k failed to train: {initial:.4} -> {final_mse:.4}"
+    );
+}
+
+#[test]
+fn aps_trains_the_same_workload_for_reference() {
+    let (initial, final_mse, saw_nan) = train_least_squares(
+        StrategySpec::Aps { fmt: FpFormat::E5M2 },
+        400,
+        0.1,
+    );
+    assert!(!saw_nan);
+    assert!(final_mse < initial * 0.05, "APS reference: {initial:.4} -> {final_mse:.4}");
+}

@@ -1,0 +1,195 @@
+//! Vendored, offline stand-in for the `anyhow` crate.
+//!
+//! This repository must build with no network access and no registry
+//! cache, so the small slice of `anyhow` it actually uses is implemented
+//! here and wired in as a path dependency (the import paths in the main
+//! crate are unchanged, so swapping back to the real crate is a one-line
+//! Cargo.toml edit). Provided surface:
+//!
+//! * [`Error`] — an opaque error value with a context chain; `Display`
+//!   shows the outermost message, `Debug` shows the full chain.
+//! * [`Result`] — `Result<T, E = Error>` alias.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on any
+//!   `Result` whose error converts into [`Error`].
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that is what makes the blanket
+//! `impl From<E: std::error::Error>` coherent alongside `From<Error>`.
+
+use std::fmt;
+
+/// An error value: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from the outermost message inward.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in self.chain().skip(1) {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Capture the std source chain as a context chain.
+        let mut messages: Vec<String> = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            messages.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err = Error::msg(messages.pop().unwrap());
+        while let Some(m) = messages.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (mirrors `anyhow::Context`).
+pub trait Context<T>: Sized {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e = io_fail().with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "step 7");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn chain_walks_outside_in() {
+        let e = Error::msg("root").context("mid").context("top");
+        let msgs: Vec<&str> = e.chain().collect();
+        assert_eq!(msgs, vec!["top", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}
