@@ -1,26 +1,35 @@
 //! Strategy × collective matrix through the `SyncSession` hot path.
 //!
-//! Sweeps every built-in `SyncStrategy` over every built-in `Collective`
-//! on a synthetic multi-scale gradient set (no artifacts needed) and
-//! reports wire bytes/step, exponent-phase bytes, latency steps, mean
-//! wire underflow, and wall time per step. New codecs added through
+//! Sweeps every built-in `SyncStrategy` (including error-feedback-wrapped
+//! codecs) over every built-in `Collective` on a synthetic multi-scale
+//! gradient set (no artifacts needed) and reports simulated wire
+//! bytes/step, the codec's honest packed wire cost (`WireCost`: value +
+//! index bits, metadata), exponent-phase bytes, latency steps, mean wire
+//! underflow, and wall time per step. New codecs added through
 //! `StrategySpec` (or plugged straight into `SyncSessionBuilder`) get
 //! perf numbers here for free.
 //!
-//! Byte columns are as-simulated: ternary symbols ride a BF16 wire (a
-//! packed deployment ships 2 bits/elt) and top-k rides dense FP32 (a real
-//! deployment ships k (index, value) pairs).
+//! Payload KiB is as-simulated (ternary rides a BF16 wire, top-k/QSGD
+//! dense FP32); the `wire KiB` column is what a packed deployment ships —
+//! 2-bit ternary symbols, top-k (index, value) pairs, QSGD `bits`/elt
+//! plus bucket scales.
+//!
+//! Run with `--test` (CI does) for a single-iteration smoke pass that
+//! also asserts the codec-accounting invariants, so a regression in any
+//! codec's traffic numbers fails the workflow rather than silently
+//! skewing EXPERIMENTS.md.
 
 #[path = "support/mod.rs"]
 mod support;
 
 use aps_cpd::collectives::Topology;
 use aps_cpd::cpd::FpFormat;
-use aps_cpd::sync::{StrategySpec, SyncSessionBuilder};
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, WireCost};
 use aps_cpd::util::bench::{fmt_secs, Bench};
 use aps_cpd::util::table::Table;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     support::header(
         "strategy × collective matrix (SyncSession hot path)",
         "sync module; paper Tables 2/4 methods + net-new codecs",
@@ -47,6 +56,7 @@ fn main() {
         })
         .collect();
 
+    let ef = |inner: StrategySpec| StrategySpec::ErrorFeedback { inner: Box::new(inner) };
     let strategies = [
         StrategySpec::Fp32,
         StrategySpec::Naive { fmt: FpFormat::E5M2 },
@@ -55,23 +65,37 @@ fn main() {
         StrategySpec::Aps { fmt: FpFormat::E4M3 },
         StrategySpec::Ternary { seed: 42 },
         StrategySpec::TopK { frac: 0.25 },
+        StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 42 },
+        ef(StrategySpec::Ternary { seed: 42 }),
+        ef(StrategySpec::TopK { frac: 0.25 }),
+        ef(StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 42 }),
     ];
     let collectives = [Topology::Ring, Topology::Hierarchical { group_size: 4 }];
 
-    let bench = Bench::quick();
+    let bench = if smoke {
+        Bench { warmup_iters: 0, samples: 1, iters_per_sample: 1 }
+    } else {
+        Bench::quick()
+    };
+    let total_elems: u64 = layers.iter().map(|&(n, _)| n as u64).sum();
+    let dense_fp32_wire = WireCost::dense(total_elems as usize, FpFormat::FP32);
+
     let mut t = Table::new(&[
         "strategy",
         "collective",
         "payload KiB/step",
+        "wire KiB",
+        "idx KiB",
+        "meta B",
         "exp B",
         "steps",
         "underflow",
         "wall/step",
     ]);
-    for spec in strategies {
+    for spec in &strategies {
         for topo in collectives {
             let mut session = SyncSessionBuilder::new(world)
-                .spec(spec)
+                .spec(spec.clone())
                 .with_topology(topo)
                 .build();
             let m = bench.run("step", || {
@@ -80,22 +104,57 @@ fn main() {
             });
             let report = session.report().clone();
             t.row(&[
-                format!("{spec:?}"),
+                spec.label(),
                 format!("{topo:?}"),
                 format!("{}", report.payload_bytes / 1024),
+                format!("{}", report.wire.total_bytes() / 1024),
+                format!("{}", report.wire.index_bits / 8 / 1024),
+                format!("{}", report.wire.metadata_bytes),
                 format!("{}", report.exponent_bytes),
                 format!("{}", report.steps),
                 format!("{:.4}", report.underflow_frac()),
                 fmt_secs(m.median()),
             ]);
+
+            // Codec-accounting invariants — cheap enough to check always;
+            // under `--test` a violation fails the CI workflow.
+            assert!(report.wire.value_bits > 0, "{}: empty wire cost", spec.label());
+            assert!(
+                report.steps > 0 && report.payload_bytes > 0,
+                "{}: degenerate report",
+                spec.label()
+            );
+            match spec {
+                StrategySpec::Fp32 => assert_eq!(report.wire, dense_fp32_wire),
+                StrategySpec::TopK { .. } => {
+                    assert!(report.wire.index_bits > 0, "top-k must account index traffic");
+                    assert!(
+                        report.wire.total_bytes() < dense_fp32_wire.total_bytes() / 2,
+                        "top-k@0.25 honest wire should be far below dense FP32"
+                    );
+                }
+                StrategySpec::Qsgd { .. } => {
+                    assert!(report.wire.metadata_bytes > 0, "qsgd must account bucket scales");
+                    assert!(
+                        report.wire.total_bytes() < dense_fp32_wire.total_bytes() / 4,
+                        "qsgd b4 honest wire should beat dense FP32 by ≥4x"
+                    );
+                }
+                StrategySpec::Ternary { .. } => {
+                    assert_eq!(report.wire.value_bits, 2 * total_elems);
+                }
+                _ => {}
+            }
         }
     }
     t.print();
     support::shape_note();
     println!(
-        "\n(bytes are per worker per step; fp32 baseline payload = {} KiB)",
-        (layers.iter().map(|&(n, _)| n as u64).sum::<u64>() * 4 * 2 * (world as u64 - 1)
-            / world as u64)
-            / 1024
+        "\n(bytes are per worker per step; fp32 baseline payload = {} KiB, packed wire = {} KiB)",
+        (total_elems * 4 * 2 * (world as u64 - 1) / world as u64) / 1024,
+        dense_fp32_wire.total_bytes() / 1024,
     );
+    if smoke {
+        println!("[smoke] strategy-matrix invariants OK");
+    }
 }

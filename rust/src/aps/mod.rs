@@ -139,10 +139,18 @@ pub struct LayerReport {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SyncReport {
     pub layers: Vec<LayerReport>,
-    /// Wire bytes per worker for the gradient payload phase.
+    /// Wire bytes per worker for the gradient payload phase, as the
+    /// *simulated* collective moved them (dense buffers in the wire
+    /// format, ring/hierarchical schedule accounting).
     pub payload_bytes: u64,
     /// Wire bytes per worker for the exponent (max) phase — APS only.
     pub exponent_bytes: u64,
+    /// The codec's honest per-worker cost of shipping one full gradient
+    /// set (packed value bits, sparse index bits, metadata bytes) — what
+    /// a real deployment of the codec would put on the network. For
+    /// sparse codecs (top-k, QSGD) this is where index and scale traffic
+    /// is accounted; `payload_bytes` keeps the dense simulation figure.
+    pub wire: crate::sync::WireCost,
     /// Latency-bound steps across all messages.
     pub steps: usize,
     /// Number of distinct messages (layers, or 1 when fused).
@@ -150,9 +158,16 @@ pub struct SyncReport {
 }
 
 impl SyncReport {
-    /// Total wire bytes per worker (payload + exponent phases).
+    /// Total *simulated* wire bytes per worker (payload + exponent
+    /// phases, dense accounting).
     pub fn total_bytes(&self) -> u64 {
         self.payload_bytes + self.exponent_bytes
+    }
+
+    /// Total *honest* wire bytes per worker: the codec's packed payload
+    /// (values + indices + metadata) plus the exponent agreement phase.
+    pub fn honest_bytes(&self) -> u64 {
+        self.wire.total_bytes() + self.exponent_bytes
     }
     /// Mean underflow fraction across layers (weighted by elements).
     pub fn underflow_frac(&self) -> f64 {
@@ -248,6 +263,7 @@ pub mod legacy {
     use super::{local_max_exp, LayerReport, SyncMethod, SyncOptions, SyncReport};
     use crate::collectives::{ReduceOptions, ReduceStats, SimCluster};
     use crate::cpd::{quantize_shifted_slice, FpFormat};
+    use crate::sync::WireCost;
 
     /// See the module docs: the original closed-enum synchronize.
     pub fn synchronize(
@@ -363,6 +379,10 @@ pub mod legacy {
                 elements: n,
             };
             report.payload_bytes += stats.bytes_per_worker;
+            // The paper methods are dense codecs: their honest per-worker
+            // wire cost is one full tensor in the layer's wire format —
+            // the same figure the session derives via `wire_cost`.
+            report.wire += WireCost::dense(n, layer_fmt);
             if !opts.fused {
                 report.steps += stats.steps;
             }

@@ -18,6 +18,16 @@
 use super::{fold_step, ring, ReduceOptions, ReduceStats};
 use crate::util::par;
 
+/// Reusable scratch for [`all_reduce_with_scratch`]: the per-group
+/// partial-sum buffers that the masters fold into. Owned by the caller
+/// (in practice [`super::HierarchicalCollective`]) so steady-state
+/// reductions reallocate nothing — each buffer grows to the largest
+/// tensor seen and then stays.
+#[derive(Clone, Debug, Default)]
+pub struct HierScratch {
+    partials: Vec<Vec<f32>>,
+}
+
 /// Run hierarchical all-reduce with groups of `group_size`, allocating
 /// the output (wrapper over [`all_reduce_into`]).
 pub fn all_reduce(
@@ -30,14 +40,29 @@ pub fn all_reduce(
     (out, stats)
 }
 
-/// Hierarchical all-reduce into a caller-provided buffer. The per-group
-/// partial sums are still allocated internally (one `n`-element vector
-/// per group); the flat-ring phase and the result reuse `out`.
+/// Hierarchical all-reduce into a caller-provided buffer with throwaway
+/// scratch (one fresh `n`-element vector per group). Hot paths should
+/// hold a [`HierScratch`] and call [`all_reduce_with_scratch`] instead.
 pub fn all_reduce_into(
     contribs: &[Vec<f32>],
     group_size: usize,
     out: &mut [f32],
     opts: ReduceOptions,
+) -> ReduceStats {
+    let mut scratch = HierScratch::default();
+    all_reduce_with_scratch(contribs, group_size, out, opts, &mut scratch)
+}
+
+/// Hierarchical all-reduce into a caller-provided buffer, reusing
+/// `scratch` for the per-group partial sums. With a warm scratch the only
+/// remaining per-call allocation is the Kahan compensation vector when
+/// `opts.kahan` is set (tracked in ROADMAP.md).
+pub fn all_reduce_with_scratch(
+    contribs: &[Vec<f32>],
+    group_size: usize,
+    out: &mut [f32],
+    opts: ReduceOptions,
+    scratch: &mut HierScratch,
 ) -> ReduceStats {
     let p = contribs.len();
     let n = contribs[0].len();
@@ -48,12 +73,16 @@ pub fn all_reduce_into(
     );
     let num_groups = p / group_size;
 
-    // Phase 1: intra-group fold at each master, in rank order
-    // (parallel across groups — they are independent).
-    let partials: Vec<Vec<f32>> = par::par_map(num_groups, |g| {
-        {
-            let base = g * group_size;
-            let mut acc = contribs[base].clone();
+    // Phase 1: intra-group fold at each master, in rank order (parallel
+    // across groups — they are independent, each owning one scratch
+    // partial). Chunked so small tensors stay on one thread.
+    scratch.partials.resize_with(num_groups, Vec::new);
+    let groups_per_chunk = (par::PAR_THRESHOLD / (n * group_size).max(1)).max(1);
+    par::par_chunks_mut(&mut scratch.partials, groups_per_chunk, |g0, chunk| {
+        for (gi, acc) in chunk.iter_mut().enumerate() {
+            let base = (g0 + gi) * group_size;
+            acc.clear();
+            acc.extend_from_slice(&contribs[base]);
             let mut comp = vec![0.0f32; if opts.kahan { n } else { 0 }];
             let mut dummy = 0.0f32;
             for r in 1..group_size {
@@ -68,15 +97,14 @@ pub fn all_reduce_into(
                     }
                 }
             }
-            acc
         }
     });
 
     // Phase 2: ring all-reduce across masters.
     let ring_stats = if num_groups > 1 {
-        ring::all_reduce_into(&partials, out, opts)
+        ring::all_reduce_into(&scratch.partials, out, opts)
     } else {
-        out.copy_from_slice(&partials[0]);
+        out.copy_from_slice(&scratch.partials[0]);
         ReduceStats::default()
     };
 
@@ -157,6 +185,28 @@ mod tests {
             hier_err < ring_err,
             "hier={hier_err:.4} ring={ring_err:.4}"
         );
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_mixed_sizes() {
+        // One scratch reused over growing and shrinking tensors must give
+        // exactly what the throwaway-scratch path gives.
+        let mut scratch = HierScratch::default();
+        let p = 8;
+        for (salt, n) in [(1usize, 40usize), (2, 12), (3, 64)] {
+            let contribs: Vec<Vec<f32>> = (0..p)
+                .map(|w| {
+                    (0..n)
+                        .map(|i| ((w * 31 + i * 7 + salt) % 13) as f32 * 0.25 - 1.5)
+                        .collect()
+                })
+                .collect();
+            let opts = ReduceOptions::low_precision(FpFormat::E5M2);
+            let mut a = vec![0.0f32; n];
+            let _ = all_reduce_with_scratch(&contribs, 4, &mut a, opts, &mut scratch);
+            let (b, _) = all_reduce(&contribs, 4, opts);
+            assert_eq!(a, b, "n={n}");
+        }
     }
 
     #[test]

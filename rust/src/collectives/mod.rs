@@ -152,16 +152,27 @@ impl Collective for RingCollective {
 }
 
 /// Grouped (hierarchical) all-reduce ([`hierarchical`]).
-#[derive(Clone, Copy, Debug)]
+///
+/// Owns the per-group partial-sum scratch ([`hierarchical::HierScratch`])
+/// so repeated reductions through one collective — the session hot path —
+/// allocate no element storage once warm. The scratch sits behind a
+/// `RefCell` because the [`Collective`] trait takes `&self`; calls do not
+/// re-enter, so the borrow is never contended.
+#[derive(Clone, Debug)]
 pub struct HierarchicalCollective {
     world: usize,
     group_size: usize,
+    scratch: std::cell::RefCell<hierarchical::HierScratch>,
 }
 
 impl HierarchicalCollective {
     pub fn new(world: usize, group_size: usize) -> Self {
         assert!(world >= 1 && group_size >= 1);
-        HierarchicalCollective { world, group_size }
+        HierarchicalCollective {
+            world,
+            group_size,
+            scratch: std::cell::RefCell::new(hierarchical::HierScratch::default()),
+        }
     }
 }
 
@@ -186,7 +197,13 @@ impl Collective for HierarchicalCollective {
             out.copy_from_slice(&contribs[0]);
             return ReduceStats::default();
         }
-        hierarchical::all_reduce_into(contribs, self.group_size, out, *opts)
+        hierarchical::all_reduce_with_scratch(
+            contribs,
+            self.group_size,
+            out,
+            *opts,
+            &mut self.scratch.borrow_mut(),
+        )
     }
     fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
         max_i8_into(contribs, out, self.world)
@@ -348,8 +365,11 @@ mod tests {
     fn single_worker_identity() {
         let grads = worker_grads(1, 10);
         let cluster = SimCluster::new(1);
-        let (out, stats) =
-            cluster.all_reduce_sum(&grads, Topology::Ring, ReduceOptions::low_precision(FpFormat::E5M2));
+        let (out, stats) = cluster.all_reduce_sum(
+            &grads,
+            Topology::Ring,
+            ReduceOptions::low_precision(FpFormat::E5M2),
+        );
         assert_eq!(out, grads[0]);
         assert_eq!(stats.bytes_per_worker, 0);
     }

@@ -29,7 +29,9 @@ pub struct ExperimentConfig {
     pub topology: Topology,
 
     /// The synchronization strategy, parsed by name from `sync.method`
-    /// (`fp32 | naive | loss_scaling | aps | ternary | topk`).
+    /// (`fp32 | naive | loss_scaling | aps | ternary | topk | qsgd`, any
+    /// of which may be wrapped in residual error feedback with an `ef:`
+    /// prefix, e.g. `ef:topk`).
     pub strategy: StrategySpec,
     pub kahan: bool,
     pub fp32_last_layer: bool,
@@ -105,7 +107,27 @@ impl ExperimentConfig {
             .transpose()?
             .map(|s| s as u64)
             .unwrap_or(seed);
-        let strategy = match doc.get("sync", "method")?.as_str()? {
+        let qsgd_bits = doc
+            .opt("sync", "qsgd_bits")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(4);
+        let qsgd_bucket = doc
+            .opt("sync", "qsgd_bucket")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(256);
+
+        // Codec names, with an optional `ef:` prefix wrapping the codec in
+        // residual error feedback (sync::ErrorFeedback). The prefix is
+        // stripped exactly once, so `ef:ef:…` falls through to the
+        // unknown-method arm.
+        let method_name = doc.get("sync", "method")?.as_str()?;
+        let (base_name, wrap_ef) = match method_name.strip_prefix("ef:") {
+            Some(inner) => (inner, true),
+            None => (method_name, false),
+        };
+        let base = match base_name {
             "fp32" => StrategySpec::Fp32,
             "naive" => StrategySpec::Naive { fmt },
             "loss_scaling" => StrategySpec::LossScaling { fmt, factor_exp: loss_scale_exp },
@@ -117,9 +139,30 @@ impl ExperimentConfig {
                 }
                 StrategySpec::TopK { frac: topk_frac }
             }
-            other => return Err(anyhow!(
-                "unknown sync.method {other:?} (fp32|naive|loss_scaling|aps|ternary|topk)"
-            )),
+            "qsgd" => {
+                if !(2..=8).contains(&qsgd_bits) {
+                    return Err(anyhow!("sync.qsgd_bits must be in 2..=8, got {qsgd_bits}"));
+                }
+                if qsgd_bucket == 0 {
+                    return Err(anyhow!("sync.qsgd_bucket must be positive"));
+                }
+                StrategySpec::Qsgd {
+                    bits: qsgd_bits as u8,
+                    bucket: qsgd_bucket,
+                    seed: ternary_seed,
+                }
+            }
+            other => {
+                return Err(anyhow!(
+                    "unknown sync.method {other:?} \
+                     (fp32|naive|loss_scaling|aps|ternary|topk|qsgd, optional ef: prefix)"
+                ))
+            }
+        };
+        let strategy = if wrap_ef {
+            StrategySpec::ErrorFeedback { inner: Box::new(base) }
+        } else {
+            base
         };
         let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let fp32_last_layer = doc
@@ -333,6 +376,50 @@ steps_per_epoch = 2
         assert_eq!(cfg.strategy, StrategySpec::TopK { frac: 0.1 });
 
         let bad = SAMPLE.replace("method = \"aps\"", "method = \"topk\"\ntopk_frac = 1.5");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn qsgd_parses_with_knobs_and_defaults() {
+        let q = SAMPLE.replace("method = \"aps\"", "method = \"qsgd\"");
+        let cfg = ExperimentConfig::from_toml_str(&q).unwrap();
+        assert_eq!(cfg.strategy, StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 7 });
+
+        let q = SAMPLE.replace(
+            "method = \"aps\"",
+            "method = \"qsgd\"\nqsgd_bits = 2\nqsgd_bucket = 64",
+        );
+        let cfg = ExperimentConfig::from_toml_str(&q).unwrap();
+        assert_eq!(cfg.strategy, StrategySpec::Qsgd { bits: 2, bucket: 64, seed: 7 });
+
+        let bad = SAMPLE.replace("method = \"aps\"", "method = \"qsgd\"\nqsgd_bits = 9");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+        let bad = SAMPLE.replace("method = \"aps\"", "method = \"qsgd\"\nqsgd_bucket = 0");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn ef_prefix_wraps_any_codec() {
+        for (name, want) in [
+            ("ef:ternary", StrategySpec::Ternary { seed: 7 }),
+            ("ef:topk", StrategySpec::TopK { frac: 0.25 }),
+            ("ef:qsgd", StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 7 }),
+            ("ef:aps", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ] {
+            let t = SAMPLE.replace("method = \"aps\"", &format!("method = \"{name}\""));
+            let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+            assert_eq!(
+                cfg.strategy,
+                StrategySpec::ErrorFeedback { inner: Box::new(want) },
+                "{name}"
+            );
+            // ef-wrapped codecs have no closed-enum method; the trainer's
+            // strategy override carries them.
+            assert_eq!(cfg.strategy.as_sync_method(), None);
+        }
+        let bad = SAMPLE.replace("method = \"aps\"", "method = \"ef:ef:fp32\"");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+        let bad = SAMPLE.replace("method = \"aps\"", "method = \"ef:magic\"");
         assert!(ExperimentConfig::from_toml_str(&bad).is_err());
     }
 }

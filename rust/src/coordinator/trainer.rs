@@ -68,10 +68,15 @@ pub struct TrainOutcome {
     pub final_metric: f64,
     /// Segmentation only: final mean per-class accuracy.
     pub final_macc: Option<f64>,
-    /// Gradient payload bytes per worker, whole run.
+    /// Gradient payload bytes per worker, whole run (dense simulation
+    /// accounting).
     pub comm_payload_bytes: u64,
     /// APS exponent-phase bytes per worker, whole run.
     pub comm_exponent_bytes: u64,
+    /// The codec's honest packed wire bytes per worker, whole run
+    /// (value + index bits and metadata via `sync::WireCost`) — for
+    /// sparse/quantized codecs this is the number to quote.
+    pub comm_honest_bytes: u64,
     /// Per-step Eq.-5 round-off of the synchronized gradient (if tracked).
     pub roundoff: Series,
     /// Per-step weighted underflow fraction on the wire.
@@ -121,15 +126,15 @@ impl<'m> Trainer<'m> {
         let optimizer = Optimizer::new(setup.optimizer, &model.spec.param_lens());
         // The strategy override wins; otherwise the hybrid schedule's low
         // method, otherwise the plain sync method (legacy semantics).
-        let low_spec = setup.strategy.unwrap_or_else(|| match &setup.hybrid {
+        let low_spec = setup.strategy.clone().unwrap_or_else(|| match &setup.hybrid {
             Some(h) => StrategySpec::from(h.low),
             None => StrategySpec::from(setup.sync.method),
         });
         // The hybrid warm-epoch rule lives in step() alone; it swaps the
         // strategy before the first sync if epoch 0 is an FP32 epoch.
-        let current_spec = low_spec;
+        let current_spec = low_spec.clone();
         let session = SyncSessionBuilder::from_sync_options(setup.world_size, &setup.sync)
-            .spec(current_spec)
+            .spec(current_spec.clone())
             .build();
         Ok(Trainer { model, setup, workload, session, low_spec, current_spec, params, optimizer })
     }
@@ -217,11 +222,15 @@ impl<'m> Trainer<'m> {
 
         // Hybrid schedule: FP32 strategy for the warm epochs, the
         // configured strategy afterwards; swapping keeps all buffers.
+        // Compare by reference — cloning the spec (a Box for ef:* codecs)
+        // belongs only in the rare epoch-switch branch, not every step.
+        let fp32 = StrategySpec::Fp32;
         let desired = match &self.setup.hybrid {
-            Some(h) if epoch < h.fp32_epochs => StrategySpec::Fp32,
-            _ => self.low_spec,
+            Some(h) if epoch < h.fp32_epochs => &fp32,
+            _ => &self.low_spec,
         };
-        if desired != self.current_spec {
+        if desired != &self.current_spec {
+            let desired = desired.clone();
             self.session.set_strategy(desired.build());
             self.current_spec = desired;
         }
@@ -240,6 +249,7 @@ impl<'m> Trainer<'m> {
         out.underflow.push(step as f64, report.underflow_frac());
         out.comm_payload_bytes += report.payload_bytes;
         out.comm_exponent_bytes += report.exponent_bytes;
+        out.comm_honest_bytes += report.wire.total_bytes();
 
         // Global step → fractional epoch for the LR schedule.
         let epoch_f = step as f32 / self.setup.steps_per_epoch.max(1) as f32;

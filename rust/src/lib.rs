@@ -14,10 +14,12 @@
 //!   [`collectives::Collective`] trait (ring and hierarchical in-tree).
 //! * [`sync`] — the gradient-synchronization layer: a pluggable
 //!   [`sync::SyncStrategy`] codec trait (prepare → encode → reduce →
-//!   decode) and a buffer-reusing [`sync::SyncSession`] that owns one
-//!   strategy, one collective, and all hot-path scratch. The paper's four
-//!   methods are strategy impls; TernGrad-style ternarization and top-k
-//!   sparsification ship as net-new codecs.
+//!   decode, with structured [`sync::WireCost`] traffic accounting) and a
+//!   buffer-reusing [`sync::SyncSession`] that owns one strategy, one
+//!   collective, and all hot-path scratch. The paper's four methods are
+//!   strategy impls; TernGrad-style ternarization, top-k sparsification
+//!   and QSGD bucketed quantization ship as net-new codecs, and
+//!   [`sync::ErrorFeedback`] layers residual memory over any of them.
 //! * [`aps`] — the paper-level method vocabulary ([`aps::SyncMethod`],
 //!   Algorithm 1 helpers, [`aps::SyncReport`]) and the deprecated
 //!   `aps::synchronize` shim.
@@ -55,8 +57,13 @@
 //! [`sync::SyncSessionBuilder::strategy`]; new topologies implement
 //! [`collectives::Collective`] and plug in via
 //! [`sync::SyncSessionBuilder::collective`]. Configs name built-in
-//! strategies (`fp32 | naive | loss_scaling | aps | ternary | topk`)
-//! through [`sync::StrategySpec`].
+//! strategies (`fp32 | naive | loss_scaling | aps | ternary | topk |
+//! qsgd`) through [`sync::StrategySpec`]; prefixing a name with `ef:`
+//! (e.g. `ef:topk`) wraps it in [`sync::ErrorFeedback`] residual memory,
+//! `sync.qsgd_bits` / `sync.qsgd_bucket` tune the QSGD codec, and
+//! `sync.ternary_seed` seeds both stochastic codecs (default: the
+//! experiment seed). Every codec must pass the shared contract in
+//! `rust/tests/codec_conformance.rs`.
 
 pub mod aps;
 pub mod collectives;

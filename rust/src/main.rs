@@ -70,7 +70,7 @@ fn train(args: &Args) -> Result<()> {
         .with_fp32_last_layer(cfg.fp32_last_layer);
 
     let mut setup = TrainerSetup::new(cfg.world_size, sync);
-    setup.strategy = Some(cfg.strategy);
+    setup.strategy = Some(cfg.strategy.clone());
     setup.hybrid = cfg.hybrid;
     setup.optimizer = cfg.optimizer;
     setup.schedule = cfg.schedule.clone();
@@ -94,11 +94,18 @@ fn train(args: &Args) -> Result<()> {
         println!("final mAcc = {macc:.4}");
     }
     println!("steps = {}, wall = {:.1}s", outcome.steps_run, outcome.wall_secs);
+    // payload is schedule-inclusive (ring/hierarchical moved bytes);
+    // the packed figure is per gradient set — don't compare them as
+    // compression ratio across rows with different collectives.
     println!(
-        "comm/worker: payload {} KiB, exponent-phase {} B{}",
+        "comm/worker: collective payload {} KiB, exponent-phase {} B{}",
         outcome.comm_payload_bytes / 1024,
         outcome.comm_exponent_bytes,
         if outcome.diverged { "  [DIVERGED]" } else { "" }
+    );
+    println!(
+        "codec wire (packed, per gradient set, whole run): {} KiB",
+        outcome.comm_honest_bytes / 1024
     );
     if !outcome.roundoff.points.is_empty() {
         println!("mean Eq.5 round-off = {:.4}", outcome.mean_roundoff());

@@ -1,0 +1,274 @@
+//! [`ErrorFeedback`] — residual error feedback over any [`SyncStrategy`].
+//!
+//! Deep Gradient Compression (Lin et al.) and the 1-bit-SGD line of work
+//! show that what makes aggressive gradient compression *converge* is not
+//! the codec but the memory: keep the part of the gradient the codec
+//! dropped this step and add it back next step. This wrapper implements
+//! that as a composable layer:
+//!
+//! ```text
+//! corrected = grad + residual[worker][layer]     (before inner.encode)
+//! wire      = inner.encode(corrected)
+//! residual[worker][layer] = corrected - reconstruct(wire)
+//! ```
+//!
+//! where `reconstruct` is the inner codec's own `decode` run on a copy of
+//! this worker's wire values with averaging disabled — i.e. exactly the
+//! gradient-scale value this worker's contribution adds to the reduced
+//! sum. No cooperation from the inner codec is needed, so *any* strategy
+//! (built-in or user-supplied) can be wrapped.
+//!
+//! Properties the tests pin:
+//!
+//! * a lossless inner codec ([`super::Fp32Strategy`]) keeps every residual
+//!   exactly zero, and an all-zero residual is bit-transparent (the
+//!   wrapper adds nothing to the wire path — `rust/tests/strategy_layer.rs`
+//!   pins bit-identity against the unwrapped paper strategies);
+//! * residual-corrected ternary / top-k / QSGD reach lower loss than
+//!   their memoryless versions on a heterogeneous quadratic workload
+//!   (`rust/tests/error_feedback.rs`);
+//! * non-finite residual entries are flushed to zero, so one divergent
+//!   step cannot poison the memory forever (divergence still reaches the
+//!   optimizer through the wire values themselves).
+//!
+//! All residual and reconstruction scratch lives in the wrapper and is
+//! reused step after step — the session's no-per-step-allocation
+//! guarantee extends to wrapped codecs once buffers reach steady state.
+//! One caveat worth knowing: `prepare` (factor agreement) runs on the
+//! *raw* gradients, so codecs whose scale is agreed there encode
+//! corrected values against a scale chosen for uncorrected ones.
+//! Residuals are geometrically bounded by the codec's relative
+//! quantization error (steady-state `|corrected| ≲ |g|/(1-ε)`), which
+//! every scale-agreeing codec absorbs: ternary clamps its symbol
+//! probability at 1, and the cast codecs (APS/loss-scaling) keep ~2×
+//! headroom by construction — APS bounds the shifted worst-case sum at
+//! `2^max_exponent` while the format represents up to
+//! `(2-2^-m)·2^max_exponent` — far more than the few-percent inflation
+//! a residual can add.
+
+use super::{Factors, GradView, LayerCtx, SyncStrategy, WireCost};
+use crate::collectives::{Collective, ReduceStats};
+use crate::cpd::FpFormat;
+
+/// Residual error feedback around an inner [`SyncStrategy`].
+///
+/// `S` may be a concrete strategy (`ErrorFeedback<TernaryStrategy>`) or a
+/// boxed one (`ErrorFeedback<Box<dyn SyncStrategy>>`, which is what
+/// `StrategySpec::ErrorFeedback` builds).
+pub struct ErrorFeedback<S: SyncStrategy> {
+    inner: S,
+    /// `residual[worker][layer]` — the signal the codec dropped, at
+    /// gradient scale. Lazily sized; reset to zeros when a layer's length
+    /// changes between steps.
+    residual: Vec<Vec<Vec<f32>>>,
+    /// Scratch for `grad + residual` (the codec's actual input).
+    corrected: Vec<f32>,
+    /// Scratch for the per-worker decode reconstruction.
+    recon: Vec<f32>,
+}
+
+impl<S: SyncStrategy> ErrorFeedback<S> {
+    pub fn new(inner: S) -> Self {
+        ErrorFeedback { inner, residual: Vec::new(), corrected: Vec::new(), recon: Vec::new() }
+    }
+
+    /// The wrapped codec.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// This worker × layer's current residual (empty before the first
+    /// encode of that slot). Exposed so tests can pin residual behaviour.
+    pub fn residual(&self, worker: usize, layer: usize) -> &[f32] {
+        self.residual
+            .get(worker)
+            .and_then(|w| w.get(layer))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Sum of |residual| over every worker and layer — a cheap "how much
+    /// signal is in flight" diagnostic.
+    pub fn residual_l1(&self) -> f64 {
+        self.residual
+            .iter()
+            .flat_map(|w| w.iter())
+            .flat_map(|l| l.iter())
+            .map(|&v| v.abs() as f64)
+            .sum()
+    }
+
+    /// Make `residual[worker][layer]` exist with length `n` (zeroed on
+    /// first use or when the layer shape changed).
+    fn ensure_slot(&mut self, worker: usize, layer: usize, n: usize) {
+        if self.residual.len() <= worker {
+            self.residual.resize_with(worker + 1, Vec::new);
+        }
+        let per_layer = &mut self.residual[worker];
+        if per_layer.len() <= layer {
+            per_layer.resize_with(layer + 1, Vec::new);
+        }
+        let slot = &mut per_layer[layer];
+        if slot.len() != n {
+            slot.clear();
+            slot.resize(n, 0.0);
+        }
+    }
+}
+
+impl<S: SyncStrategy> SyncStrategy for ErrorFeedback<S> {
+    fn name(&self) -> &'static str {
+        // `&'static` forces a closed mapping; unknown inner codecs get the
+        // bare prefix (their session label, not correctness, is affected).
+        match self.inner.name() {
+            "fp32" => "ef:fp32",
+            "naive" => "ef:naive",
+            "loss_scaling" => "ef:loss_scaling",
+            "aps" => "ef:aps",
+            "ternary" => "ef:ternary",
+            "topk" => "ef:topk",
+            "qsgd" => "ef:qsgd",
+            _ => "ef",
+        }
+    }
+
+    fn wire_format(&self) -> FpFormat {
+        self.inner.wire_format()
+    }
+
+    fn prepare(
+        &mut self,
+        grads: &GradView,
+        collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        self.inner.prepare(grads, collective, factors)
+    }
+
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        let n = src.len();
+        self.ensure_slot(ctx.worker, ctx.layer, n);
+
+        // corrected = src + residual. A zero residual entry passes the
+        // source bits through untouched (adding +0.0 would flip -0.0 to
+        // +0.0 and break bit-transparency of the zero-residual state).
+        self.corrected.clear();
+        self.corrected.extend(
+            src.iter()
+                .zip(self.residual[ctx.worker][ctx.layer].iter())
+                .map(|(&s, &r)| if r == 0.0 { s } else { s + r }),
+        );
+
+        self.inner.encode(&self.corrected, ctx, out);
+
+        // Reconstruct this worker's effective contribution at gradient
+        // scale: the inner decode with averaging off (world division is
+        // the only cross-worker part of decode for every shipped codec).
+        self.recon.clear();
+        self.recon.extend_from_slice(out);
+        let solo = LayerCtx { average: false, ..*ctx };
+        self.inner.decode(&mut self.recon, &solo);
+
+        let res = &mut self.residual[ctx.worker][ctx.layer];
+        for i in 0..n {
+            let d = self.corrected[i] - self.recon[i];
+            res[i] = if d.is_finite() { d } else { 0.0 };
+        }
+    }
+
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        self.inner.decode(reduced, ctx);
+    }
+
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        self.inner.wire_cost(encoded, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::Rounding;
+    use crate::sync::strategies::{Fp32Strategy, TernaryStrategy, TopKStrategy};
+
+    fn ctx(world: usize, worker: usize) -> LayerCtx {
+        LayerCtx {
+            layer: 0,
+            num_layers: 1,
+            worker,
+            world,
+            factor_exp: 0,
+            fmt: FpFormat::FP32,
+            fp32_passthrough: false,
+            rounding: Rounding::NearestEven,
+            average: true,
+            step: 0,
+        }
+    }
+
+    #[test]
+    fn lossless_inner_keeps_residual_exactly_zero() {
+        let mut ef = ErrorFeedback::new(Fp32Strategy);
+        let src = vec![1.5f32, -0.25, 0.0, -0.0, 3.0e-40, 1.0e20];
+        let mut out = vec![0.0f32; src.len()];
+        for _ in 0..3 {
+            ef.encode(&src, &ctx(4, 0), &mut out);
+            assert_eq!(out, src);
+            assert!(ef.residual(0, 0).iter().all(|&r| r == 0.0), "{:?}", ef.residual(0, 0));
+        }
+        assert_eq!(ef.residual_l1(), 0.0);
+    }
+
+    #[test]
+    fn zero_residual_is_bit_transparent() {
+        // -0.0 must survive the corrected-gradient construction.
+        let mut ef = ErrorFeedback::new(Fp32Strategy);
+        let src = vec![-0.0f32, 0.0];
+        let mut out = vec![1.0f32; 2];
+        ef.encode(&src, &ctx(2, 1), &mut out);
+        assert_eq!(out[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(out[1].to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn lossy_inner_accumulates_the_dropped_signal() {
+        // top-k keeps 1 of 4 values; the other three must land in the
+        // residual, and get re-offered (and eventually sent) next steps.
+        let mut ef = ErrorFeedback::new(TopKStrategy::new(0.25));
+        let src = vec![0.1f32, -4.0, 0.2, 0.3];
+        let mut out = vec![0.0f32; 4];
+        ef.encode(&src, &ctx(1, 0), &mut out);
+        assert_eq!(out, vec![0.0, -4.0, 0.0, 0.0]);
+        assert_eq!(ef.residual(0, 0), &[0.1, 0.0, 0.2, 0.3]);
+        // second step, zero gradient: the biggest residual goes out.
+        let zeros = vec![0.0f32; 4];
+        ef.encode(&zeros, &ctx(1, 0), &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 0.3]);
+        assert_eq!(ef.residual(0, 0), &[0.1, 0.0, 0.2, 0.0]);
+    }
+
+    #[test]
+    fn residual_slots_are_per_worker_and_reset_on_shape_change() {
+        let mut ef = ErrorFeedback::new(TopKStrategy::new(0.5));
+        let mut out = vec![0.0f32; 2];
+        ef.encode(&[1.0, 0.5], &ctx(2, 0), &mut out);
+        ef.encode(&[2.0, 0.25], &ctx(2, 1), &mut out);
+        assert_eq!(ef.residual(2, 0), &[] as &[f32], "untouched worker slot");
+        assert_eq!(ef.residual(0, 0), &[0.0, 0.5]);
+        assert_eq!(ef.residual(1, 0), &[0.0, 0.25]);
+        // shape change resets the slot to zeros before use
+        let mut out3 = vec![0.0f32; 3];
+        ef.encode(&[1.0, 2.0, 3.0], &ctx(2, 0), &mut out3);
+        assert_eq!(ef.residual(0, 0).len(), 3);
+    }
+
+    #[test]
+    fn non_finite_residuals_are_flushed() {
+        let mut ef = ErrorFeedback::new(TernaryStrategy::new(1));
+        let src = vec![f32::INFINITY, 0.5];
+        let mut out = vec![0.0f32; 2];
+        ef.encode(&src, &ctx(1, 0), &mut out);
+        assert!(out[0].is_infinite(), "divergence still reaches the wire");
+        assert!(ef.residual(0, 0).iter().all(|r| r.is_finite()));
+    }
+}

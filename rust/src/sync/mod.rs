@@ -2,18 +2,31 @@
 //!
 //! The paper treats APS as one point in an open family of low-precision
 //! gradient-synchronization codecs (FP32, naive cast, loss scaling, APS,
-//! hybrid — and beyond: TernGrad, Deep Gradient Compression, …). This
-//! module is the extension point that makes the family open:
+//! hybrid — and beyond: TernGrad, QSGD, Deep Gradient Compression, …).
+//! This module is the extension point that makes the family open:
 //!
 //! * [`SyncStrategy`] — a codec: `prepare` (agree on per-layer scale
 //!   factors across workers), `encode` (one worker's layer → wire
 //!   values), `decode` (reduced wire values → gradient scale), plus
-//!   [`SyncStrategy::wire_format`] / [`SyncStrategy::extra_bytes`] for
-//!   traffic accounting. The four paper methods are
-//!   [`strategies::Fp32Strategy`], [`strategies::NaiveStrategy`],
-//!   [`strategies::LossScalingStrategy`] and [`strategies::ApsStrategy`];
-//!   [`strategies::TernaryStrategy`] (TernGrad-style) and
-//!   [`strategies::TopKStrategy`] (sparsification) prove extensibility.
+//!   [`SyncStrategy::wire_format`] for the reduction precision and
+//!   [`SyncStrategy::wire_cost`] for honest traffic accounting. The four
+//!   paper methods are [`strategies::Fp32Strategy`],
+//!   [`strategies::NaiveStrategy`], [`strategies::LossScalingStrategy`]
+//!   and [`strategies::ApsStrategy`]; [`strategies::TernaryStrategy`]
+//!   (TernGrad-style), [`strategies::TopKStrategy`] (sparsification) and
+//!   [`strategies::QsgdStrategy`] (bucketed stochastic quantization) are
+//!   net-new codecs proving extensibility.
+//! * [`ErrorFeedback`] — a composable wrapper that layers residual memory
+//!   (Deep-Gradient-Compression-style error feedback) over any strategy:
+//!   the quantization error of each step is stored per worker × layer and
+//!   added back to the next step's gradient before encoding, turning
+//!   lossy codecs into convergent ones. Configs spell it `ef:<codec>`.
+//! * [`WireCost`] — the structured per-worker traffic model a codec
+//!   reports through [`SyncStrategy::wire_cost`]: packed payload *value
+//!   bits*, sparse-codec *index bits*, and side-channel *metadata bytes*
+//!   (per-bucket scales and the like). Sparse codecs such as top-k
+//!   finally account their index traffic honestly; the session aggregates
+//!   the per-layer costs into [`crate::aps::SyncReport::wire`].
 //! * [`crate::collectives::Collective`] — a pluggable all-reduce
 //!   (ring / hierarchical today), consumed by strategies and the session.
 //! * [`SyncSession`] — owns one strategy, one collective and all scratch
@@ -22,17 +35,26 @@
 //!   with no per-step element-storage allocation. Build it with
 //!   [`SyncSessionBuilder`].
 //!
+//! Every shipped codec (and every future one) is pinned by the shared
+//! conformance contract in `rust/tests/codec_conformance.rs`: encode
+//! writes every element, round-trips stay bounded on hostile inputs,
+//! wire costs never under-report, replays are deterministic, and ragged
+//! inputs panic.
+//!
 //! The legacy free function `aps::synchronize` survives as a deprecated
 //! shim over a throwaway session; `aps::legacy::synchronize` keeps the
 //! pre-trait implementation for the bit-identity equivalence suite.
 
+pub mod feedback;
 pub mod session;
 pub mod strategies;
 
 pub use crate::aps::{LayerReport, SyncReport};
+pub use feedback::ErrorFeedback;
 pub use session::{SyncSession, SyncSessionBuilder};
 pub use strategies::{
-    ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, TernaryStrategy, TopKStrategy,
+    ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, QsgdStrategy, TernaryStrategy,
+    TopKStrategy,
 };
 
 use crate::aps::SyncMethod;
@@ -152,6 +174,73 @@ pub struct LayerCtx {
     pub step: u64,
 }
 
+/// Structured per-worker wire cost of one encoded tensor — what a real
+/// deployment would put on the network for it, as opposed to the
+/// simulation's dense `f32` buffers.
+///
+/// The three components keep sparse and quantized codecs honest:
+///
+/// * `value_bits` — packed payload bits for the values actually shipped
+///   (`n × format bits` for dense codecs, `nnz × 32` for top-k,
+///   `n × qsgd_bits` for QSGD, `2n` for packed ternary symbols);
+/// * `index_bits` — position bits a sparse codec needs so the receiver
+///   can place the values (`nnz × ⌈log2 n⌉` for top-k; zero for dense);
+/// * `metadata_bytes` — side-channel constants shipped alongside the
+///   payload (QSGD's per-bucket scales; zero when the prepare phase
+///   already carries the scale, as for APS/ternary exponent agreement).
+///
+/// Costs add ([`core::ops::AddAssign`]) across layers and workers; the
+/// session folds one cost per worker × layer into
+/// [`crate::aps::SyncReport::wire`] as a per-worker mean.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireCost {
+    /// Packed payload bits for the transmitted values.
+    pub value_bits: u64,
+    /// Sparse-codec position/index bits (zero for dense codecs).
+    pub index_bits: u64,
+    /// Side-channel metadata bytes (scales, bucket norms, …).
+    pub metadata_bytes: u64,
+}
+
+impl WireCost {
+    /// Dense accounting: every element ships in `fmt`, no indices, no
+    /// metadata.
+    pub fn dense(elements: usize, fmt: FpFormat) -> Self {
+        WireCost {
+            value_bits: elements as u64 * fmt.total_bits() as u64,
+            index_bits: 0,
+            metadata_bytes: 0,
+        }
+    }
+
+    /// Total bytes on the wire (value+index bits rounded up to whole
+    /// bytes, plus metadata).
+    pub fn total_bytes(&self) -> u64 {
+        (self.value_bits + self.index_bits).div_ceil(8) + self.metadata_bytes
+    }
+
+    /// Per-worker mean of a cost summed over `world` workers. Rounds up
+    /// so the mean never under-reports (exact whenever all workers ship
+    /// the same shape, as dense codecs do — the legacy bit-identity
+    /// equivalence relies on that exactness).
+    pub(crate) fn per_worker(self, world: usize) -> WireCost {
+        let w = world as u64;
+        WireCost {
+            value_bits: self.value_bits.div_ceil(w),
+            index_bits: self.index_bits.div_ceil(w),
+            metadata_bytes: self.metadata_bytes.div_ceil(w),
+        }
+    }
+}
+
+impl core::ops::AddAssign for WireCost {
+    fn add_assign(&mut self, rhs: WireCost) {
+        self.value_bits += rhs.value_bits;
+        self.index_bits += rhs.index_bits;
+        self.metadata_bytes += rhs.metadata_bytes;
+    }
+}
+
 /// A gradient-synchronization codec.
 ///
 /// A strategy is pure policy: it never owns communication or reduction
@@ -188,11 +277,43 @@ pub trait SyncStrategy {
     /// in place (undo the factor shift, apply averaging).
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx);
 
-    /// Extra wire bytes per synchronization beyond the payload and
-    /// prepare phases (e.g. a per-layer scalar broadcast). Default: none.
-    fn extra_bytes(&self, num_layers: usize) -> u64 {
-        let _ = num_layers;
-        0
+    /// The honest per-worker wire cost of one encoded layer (`encoded` is
+    /// this worker's [`SyncStrategy::encode`] output). The default is
+    /// dense shipping in the layer's wire format; sparse/quantized codecs
+    /// override it to account index traffic and metadata. Must never
+    /// under-report: the conformance suite checks
+    /// `value_bits + index_bits ≥ nnz(encoded)`.
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        WireCost::dense(encoded.len(), ctx.fmt)
+    }
+}
+
+/// Forwarding impl so boxed strategies compose (e.g.
+/// `ErrorFeedback<Box<dyn SyncStrategy>>`, which is what
+/// [`StrategySpec::build`] produces for `ef:`-prefixed specs).
+impl SyncStrategy for Box<dyn SyncStrategy> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn wire_format(&self) -> FpFormat {
+        (**self).wire_format()
+    }
+    fn prepare(
+        &mut self,
+        grads: &GradView,
+        collective: &dyn Collective,
+        factors: &mut Factors,
+    ) -> ReduceStats {
+        (**self).prepare(grads, collective, factors)
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        (**self).encode(src, ctx, out)
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        (**self).decode(reduced, ctx)
+    }
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        (**self).wire_cost(encoded, ctx)
     }
 }
 
@@ -212,7 +333,7 @@ pub(crate) fn unscale_in_place(xs: &mut [f32], factor_exp: i32, world: usize, av
 /// flags parse into. The *open* extension point is
 /// [`SyncSessionBuilder::strategy`], which accepts any boxed
 /// [`SyncStrategy`]; this enum only enumerates the codecs shipped in-tree.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum StrategySpec {
     /// Full-precision baseline.
     Fp32,
@@ -226,33 +347,63 @@ pub enum StrategySpec {
     Ternary { seed: u64 },
     /// Top-k magnitude sparsification (keep the largest `frac` share).
     TopK { frac: f32 },
+    /// QSGD-style bucketed stochastic quantization (`bits` per value
+    /// including sign, per-bucket max-norm scale).
+    Qsgd { bits: u8, bucket: usize, seed: u64 },
+    /// Residual error feedback layered over any built-in codec
+    /// (config name `ef:<codec>`).
+    ErrorFeedback { inner: Box<StrategySpec> },
 }
 
 impl StrategySpec {
     /// Instantiate the strategy this spec describes.
     pub fn build(&self) -> Box<dyn SyncStrategy> {
-        match *self {
+        match self {
             StrategySpec::Fp32 => Box::new(Fp32Strategy),
-            StrategySpec::Naive { fmt } => Box::new(NaiveStrategy::new(fmt)),
+            StrategySpec::Naive { fmt } => Box::new(NaiveStrategy::new(*fmt)),
             StrategySpec::LossScaling { fmt, factor_exp } => {
-                Box::new(LossScalingStrategy::new(fmt, factor_exp))
+                Box::new(LossScalingStrategy::new(*fmt, *factor_exp))
             }
-            StrategySpec::Aps { fmt } => Box::new(ApsStrategy::new(fmt)),
-            StrategySpec::Ternary { seed } => Box::new(TernaryStrategy::new(seed)),
-            StrategySpec::TopK { frac } => Box::new(TopKStrategy::new(frac)),
+            StrategySpec::Aps { fmt } => Box::new(ApsStrategy::new(*fmt)),
+            StrategySpec::Ternary { seed } => Box::new(TernaryStrategy::new(*seed)),
+            StrategySpec::TopK { frac } => Box::new(TopKStrategy::new(*frac)),
+            StrategySpec::Qsgd { bits, bucket, seed } => {
+                Box::new(QsgdStrategy::new(*bits, *bucket, *seed))
+            }
+            StrategySpec::ErrorFeedback { inner } => Box::new(ErrorFeedback::new(inner.build())),
         }
     }
 
     /// The legacy closed-enum method, when this spec has one.
     pub fn as_sync_method(&self) -> Option<SyncMethod> {
-        match *self {
+        match self {
             StrategySpec::Fp32 => Some(SyncMethod::Fp32),
-            StrategySpec::Naive { fmt } => Some(SyncMethod::Naive { fmt }),
+            StrategySpec::Naive { fmt } => Some(SyncMethod::Naive { fmt: *fmt }),
             StrategySpec::LossScaling { fmt, factor_exp } => {
-                Some(SyncMethod::LossScaling { fmt, factor_exp })
+                Some(SyncMethod::LossScaling { fmt: *fmt, factor_exp: *factor_exp })
             }
-            StrategySpec::Aps { fmt } => Some(SyncMethod::Aps { fmt }),
-            StrategySpec::Ternary { .. } | StrategySpec::TopK { .. } => None,
+            StrategySpec::Aps { fmt } => Some(SyncMethod::Aps { fmt: *fmt }),
+            StrategySpec::Ternary { .. }
+            | StrategySpec::TopK { .. }
+            | StrategySpec::Qsgd { .. }
+            | StrategySpec::ErrorFeedback { .. } => None,
+        }
+    }
+
+    /// Compact config-style label (`aps/e5m2`, `topk@0.25`, `qsgd b4/256`,
+    /// `ef:ternary`) for tables and bench rows.
+    pub fn label(&self) -> String {
+        match self {
+            StrategySpec::Fp32 => "fp32".to_string(),
+            StrategySpec::Naive { fmt } => format!("naive/{fmt}"),
+            StrategySpec::LossScaling { fmt, factor_exp } => {
+                format!("loss_scaling/{fmt}^{factor_exp}")
+            }
+            StrategySpec::Aps { fmt } => format!("aps/{fmt}"),
+            StrategySpec::Ternary { .. } => "ternary".to_string(),
+            StrategySpec::TopK { frac } => format!("topk@{frac}"),
+            StrategySpec::Qsgd { bits, bucket, .. } => format!("qsgd b{bits}/{bucket}"),
+            StrategySpec::ErrorFeedback { inner } => format!("ef:{}", inner.label()),
         }
     }
 }
@@ -287,6 +438,42 @@ mod tests {
         }
         assert_eq!(StrategySpec::Ternary { seed: 1 }.as_sync_method(), None);
         assert_eq!(StrategySpec::TopK { frac: 0.25 }.as_sync_method(), None);
+        assert_eq!(
+            StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 1 }.as_sync_method(),
+            None
+        );
+        assert_eq!(
+            StrategySpec::ErrorFeedback { inner: Box::new(StrategySpec::Fp32) }.as_sync_method(),
+            None
+        );
+    }
+
+    #[test]
+    fn spec_labels_and_builds() {
+        let ef = StrategySpec::ErrorFeedback {
+            inner: Box::new(StrategySpec::Ternary { seed: 3 }),
+        };
+        assert_eq!(ef.label(), "ef:ternary");
+        assert_eq!(ef.build().name(), "ef:ternary");
+        let q = StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 9 };
+        assert_eq!(q.label(), "qsgd b4/256");
+        assert_eq!(q.build().name(), "qsgd");
+        assert_eq!(StrategySpec::Fp32.label(), "fp32");
+    }
+
+    #[test]
+    fn wire_cost_arithmetic() {
+        let dense = WireCost::dense(100, FpFormat::E5M2);
+        assert_eq!(dense.value_bits, 800);
+        assert_eq!(dense.total_bytes(), 100);
+        let mut c = WireCost { value_bits: 7, index_bits: 2, metadata_bytes: 3 };
+        // 9 bits → 2 bytes, plus 3 metadata
+        assert_eq!(c.total_bytes(), 5);
+        c += WireCost::dense(2, FpFormat::FP32);
+        assert_eq!(c.value_bits, 71);
+        assert_eq!(c.index_bits, 2);
+        let half = WireCost { value_bits: 10, index_bits: 4, metadata_bytes: 8 }.per_worker(2);
+        assert_eq!(half, WireCost { value_bits: 5, index_bits: 2, metadata_bytes: 4 });
     }
 
     #[test]

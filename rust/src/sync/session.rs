@@ -6,14 +6,15 @@
 //! allocates them once (growing to the largest layer on first use) and
 //! then runs [`SyncSession::step`] with no per-step element-storage
 //! allocation — only O(world) pointer bookkeeping inside the ring split.
-//! (Two acknowledged exceptions, tracked in ROADMAP.md: Kahan
-//! compensation vectors and hierarchical per-group partials still
-//! allocate inside the collective when those modes are enabled.)
+//! The hierarchical collective keeps its per-group partials in reusable
+//! scratch too (`rust/tests/session_alloc.rs` pins the steady state with
+//! a counting allocator); the one acknowledged exception, tracked in
+//! ROADMAP.md, is Kahan compensation vectors when that mode is enabled.
 //! Reports and reduced gradients are returned by reference into
 //! session-owned storage; reusing a session yields bit-identical results
 //! to fresh calls (pinned by `rust/tests/strategy_layer.rs`).
 
-use super::{Factors, GradView, LayerCtx, StrategySpec, SyncStrategy};
+use super::{ErrorFeedback, Factors, GradView, LayerCtx, StrategySpec, SyncStrategy, WireCost};
 use crate::aps::{LayerReport, SyncOptions, SyncReport};
 use crate::collectives::{Collective, ReduceOptions, Topology};
 use crate::cpd::{FpFormat, Rounding};
@@ -30,6 +31,7 @@ pub struct SyncSessionBuilder {
     average: bool,
     fp32_last_layer: bool,
     fused: bool,
+    error_feedback: bool,
 }
 
 impl SyncSessionBuilder {
@@ -48,6 +50,7 @@ impl SyncSessionBuilder {
             average: true,
             fp32_last_layer: false,
             fused: false,
+            error_feedback: false,
         }
     }
 
@@ -73,6 +76,15 @@ impl SyncSessionBuilder {
     /// Use a built-in strategy described by `spec`.
     pub fn spec(self, spec: StrategySpec) -> Self {
         self.strategy(spec.build())
+    }
+
+    /// Wrap the chosen strategy in [`ErrorFeedback`] (residual memory).
+    /// Applied at [`Self::build`] time, so it composes with
+    /// [`Self::strategy`]/[`Self::spec`] in either order; with no strategy
+    /// set it wraps the FP32 default, which is a harmless no-op.
+    pub fn error_feedback(mut self) -> Self {
+        self.error_feedback = true;
+        self
     }
 
     /// Plug in any collective (overrides [`Self::with_topology`]).
@@ -118,8 +130,19 @@ impl SyncSessionBuilder {
         let collective =
             self.collective.unwrap_or_else(|| self.topology.collective(world));
         assert_eq!(collective.world_size(), world, "collective world size mismatch");
+        let mut strategy = self.strategy.unwrap_or_else(|| StrategySpec::Fp32.build());
+        // Idempotent: a strategy that is already error-feedback-wrapped
+        // (an `ef:` spec from config) is left alone — double residual
+        // memory is never what the caller wants. Matches exactly the
+        // names ErrorFeedback::name() can produce, so a custom codec
+        // whose name merely begins with "ef" still gets wrapped.
+        let already_wrapped =
+            strategy.name() == "ef" || strategy.name().starts_with("ef:");
+        if self.error_feedback && !already_wrapped {
+            strategy = Box::new(ErrorFeedback::new(strategy));
+        }
         SyncSession {
-            strategy: self.strategy.unwrap_or_else(|| StrategySpec::Fp32.build()),
+            strategy,
             collective,
             rounding: self.rounding,
             kahan: self.kahan,
@@ -180,6 +203,9 @@ impl SyncSession {
         self.report.exponent_bytes = 0;
         self.report.steps = 0;
         self.report.messages = if self.fused { 1 } else { num_layers };
+        // Honest per-worker wire cost, summed over workers and layers here
+        // and averaged into the report at the end of the step.
+        let mut wire_cost = WireCost::default();
 
         // ---- Phase 1: agree on per-layer factors. ----------------------
         self.factors.reset(num_layers);
@@ -220,6 +246,10 @@ impl SyncSession {
                 let buf = &mut self.wire[w];
                 buf.resize(n, 0.0);
                 self.strategy.encode(src, &ctx, buf);
+                // One extra read pass for sparse codecs (nnz counting);
+                // dense costs are O(1). Kept as a trait call so the
+                // session never assumes how a codec maps zeros.
+                wire_cost += self.strategy.wire_cost(&self.wire[w], &ctx);
                 for (&x, &q) in src.iter().zip(self.wire[w].iter()) {
                     if x != 0.0 {
                         nonzero_in += 1;
@@ -258,7 +288,7 @@ impl SyncSession {
             // One fused message: pay the per-message step count once.
             self.report.steps += self.collective.steps_per_message();
         }
-        self.report.payload_bytes += self.strategy.extra_bytes(num_layers);
+        self.report.wire = wire_cost.per_worker(world);
         self.steps_done += 1;
         (&self.reduced, &self.report)
     }
@@ -358,6 +388,52 @@ mod tests {
         assert!(report.exponent_bytes > 0, "APS pays the exponent phase");
         assert!(report.payload_bytes > 0);
         assert_eq!(s.steps_done(), 1);
+    }
+
+    #[test]
+    fn session_reports_honest_wire_costs() {
+        let g = grads(4, &[64, 32]);
+        // fp32: honest cost == dense FP32 payload of one gradient set
+        let mut s = SyncSessionBuilder::new(4).spec(StrategySpec::Fp32).build();
+        let (_, report) = s.step(&g);
+        assert_eq!(report.wire, WireCost::dense(96, FpFormat::FP32));
+        assert_eq!(report.wire.total_bytes(), 96 * 4);
+        // top-k: index traffic finally shows up, and the honest figure is
+        // far below the dense payload
+        let mut s = SyncSessionBuilder::new(4).spec(StrategySpec::TopK { frac: 0.25 }).build();
+        let (_, report) = s.step(&g);
+        assert!(report.wire.index_bits > 0, "top-k must account index bits");
+        assert!(report.wire.total_bytes() < 96 * 4, "{:?}", report.wire);
+        // qsgd: packed value bits + per-bucket scales
+        let mut s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 1 })
+            .build();
+        let (_, report) = s.step(&g);
+        assert_eq!(report.wire.value_bits, 96 * 4);
+        assert_eq!(report.wire.metadata_bytes, 4 * 3);
+        // the packed 4-bit payload beats the simulated dense FP32 figure
+        assert!(report.honest_bytes() < report.total_bytes(), "{report:?}");
+    }
+
+    #[test]
+    fn error_feedback_builder_wraps_the_strategy() {
+        let g = grads(4, &[32]);
+        let mut s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Ternary { seed: 3 })
+            .error_feedback()
+            .build();
+        assert_eq!(s.strategy_name(), "ef:ternary");
+        let (_, report) = s.step(&g);
+        assert_eq!(report.layers.len(), 1);
+        // applied at build time → order-independent w.r.t. spec()
+        let s = SyncSessionBuilder::new(4)
+            .error_feedback()
+            .spec(StrategySpec::Ternary { seed: 3 })
+            .build();
+        assert_eq!(s.strategy_name(), "ef:ternary");
+        // bare error_feedback() wraps the FP32 default
+        let d = SyncSessionBuilder::new(2).error_feedback().build();
+        assert_eq!(d.strategy_name(), "ef:fp32");
     }
 
     #[test]

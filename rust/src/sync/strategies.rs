@@ -4,12 +4,14 @@
 //! [`LossScalingStrategy`], [`ApsStrategy`]) are bit-identical
 //! re-implementations of the pre-trait `SyncMethod` paths — the
 //! equivalence suite in `rust/tests/strategy_layer.rs` pins them against
-//! `aps::legacy::synchronize`. [`TernaryStrategy`] and [`TopKStrategy`]
-//! are net-new codecs proving the trait layer is an open extension point
-//! (TernGrad [28] and Deep-Gradient-Compression-style sparsification from
-//! the related work).
+//! `aps::legacy::synchronize`. [`TernaryStrategy`], [`TopKStrategy`] and
+//! [`QsgdStrategy`] are net-new codecs proving the trait layer is an open
+//! extension point (TernGrad [28], Deep-Gradient-Compression-style
+//! sparsification, and QSGD bucketed quantization from the related work).
+//! All of them are pinned by the shared contract in
+//! `rust/tests/codec_conformance.rs`.
 
-use super::{unscale_in_place, Factors, GradView, LayerCtx, SyncStrategy};
+use super::{unscale_in_place, Factors, GradView, LayerCtx, SyncStrategy, WireCost};
 use crate::aps::local_max_exp;
 use crate::collectives::{Collective, ReduceStats};
 use crate::cpd::{quantize_shifted_slice_into, FpFormat};
@@ -20,6 +22,18 @@ use crate::cpd::{quantize_shifted_slice_into, FpFormat};
 #[inline]
 fn cast_encode(src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
     quantize_shifted_slice_into(src, ctx.factor_exp, ctx.fmt, ctx.rounding, out);
+}
+
+/// One uniform draw in `[0, 1)` at a `(seed, step, worker, layer, elem)`
+/// stream position — the shared RNG of the stochastic codecs. Each codec
+/// domain-separates its seed before calling so two codecs configured with
+/// the same user seed never consume correlated uniforms.
+#[inline]
+fn unit_draw(seed: u64, step: u64, worker: u64, layer: u64, elem: u64) -> f32 {
+    let mut h = crate::cpd::cast::splitmix64(seed ^ step);
+    h = crate::cpd::cast::splitmix64(h ^ (worker << 32) ^ layer);
+    h = crate::cpd::cast::splitmix64(h ^ elem);
+    (h >> 40) as f32 / (1u64 << 24) as f32
 }
 
 /// Full-precision baseline: FP32 on the wire, no factors.
@@ -187,12 +201,11 @@ impl TernaryStrategy {
         TernaryStrategy { seed }
     }
 
-    /// One uniform draw in `[0, 1)` from the stream position.
+    /// One uniform draw in `[0, 1)` from the stream position (ternary is
+    /// the un-salted [`unit_draw`] stream, unchanged since the codec
+    /// landed — sessions replay historic runs bit-identically).
     fn unit(&self, step: u64, worker: u64, layer: u64, elem: u64) -> f32 {
-        let mut h = crate::cpd::cast::splitmix64(self.seed ^ step);
-        h = crate::cpd::cast::splitmix64(h ^ (worker << 32) ^ layer);
-        h = crate::cpd::cast::splitmix64(h ^ elem);
-        (h >> 40) as f32 / (1u64 << 24) as f32
+        unit_draw(self.seed, step, worker, layer, elem)
     }
 }
 
@@ -260,6 +273,14 @@ impl SyncStrategy for TernaryStrategy {
         // Symbols are already at gradient scale: only averaging remains.
         unscale_in_place(reduced, 0, ctx.world, ctx.average);
     }
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        if ctx.fp32_passthrough {
+            return WireCost::dense(encoded.len(), FpFormat::FP32);
+        }
+        // A packed deployment ships one 2-bit symbol per element; the
+        // per-layer scale exponent already rides the prepare phase.
+        WireCost { value_bits: 2 * encoded.len() as u64, index_bits: 0, metadata_bytes: 0 }
+    }
 }
 
 /// Top-k magnitude sparsification (Deep Gradient Compression-style).
@@ -269,9 +290,10 @@ impl SyncStrategy for TernaryStrategy {
 /// sum then averages as usual. Dropped elements show up in the
 /// [`crate::aps::SyncReport`] as wire underflow — exactly what they are
 /// from the optimizer's point of view. Deterministic (threshold
-/// selection, no RNG), so sessions replay bit-identically. The
-/// simulation accounts dense FP32 words; a real deployment ships `k`
-/// (index, value) pairs.
+/// selection, no RNG), so sessions replay bit-identically. The simulated
+/// reduction runs over dense FP32 buffers; the `(index, value)` pairs a
+/// real deployment ships are accounted by [`SyncStrategy::wire_cost`]
+/// (32 value bits plus `⌈log2 n⌉` index bits per survivor).
 #[derive(Clone, Debug)]
 pub struct TopKStrategy {
     frac: f32,
@@ -323,6 +345,135 @@ impl SyncStrategy for TopKStrategy {
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
         unscale_in_place(reduced, 0, ctx.world, ctx.average);
     }
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        if ctx.fp32_passthrough {
+            return WireCost::dense(encoded.len(), FpFormat::FP32);
+        }
+        // Honest sparse accounting: each survivor ships its FP32 value
+        // plus a position index wide enough to address the layer.
+        let n = encoded.len() as u64;
+        let nnz = encoded.iter().filter(|&&v| v != 0.0).count() as u64;
+        let index_width = (64 - n.saturating_sub(1).leading_zeros() as u64).max(1);
+        WireCost { value_bits: 32 * nnz, index_bits: index_width * nnz, metadata_bytes: 0 }
+    }
+}
+
+/// QSGD-style bucketed stochastic quantization (Alistarh et al.).
+///
+/// Each layer is cut into buckets of `bucket` elements. Within a bucket
+/// the worker takes its max magnitude `m`, splits `[0, m]` into
+/// `s = 2^(bits-1) - 1` levels, and stochastically rounds each `|g|·s/m`
+/// to a neighbouring integer level so the symbol is unbiased
+/// (`E[symbol] = g`). The wire value is `sign · level · m/s`; the
+/// per-bucket scale `m` rides as 4 metadata bytes. Levels are
+/// deterministic in `(seed, step, worker, layer, element)`, so runs
+/// replay bit-identically. Scales are per-worker (no agreement phase),
+/// and the simulated reduction sums the reconstructed values on a dense
+/// FP32 wire; [`SyncStrategy::wire_cost`] accounts the packed
+/// `bits`-per-element payload plus the bucket scales. Under the
+/// fp32-last-layer policy the protected layer passes through dense.
+#[derive(Clone, Copy, Debug)]
+pub struct QsgdStrategy {
+    bits: u8,
+    bucket: usize,
+    seed: u64,
+}
+
+impl QsgdStrategy {
+    pub fn new(bits: u8, bucket: usize, seed: u64) -> Self {
+        assert!(
+            (2..=8).contains(&bits),
+            "qsgd bits must be in 2..=8 (sign + at least one magnitude bit)"
+        );
+        assert!(bucket >= 1, "qsgd bucket size must be positive");
+        QsgdStrategy { bits, bucket, seed }
+    }
+
+    /// Quantization levels per sign (`2^(bits-1) - 1`).
+    fn levels(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+
+    /// One uniform draw in `[0, 1)` from the stream position. The seed is
+    /// domain-separated from ternary's stream, so `qsgd` and `ternary`
+    /// configured with the same user seed stay uncorrelated.
+    fn unit(&self, step: u64, worker: u64, layer: u64, elem: u64) -> f32 {
+        const QSGD_STREAM: u64 = 0x5147_5344_5354_524D; // "QGSD STRM" domain tag
+        unit_draw(self.seed ^ QSGD_STREAM, step, worker, layer, elem)
+    }
+}
+
+impl SyncStrategy for QsgdStrategy {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+    fn wire_format(&self) -> FpFormat {
+        FpFormat::FP32
+    }
+    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+        if ctx.fp32_passthrough {
+            out.copy_from_slice(src);
+            return;
+        }
+        let s_levels = self.levels() as f32;
+        for (b, (seg, oseg)) in
+            src.chunks(self.bucket).zip(out.chunks_mut(self.bucket)).enumerate()
+        {
+            let base = b * self.bucket;
+            // Bucket scale: max magnitude over the *finite* entries.
+            let mut max_abs = 0.0f32;
+            for &x in seg {
+                let a = x.abs();
+                if a.is_finite() && a > max_abs {
+                    max_abs = a;
+                }
+            }
+            if max_abs == 0.0 {
+                // Nothing representable: ship zeros, propagate divergence.
+                for (&x, o) in seg.iter().zip(oseg.iter_mut()) {
+                    *o = if x.is_finite() { 0.0 } else { x };
+                }
+                continue;
+            }
+            let unit_scale = max_abs / s_levels;
+            for (j, (&x, o)) in seg.iter().zip(oseg.iter_mut()).enumerate() {
+                if x == 0.0 {
+                    *o = 0.0;
+                    continue;
+                }
+                if !x.is_finite() {
+                    *o = x;
+                    continue;
+                }
+                // r ∈ [0, s]: |x|/max_abs ≤ 1.0 exactly in f32, and
+                // multiplying by the (small-integer) level count cannot
+                // round past s.
+                let r = (x.abs() / max_abs) * s_levels;
+                let level = r.floor();
+                let frac = r - level;
+                let u = self.unit(ctx.step, ctx.worker as u64, ctx.layer as u64, (base + j) as u64);
+                let q = level + if u < frac { 1.0 } else { 0.0 };
+                let v = q * unit_scale;
+                *o = if x < 0.0 { -v } else { v };
+            }
+        }
+    }
+    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+        // Wire values are already at gradient scale: only averaging.
+        unscale_in_place(reduced, 0, ctx.world, ctx.average);
+    }
+    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+        if ctx.fp32_passthrough {
+            return WireCost::dense(encoded.len(), FpFormat::FP32);
+        }
+        let n = encoded.len();
+        let buckets = n.div_ceil(self.bucket) as u64;
+        WireCost {
+            value_bits: n as u64 * self.bits as u64,
+            index_bits: 0,
+            metadata_bytes: 4 * buckets,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -355,6 +506,9 @@ mod tests {
         assert_eq!(out, src);
         let mut out = vec![0.0f32; 4];
         TopKStrategy::new(0.25).encode(&src, &c, &mut out);
+        assert_eq!(out, src);
+        let mut out = vec![0.0f32; 4];
+        QsgdStrategy::new(4, 2, 3).encode(&src, &c, &mut out);
         assert_eq!(out, src);
     }
 
@@ -431,5 +585,109 @@ mod tests {
         t.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
         assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 1);
         assert_eq!(out[2], 3.0);
+    }
+
+    #[test]
+    fn topk_wire_cost_counts_survivors_and_indices() {
+        let t = TopKStrategy::new(0.5);
+        let c = ctx(FpFormat::FP32, 0, 2);
+        // 3 nonzeros in a 6-element layer → 3×32 value bits + 3×3 index bits
+        let encoded = vec![0.0f32, -4.0, 0.0, 2.0, -0.5, 0.0];
+        let cost = t.wire_cost(&encoded, &c);
+        assert_eq!(cost.value_bits, 96);
+        assert_eq!(cost.index_bits, 9);
+        assert_eq!(cost.metadata_bytes, 0);
+        // passthrough layers are accounted dense
+        let pass = LayerCtx { fp32_passthrough: true, ..c };
+        assert_eq!(t.wire_cost(&encoded, &pass), WireCost::dense(6, FpFormat::FP32));
+    }
+
+    #[test]
+    fn qsgd_symbols_live_on_the_bucket_grid() {
+        let mut q = QsgdStrategy::new(4, 4, 7); // s = 7 levels
+        let src = vec![0.7f32, -0.35, 0.1, 0.0, 100.0, -25.0, 1.0, 12.5];
+        let mut out = vec![f32::NAN; 8];
+        q.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
+        for (b, seg) in out.chunks(4).enumerate() {
+            let max_abs =
+                src[b * 4..b * 4 + 4].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let unit = max_abs / 7.0;
+            for (j, &o) in seg.iter().enumerate() {
+                let k = o / unit;
+                assert!(
+                    (k - k.round()).abs() < 1e-4 && k.abs() <= 7.0 + 1e-4,
+                    "bucket {b} elem {j}: {o} is not a grid multiple of {unit}"
+                );
+                // sign preserved, magnitude never above the bucket max
+                let x = src[b * 4 + j];
+                assert!(o == 0.0 || (o < 0.0) == (x < 0.0));
+                assert!(o.abs() <= max_abs * (1.0 + 1e-6));
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_is_unbiased_ish_and_deterministic() {
+        let n = 4000;
+        // one max anchor at 0.3, the rest mid-level at 0.05: r = 0.5 sits
+        // between levels 0 and 1, so rounding is genuinely stochastic
+        let mut src = vec![0.05f32; n];
+        src[0] = 0.3;
+        // one big bucket: max = 0.3 → levels at 0.1·k for bits=3 (s=3)
+        let mut q = QsgdStrategy::new(3, 4096, 11);
+        let c = ctx(FpFormat::FP32, 0, 1);
+        let mut a = vec![0.0f32; n];
+        q.encode(&src, &c, &mut a);
+        let mut b = vec![0.0f32; n];
+        q.encode(&src, &c, &mut b);
+        assert_eq!(a, b, "same stream position → same symbols");
+        let mean = a[1..].iter().map(|&v| v as f64).sum::<f64>() / (n - 1) as f64;
+        assert!((mean - 0.05).abs() < 0.005, "E[symbol] should be ≈ 0.05, got {mean}");
+        assert!(a[1..].iter().any(|&v| v == 0.0) && a[1..].iter().any(|&v| v != 0.0));
+        // all values exactly on the 3-level grid, max level included
+        for &v in &a {
+            let k = v / 0.1;
+            assert!((k - k.round()).abs() < 1e-4 && (-1e-4..=3.0 + 1e-4).contains(&k), "{v}");
+        }
+    }
+
+    #[test]
+    fn qsgd_handles_non_finite_and_zero_buckets() {
+        let mut q = QsgdStrategy::new(2, 2, 5);
+        let src = vec![0.0f32, 0.0, f32::NAN, 0.0, f32::INFINITY, 1.0];
+        let mut out = vec![7.0f32; 6];
+        q.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 0.0);
+        assert!(out[2].is_nan(), "NaN stays visible on the wire");
+        assert_eq!(out[3], 0.0);
+        assert!(out[4].is_infinite());
+        assert!(out[5] == 0.0 || out[5] == 1.0);
+    }
+
+    #[test]
+    fn qsgd_wire_cost_counts_bits_and_bucket_scales() {
+        let q = QsgdStrategy::new(4, 64, 1);
+        let c = ctx(FpFormat::FP32, 0, 2);
+        let encoded = vec![0.5f32; 200]; // 200 elems → 4 buckets of ≤64
+        let cost = q.wire_cost(&encoded, &c);
+        assert_eq!(cost.value_bits, 800);
+        assert_eq!(cost.index_bits, 0);
+        assert_eq!(cost.metadata_bytes, 16);
+        assert_eq!(cost.total_bytes(), 116);
+    }
+
+    #[test]
+    #[should_panic(expected = "qsgd bits")]
+    fn qsgd_rejects_degenerate_bit_width() {
+        let _ = QsgdStrategy::new(1, 64, 0);
+    }
+
+    #[test]
+    fn ternary_wire_cost_is_two_bits_per_element() {
+        let t = TernaryStrategy::new(1);
+        let c = ctx(FpFormat::BF16, 0, 4);
+        let cost = t.wire_cost(&[0.5, 0.0, -0.5, 0.5], &c);
+        assert_eq!(cost, WireCost { value_bits: 8, index_bits: 0, metadata_bytes: 0 });
     }
 }

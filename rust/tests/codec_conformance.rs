@@ -1,0 +1,312 @@
+//! The cross-strategy codec conformance suite.
+//!
+//! Every shipped codec — the four paper methods, the net-new ternary /
+//! top-k / QSGD codecs, and their error-feedback-wrapped variants — must
+//! satisfy one shared contract, checked here by a single generic harness
+//! (`assert_codec_contract`). A codec added tomorrow gets pinned by
+//! adding one line to `CODECS`. The contract:
+//!
+//! 1. **encode writes every element** — no stale wire-buffer reuse can
+//!    leak a previous step's values;
+//! 2. **wire costs never under-report** — `value_bits + index_bits` is at
+//!    least one bit per transmitted nonzero. This is a floor, not an
+//!    exactness proof: each codec's precise cost formula (top-k's
+//!    nnz·(32+⌈log2 n⌉), QSGD's n·bits + 4B/bucket, ternary's 2n bits)
+//!    is pinned value-for-value by its own unit tests in
+//!    `sync::strategies`;
+//! 3. **round-trips stay bounded** on hostile inputs (subnormals, huge
+//!    magnitudes, exact powers of two): every world-1 decoded element is
+//!    either within `2·max|g|` (the worst any magnitude-preserving codec
+//!    can round up to) or non-finite *with the overflow reported*;
+//! 4. **determinism** — identically-built sessions replay bit-identically,
+//!    reports included (stochastic codecs are keyed by seed + step);
+//! 5. **ragged inputs panic** — shape errors fail loudly before any codec
+//!    sees a buffer, for every strategy.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use aps_cpd::cpd::{FpFormat, Rounding};
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{LayerCtx, StrategySpec, SyncSession, SyncSessionBuilder, SyncStrategy};
+use aps_cpd::util::ptest::generators;
+
+/// One conformance subject: a label, a fresh-strategy factory, and
+/// whether the codec carries cross-step memory (error feedback), which
+/// legitimately couples one step's output to earlier inputs.
+struct Codec {
+    label: &'static str,
+    has_memory: bool,
+    spec: fn() -> StrategySpec,
+}
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+fn codecs() -> Vec<Codec> {
+    vec![
+        Codec { label: "fp32", has_memory: false, spec: || StrategySpec::Fp32 },
+        Codec {
+            label: "naive/e5m2",
+            has_memory: false,
+            spec: || StrategySpec::Naive { fmt: FpFormat::E5M2 },
+        },
+        Codec {
+            label: "loss_scaling/e5m2",
+            has_memory: false,
+            spec: || StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        },
+        Codec {
+            label: "aps/e5m2",
+            has_memory: false,
+            spec: || StrategySpec::Aps { fmt: FpFormat::E5M2 },
+        },
+        Codec {
+            label: "aps/e4m3",
+            has_memory: false,
+            spec: || StrategySpec::Aps { fmt: FpFormat::E4M3 },
+        },
+        Codec { label: "ternary", has_memory: false, spec: || StrategySpec::Ternary { seed: 9 } },
+        Codec {
+            label: "topk@0.25",
+            has_memory: false,
+            spec: || StrategySpec::TopK { frac: 0.25 },
+        },
+        Codec {
+            label: "qsgd b4/32",
+            has_memory: false,
+            spec: || StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 },
+        },
+        Codec {
+            label: "ef:ternary",
+            has_memory: true,
+            spec: || ef(StrategySpec::Ternary { seed: 9 }),
+        },
+        Codec {
+            label: "ef:topk",
+            has_memory: true,
+            spec: || ef(StrategySpec::TopK { frac: 0.25 }),
+        },
+        Codec {
+            label: "ef:qsgd",
+            has_memory: true,
+            spec: || ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 }),
+        },
+    ]
+}
+
+fn session(codec: &Codec, world: usize) -> SyncSession {
+    SyncSessionBuilder::new(world).spec((codec.spec)()).build()
+}
+
+/// Deterministic mixed-scale per-worker gradients.
+fn scaled_grads(world: usize, salt: usize, layers: &[(usize, f32)]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|w| {
+            layers
+                .iter()
+                .enumerate()
+                .map(|(l, &(n, scale))| {
+                    (0..n)
+                        .map(|i| {
+                            let h = (w * 2654435761 + l * 97 + i * 131 + salt * 7919) % 2003;
+                            (h as f32 / 2003.0 - 0.5) * scale
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn encode_ctx(fmt: FpFormat, n_layers: usize) -> LayerCtx {
+    LayerCtx {
+        layer: 0,
+        num_layers: n_layers,
+        worker: 0,
+        world: 2,
+        factor_exp: 0,
+        fmt,
+        fp32_passthrough: false,
+        rounding: Rounding::NearestEven,
+        average: true,
+        step: 0,
+    }
+}
+
+/// Contract 1+2: direct encode on hostile inputs writes every element,
+/// and the codec's claimed wire cost covers what it actually shipped.
+fn check_encode_and_wire_cost(codec: &Codec) {
+    let mut rng = Rng::new(0xC0DEC);
+    for case in 0..120 {
+        let xs = generators::nasty_vec(&mut rng, 96);
+        let mut strategy = (codec.spec)().build();
+        let ctx = encode_ctx(strategy.wire_format(), 1);
+        let mut out = vec![f32::NAN; xs.len()];
+        strategy.encode(&xs, &ctx, &mut out);
+        assert!(
+            out.iter().all(|v| !v.is_nan()),
+            "{} case {case}: encode left unwritten (NaN) wire elements for finite input",
+            codec.label
+        );
+        let cost = strategy.wire_cost(&out, &ctx);
+        let nnz = out.iter().filter(|&&v| v != 0.0).count() as u64;
+        assert!(
+            cost.value_bits + cost.index_bits >= nnz,
+            "{} case {case}: wire cost {cost:?} under-reports {nnz} transmitted values",
+            codec.label
+        );
+    }
+}
+
+/// Contract 3: a world-1 no-averaging round trip through the full
+/// session keeps every element bounded by 2·max|g| — or reports the
+/// overflow that produced a non-finite value.
+fn check_roundtrip_bound(codec: &Codec) {
+    let mut rng = Rng::new(0xB0DE ^ codec.label.len() as u64);
+    for case in 0..80 {
+        let xs = generators::nasty_vec(&mut rng, 64);
+        let max_abs = xs.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64));
+        let mut s = SyncSessionBuilder::new(1)
+            .spec((codec.spec)())
+            .with_average(false)
+            .build();
+        let grads = vec![vec![xs.clone()]];
+        let (out, report) = s.step(&grads);
+        // 2·max|g| is the worst any magnitude-preserving codec can round
+        // up to; the 2^-128 floor covers scale exponents pinned at the
+        // bottom of their i8 agreement range (ternary on all-subnormal
+        // layers).
+        let bound = (2.0 * max_abs).max(2f64.powi(-128)) * (1.0 + 1e-5);
+        for (i, &v) in out[0].iter().enumerate() {
+            if v.is_finite() {
+                assert!(
+                    (v.abs() as f64) <= bound,
+                    "{} case {case} elem {i}: |{v:e}| escapes the 2·max bound {bound:e} \
+                     (input {:e})",
+                    codec.label,
+                    xs[i]
+                );
+            } else {
+                assert!(
+                    report.any_overflow(),
+                    "{} case {case} elem {i}: non-finite output {v} with no overflow reported",
+                    codec.label
+                );
+            }
+        }
+    }
+}
+
+/// Contract 4: identically-built sessions replay bit-identically across
+/// multiple steps — outputs and reports.
+fn check_determinism(codec: &Codec) {
+    let world = 4;
+    let mut a = session(codec, world);
+    let mut b = session(codec, world);
+    for step in 0..3 {
+        let grads = scaled_grads(world, step, &[(33, 1.0), (8, 1e-5)]);
+        let (oa, ra) = a.step(&grads);
+        let oa = oa.to_vec();
+        let ra = ra.clone();
+        let (ob, rb) = b.step(&grads);
+        for (l, (x, y)) in oa.iter().zip(ob.iter()).enumerate() {
+            for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "{} step {step} layer {l} elem {i}: replay diverged",
+                    codec.label
+                );
+            }
+        }
+        assert_eq!(&ra, rb, "{} step {step}: reports diverged", codec.label);
+    }
+}
+
+/// Contract 5: ragged inputs panic before any codec work happens.
+fn check_ragged_panics(codec: &Codec) {
+    let ragged_lengths = vec![vec![vec![1.0f32; 4]], vec![vec![1.0f32; 5]]];
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let mut s = session(codec, 2);
+        let _ = s.step(&ragged_lengths);
+    }));
+    assert!(r.is_err(), "{}: ragged layer lengths must panic", codec.label);
+
+    let ragged_counts = vec![vec![vec![1.0f32; 4]], vec![]];
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let mut s = session(codec, 2);
+        let _ = s.step(&ragged_counts);
+    }));
+    assert!(r.is_err(), "{}: ragged layer counts must panic", codec.label);
+}
+
+/// Memoryless codecs only: a zero-gradient step right after a dense step
+/// must produce an all-zero reduction (stale wire buffers overwritten,
+/// no hidden state).
+fn check_zero_step_after_dense(codec: &Codec) {
+    let world = 2;
+    let mut s = session(codec, world);
+    let dense = scaled_grads(world, 1, &[(24, 1.0)]);
+    let _ = s.step(&dense);
+    let zeros = vec![vec![vec![0.0f32; 24]]; world];
+    let (out, _) = s.step(&zeros);
+    assert!(
+        out[0].iter().all(|&v| v == 0.0),
+        "{}: zero gradients must reduce to zero (stale buffer leak?)",
+        codec.label
+    );
+}
+
+/// The whole contract for one codec (the ragged-input probe runs in its
+/// own test so the intentional panics can be hook-silenced in one place).
+fn assert_codec_contract(codec: &Codec) {
+    check_encode_and_wire_cost(codec);
+    check_roundtrip_bound(codec);
+    check_determinism(codec);
+    if !codec.has_memory {
+        check_zero_step_after_dense(codec);
+    }
+}
+
+#[test]
+fn every_strategy_satisfies_the_codec_contract() {
+    for codec in &codecs() {
+        assert_codec_contract(codec);
+    }
+}
+
+#[test]
+fn ragged_inputs_panic_for_every_strategy() {
+    // The probes panic on purpose; libtest captures per-test output, so
+    // the intentional panic messages stay out of passing-run output and
+    // no global panic-hook games (which would race parallel tests) are
+    // needed.
+    for codec in &codecs() {
+        check_ragged_panics(codec);
+    }
+}
+
+#[test]
+fn error_feedback_memory_is_the_only_contract_exemption() {
+    // ef:topk deliberately fails the zero-step check — the residual is
+    // real signal being flushed. Pin that behaviour so the exemption in
+    // the harness stays honest.
+    let world = 2;
+    let mut s = SyncSessionBuilder::new(world)
+        .spec(ef(StrategySpec::TopK { frac: 0.25 }))
+        .build();
+    let dense = scaled_grads(world, 1, &[(24, 1.0)]);
+    let _ = s.step(&dense);
+    let zeros = vec![vec![vec![0.0f32; 24]]; world];
+    let (out, _) = s.step(&zeros);
+    assert!(
+        out[0].iter().any(|&v| v != 0.0),
+        "ef:topk should flush residual signal on a zero-gradient step"
+    );
+}
+
+#[test]
+fn conformance_covers_at_least_seven_strategies() {
+    assert!(codecs().len() >= 7, "contract must span the whole codec family");
+}

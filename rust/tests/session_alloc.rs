@@ -1,0 +1,133 @@
+//! Steady-state allocation test for the session hot path.
+//!
+//! A `SyncSession` promises no per-step element-storage allocation once
+//! its buffers are warm, and since the hierarchical-scratch fix that
+//! promise extends through `HierarchicalCollective` (per-group partials
+//! now live in reusable scratch) and through `ErrorFeedback` (residual
+//! and reconstruction buffers). This binary installs a byte-counting
+//! global allocator and pins the promise: after a warmup, several steps
+//! together must allocate less than a small pointer-bookkeeping budget —
+//! orders of magnitude below one gradient tensor.
+//!
+//! Everything runs inside a single `#[test]` so no concurrently-running
+//! test can pollute the counter. Tensor sizes are kept below the
+//! parallelism threshold so the collectives stay single-threaded (thread
+//! spawns would otherwise dominate the counter).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::sync::{StrategySpec, SyncSession, SyncSessionBuilder};
+
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            ALLOCATED.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn grads(world: usize, salt: usize, layers: &[usize]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|w| {
+            layers
+                .iter()
+                .enumerate()
+                .map(|(l, &n)| {
+                    (0..n)
+                        .map(|i| ((w * 31 + l * 7 + i * 13 + salt) % 17) as f32 * 0.125 - 1.0)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Warm `session` on four inputs, then measure the bytes allocated by
+/// four further steps and assert they stay under `budget`.
+fn assert_steady_state(label: &str, mut session: SyncSession, layers: &[usize], budget: u64) {
+    let world = session.world_size();
+    // Pre-build every input so the measured window contains only step().
+    let inputs: Vec<_> = (0..8).map(|salt| grads(world, salt, layers)).collect();
+    for g in inputs.iter().take(4) {
+        let _ = session.step(g);
+    }
+    let before = ALLOCATED.load(Ordering::SeqCst);
+    for g in inputs.iter().skip(4) {
+        let (reduced, report) = session.step(g);
+        // keep the results observable so nothing is optimized away
+        assert!(reduced[0][0].is_finite());
+        assert!(report.layers.len() == layers.len());
+    }
+    let delta = ALLOCATED.load(Ordering::SeqCst) - before;
+    let element_bytes: u64 = layers.iter().map(|&n| n as u64 * 4).sum();
+    assert!(
+        delta < budget,
+        "{label}: steady-state steps allocated {delta} B (budget {budget} B; one \
+         gradient set is {element_bytes} B) — an element buffer is being reallocated per step"
+    );
+}
+
+#[test]
+fn steady_state_steps_allocate_no_element_storage() {
+    let world = 8;
+    // n·world stays under par::PAR_THRESHOLD (16 Ki elements) per layer.
+    let layers = [1024usize, 512, 96];
+    // One gradient set is ~6.4 KiB per worker; the pointer-bookkeeping
+    // budget for 4 steps sits far below a single layer buffer (the old
+    // per-call hierarchical partials alone allocated ~13 KiB per step).
+    let budget = 12 * 1024;
+
+    // Ring, APS: the baseline hot path.
+    assert_steady_state(
+        "ring/aps",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .build(),
+        &layers,
+        budget,
+    );
+
+    // Hierarchical, APS: pins the ROADMAP fix — per-group partials must
+    // come from the collective's reusable scratch, not fresh vectors.
+    assert_steady_state(
+        "hierarchical/aps",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &layers,
+        budget,
+    );
+
+    // Hierarchical, error-feedback-wrapped top-k: the new subsystem obeys
+    // the same contract once residual buffers are warm.
+    assert_steady_state(
+        "hierarchical/ef:topk",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::ErrorFeedback {
+                inner: Box::new(StrategySpec::TopK { frac: 0.25 }),
+            })
+            .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &layers,
+        budget,
+    );
+}

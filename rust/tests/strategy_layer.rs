@@ -16,7 +16,7 @@ use aps_cpd::aps::{legacy, SyncMethod, SyncOptions};
 use aps_cpd::collectives::{SimCluster, Topology};
 use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
 use aps_cpd::data::Rng;
-use aps_cpd::sync::{StrategySpec, SyncSessionBuilder};
+use aps_cpd::sync::{ErrorFeedback, StrategySpec, SyncSessionBuilder};
 use aps_cpd::util::ptest::{check_msg, generators};
 
 /// Deterministic mixed-scale per-worker gradients (the Fig-2 situation).
@@ -121,13 +121,13 @@ fn session_reuse_matches_fresh_calls_across_steps() {
         StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
         StrategySpec::TopK { frac: 0.5 },
     ] {
-        let mut reused = SyncSessionBuilder::new(world).spec(spec).build();
+        let mut reused = SyncSessionBuilder::new(world).spec(spec.clone()).build();
         for (step, layers) in shapes.iter().enumerate() {
             let grads = scaled_grads(world, step, layers);
             let (r_out, r_rep) = reused.step(&grads);
             let r_out = r_out.to_vec();
             let r_rep = r_rep.clone();
-            let mut fresh = SyncSessionBuilder::new(world).spec(spec).build();
+            let mut fresh = SyncSessionBuilder::new(world).spec(spec.clone()).build();
             let (f_out, f_rep) = fresh.step(&grads);
             for (l, (a, b)) in r_out.iter().zip(f_out.iter()).enumerate() {
                 for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
@@ -140,6 +140,64 @@ fn session_reuse_matches_fresh_calls_across_steps() {
             }
             assert_eq!(&r_rep, f_rep, "{spec:?} step {step} report");
         }
+    }
+}
+
+#[test]
+fn error_feedback_with_zero_residual_is_bit_identical_to_unwrapped() {
+    // The first step of a fresh ErrorFeedback wrapper runs with all-zero
+    // residuals, and must be bit-transparent: gradients AND SyncReport
+    // identical to the legacy (unwrapped) path for every paper method,
+    // across topologies.
+    let layers = [(96usize, 1.0f32), (64, 1e-6), (33, 2.5e3)];
+    let methods = [
+        SyncMethod::Fp32,
+        SyncMethod::Naive { fmt: FpFormat::E5M2 },
+        SyncMethod::LossScaling { fmt: FpFormat::E5M2, factor_exp: 8 },
+        SyncMethod::Aps { fmt: FpFormat::E5M2 },
+    ];
+    for (mi, method) in methods.into_iter().enumerate() {
+        for topo in [Topology::Ring, Topology::Hierarchical { group_size: 4 }] {
+            let world = 8;
+            let grads = scaled_grads(world, mi, &layers);
+            let opts = SyncOptions::new(method).with_topology(topo);
+            let cluster = SimCluster::new(world);
+            let (old_out, old_rep) = legacy::synchronize(&cluster, &grads, &opts);
+            let mut session = SyncSessionBuilder::from_sync_options(world, &opts)
+                .strategy(Box::new(ErrorFeedback::new(StrategySpec::from(method).build())))
+                .build();
+            let (new_out, new_rep) = session.step(&grads);
+            let label = format!("ef({method:?})/{topo:?}");
+            for (l, (o, n)) in old_out.iter().zip(new_out.iter()).enumerate() {
+                for (i, (a, b)) in o.iter().zip(n.iter()).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{label}: layer {l} elem {i}");
+                }
+            }
+            assert_eq!(&old_rep, new_rep, "{label}: SyncReport accounting");
+        }
+    }
+}
+
+#[test]
+fn error_feedback_fp32_stays_transparent_across_steps() {
+    // A lossless inner codec accumulates no residual, so the wrapper must
+    // stay bit-identical to the bare strategy over a multi-step session.
+    let world = 4;
+    let mut plain = SyncSessionBuilder::new(world).spec(StrategySpec::Fp32).build();
+    let mut wrapped =
+        SyncSessionBuilder::new(world).spec(StrategySpec::Fp32).error_feedback().build();
+    for step in 0..4 {
+        let grads = scaled_grads(world, step, &[(48, 1.0), (16, 1e-5)]);
+        let (po, pr) = plain.step(&grads);
+        let po = po.to_vec();
+        let pr = pr.clone();
+        let (wo, wr) = wrapped.step(&grads);
+        for (l, (a, b)) in po.iter().zip(wo.iter()).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "step {step} layer {l} elem {i}");
+            }
+        }
+        assert_eq!(&pr, wr, "step {step} report");
     }
 }
 
@@ -426,6 +484,19 @@ fn topk_trains_without_divergence() {
     assert!(
         final_mse < initial * 0.2,
         "top-k failed to train: {initial:.4} -> {final_mse:.4}"
+    );
+}
+
+#[test]
+fn qsgd_trains_without_divergence() {
+    // 4-bit QSGD quantizes far finer than ternary, which passes the same
+    // workload — so the ternary/top-k thresholds are comfortably safe.
+    let (initial, final_mse, saw_nan) =
+        train_least_squares(StrategySpec::Qsgd { bits: 4, bucket: 16, seed: 5 }, 400, 0.1);
+    assert!(!saw_nan, "qsgd diverged to NaN");
+    assert!(
+        final_mse < initial * 0.2,
+        "qsgd failed to train: {initial:.4} -> {final_mse:.4}"
     );
 }
 
