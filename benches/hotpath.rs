@@ -1,25 +1,41 @@
 //! Hot-path micro-benchmarks (§Perf): quantize throughput, all-reduce
-//! emulation throughput, APS end-to-end sync (one-shot shim vs. the
-//! buffer-reusing SyncSession), and the PJRT train-step.
+//! emulation throughput, APS end-to-end sync (one-shot throwaway session
+//! vs. the buffer-reusing SyncSession), and the packed-wire strategy
+//! sweep whose bytes-moved column must equal `SyncReport::honest_bytes`.
 //! Used by the performance pass in EXPERIMENTS.md §Perf.
+//!
+//! Run with `--test` (CI does) for a single-iteration smoke pass on a
+//! small tensor that asserts the packed-traffic invariants — packed
+//! ternary must move ≤ 1/10th the bytes of the FP32 wire — and emits
+//! `BENCH_packed.json` (elements/sec + bytes moved per strategy), the
+//! start of the perf trajectory.
 
 #[path = "support/mod.rs"]
 mod support;
 
-use aps_cpd::aps::{self, SyncMethod, SyncOptions};
+use aps_cpd::aps::{SyncMethod, SyncOptions};
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
-use aps_cpd::sync::SyncSessionBuilder;
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, WireMode};
 use aps_cpd::util::bench::Bench;
+use aps_cpd::util::json::Json;
+use std::collections::BTreeMap;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     support::header("hot-path microbenchmarks", "EXPERIMENTS.md §Perf");
-    let bench = Bench { warmup_iters: 2, samples: 9, iters_per_sample: 1 };
-    let n = 4 << 20; // 4 Mi elements ≈ ResNet-50-scale layer block
+    let bench = if smoke {
+        Bench { warmup_iters: 1, samples: 1, iters_per_sample: 1 }
+    } else {
+        Bench { warmup_iters: 2, samples: 9, iters_per_sample: 1 }
+    };
+    // 4 Mi elements ≈ ResNet-50-scale layer block; the smoke pass shrinks
+    // it so CI stays fast.
+    let n = if smoke { 1 << 14 } else { 4 << 20 };
     let xs: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 1e-3).collect();
 
     // quantize (downcast) throughput
-    let m = bench.run("quantize_shifted_slice e5m2, 4Mi f32", || {
+    let m = bench.run("quantize_shifted_slice e5m2", || {
         quantize_shifted_slice(&xs, 12, FpFormat::E5M2, Rounding::NearestEven)
     });
     println!("{}", m.report_throughput(4 * n as u64));
@@ -31,9 +47,9 @@ fn main() {
         .collect();
     let cluster = SimCluster::new(world);
     for (label, fmt, kahan) in [
-        ("ring all-reduce fp32 (8w, 4Mi)", FpFormat::FP32, false),
-        ("ring all-reduce e5m2 (8w, 4Mi)", FpFormat::E5M2, false),
-        ("ring all-reduce e5m2+kahan (8w, 4Mi)", FpFormat::E5M2, true),
+        ("ring all-reduce fp32 (8w)", FpFormat::FP32, false),
+        ("ring all-reduce e5m2 (8w)", FpFormat::E5M2, false),
+        ("ring all-reduce e5m2+kahan (8w)", FpFormat::E5M2, true),
     ] {
         let m = bench.run(label, || {
             cluster.all_reduce_sum(
@@ -46,12 +62,14 @@ fn main() {
     }
 
     // full APS sync (quantize + exponent phase + reduce + unscale):
-    // the deprecated one-shot shim (re-allocates every buffer per call)…
+    // a throwaway session per call (what the removed `aps::synchronize`
+    // shim did — re-allocates every buffer)…
     let layered: Vec<Vec<Vec<f32>>> = grads.iter().map(|g| vec![g.clone()]).collect();
     let opts = SyncOptions::new(SyncMethod::Aps { fmt: FpFormat::E5M2 });
-    #[allow(deprecated)]
-    let m = bench.run("aps::synchronize e5m2 (8w, 1 layer × 4Mi)", || {
-        aps::synchronize(&cluster, &layered, &opts)
+    let m = bench.run("one-shot session aps e5m2 (8w, alloc/call)", || {
+        let mut s = SyncSessionBuilder::from_sync_options(world, &opts).build();
+        let (reduced, report) = s.step(&layered);
+        (reduced[0][0], report.payload_bytes)
     });
     println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
 
@@ -63,8 +81,101 @@ fn main() {
     });
     println!("{}", m.report_throughput(4 * (n as u64) * world as u64));
 
+    // ---- packed wire: bytes actually moved per strategy ---------------
+    // The tentpole claim, measured: on the packed path the bytes the
+    // simulator moves equal the codec's honest wire accounting
+    // (`SyncReport::honest_bytes`), so 2-bit ternary moves ~1/16th of
+    // the FP32 wire instead of the same dense f32 lanes.
+    println!("\npacked wire (bytes moved per worker per step == honest_bytes):");
+    let strategies: Vec<(&str, StrategySpec)> = vec![
+        ("fp32", StrategySpec::Fp32),
+        ("aps_e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("ternary", StrategySpec::Ternary { seed: 42 }),
+        ("qsgd_b4", StrategySpec::Qsgd { bits: 4, bucket: 256, seed: 42 }),
+        ("topk_0.25", StrategySpec::TopK { frac: 0.25 }),
+    ];
+    let mut rows: BTreeMap<String, Json> = BTreeMap::new();
+    let mut moved_bytes: BTreeMap<&str, u64> = BTreeMap::new();
+    for (name, spec) in &strategies {
+        let mut packed = SyncSessionBuilder::new(world).spec(spec.clone()).build();
+        let m = bench.run(&format!("packed step {name} (8w)"), || {
+            let (reduced, report) = packed.step(&layered);
+            (reduced[0][0], report.payload_bytes)
+        });
+        let report = packed.report().clone();
+        let moved = packed
+            .wire_moved()
+            .expect("packed sessions measure moved traffic");
+        // Measured packed traffic (+ the exponent side channel) must be
+        // exactly the codec's honest accounting.
+        assert_eq!(
+            moved,
+            report.wire,
+            "{name}: bytes moved diverge from the claimed wire cost"
+        );
+        let measured_total = moved.total_bytes() + report.exponent_bytes;
+        assert_eq!(
+            measured_total,
+            report.honest_bytes(),
+            "{name}: measured bytes-moved != SyncReport::honest_bytes"
+        );
+        let elems_per_sec = n as f64 / m.median();
+        println!(
+            "{}  [moved {} KiB/worker, {:.1} Melem/s]",
+            m.report(),
+            measured_total / 1024,
+            elems_per_sec / 1e6
+        );
+        moved_bytes.insert(*name, measured_total);
+        let mut row = BTreeMap::new();
+        row.insert("bytes_moved".to_string(), Json::Num(measured_total as f64));
+        row.insert("elems_per_sec".to_string(), Json::Num(elems_per_sec));
+        rows.insert(name.to_string(), Json::Obj(row));
+    }
+
+    // The headline ratio: packed ternary vs the FP32 wire.
+    let fp32_moved = moved_bytes["fp32"];
+    let ternary_moved = moved_bytes["ternary"];
+    assert!(
+        ternary_moved <= fp32_moved / 10,
+        "packed ternary must move ≤ 1/10th of the fp32 wire \
+         (ternary {ternary_moved} B vs fp32 {fp32_moved} B)"
+    );
+    println!(
+        "\npacked ternary moves {ternary_moved} B vs fp32 {fp32_moved} B \
+         ({:.1}x reduction)",
+        fp32_moved as f64 / ternary_moved as f64
+    );
+
+    if smoke {
+        // Cross-check against the simulated wire: bit-identical outputs.
+        let mut sim = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 42 })
+            .with_wire(WireMode::Simulated)
+            .build();
+        let mut pk = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 42 })
+            .build();
+        let (so, _) = sim.step(&layered);
+        let so = so.to_vec();
+        let (po, _) = pk.step(&layered);
+        for (a, b) in so[0].iter().zip(po[0].iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "packed/simulated divergence");
+        }
+
+        // Emit the perf-trajectory record.
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("hotpath-packed".to_string()));
+        doc.insert("world".to_string(), Json::Num(world as f64));
+        doc.insert("elements".to_string(), Json::Num(n as f64));
+        doc.insert("strategies".to_string(), Json::Obj(rows));
+        std::fs::write("BENCH_packed.json", Json::Obj(doc).to_string())
+            .expect("write BENCH_packed.json");
+        println!("[smoke] packed-wire invariants OK, BENCH_packed.json written");
+    }
+
     // PJRT train step, if artifacts are present
-    if std::path::Path::new("artifacts/.stamp").exists() {
+    if !smoke && std::path::Path::new("artifacts/.stamp").exists() {
         let engine = aps_cpd::runtime::Engine::cpu().expect("engine");
         let model = engine.load_model("artifacts", "resnet").expect("model");
         let params = model.initial_params().expect("init");

@@ -9,10 +9,13 @@
 //! `StrategySpec` (or plugged straight into `SyncSessionBuilder`) get
 //! perf numbers here for free.
 //!
-//! Payload KiB is as-simulated (ternary rides a BF16 wire, top-k/QSGD
-//! dense FP32); the `wire KiB` column is what a packed deployment ships —
-//! 2-bit ternary symbols, top-k (index, value) pairs, QSGD `bits`/elt
-//! plus bucket scales.
+//! Payload KiB is the dense schedule accounting (ternary rides a BF16
+//! wire, top-k/QSGD dense FP32); `wire KiB` is the codec's honest packed
+//! claim — 2-bit ternary symbols, top-k (index, value) pairs, QSGD
+//! `bits`/elt plus bucket scales — and `moved KiB` is what the packed
+//! reduction (the session default) *measurably* moved. The two are
+//! asserted equal on every cell: bytes-moved == `SyncReport::honest_bytes`
+//! minus the exponent side channel.
 //!
 //! Run with `--test` (CI does) for a single-iteration smoke pass that
 //! also asserts the codec-accounting invariants, so a regression in any
@@ -85,6 +88,7 @@ fn main() {
         "collective",
         "payload KiB/step",
         "wire KiB",
+        "moved KiB",
         "idx KiB",
         "meta B",
         "exp B",
@@ -103,11 +107,22 @@ fn main() {
                 (reduced[0][0], report.payload_bytes)
             });
             let report = session.report().clone();
+            // The packed path (the default) measures what it moves; that
+            // measurement must equal the codec's honest claim — the
+            // tentpole acceptance criterion, asserted on every cell.
+            let moved = session.wire_moved().expect("packed sessions measure moved traffic");
+            assert_eq!(
+                moved,
+                report.wire,
+                "{}/{topo:?}: bytes-moved diverge from claimed wire cost",
+                spec.label()
+            );
             t.row(&[
                 spec.label(),
                 format!("{topo:?}"),
                 format!("{}", report.payload_bytes / 1024),
                 format!("{}", report.wire.total_bytes() / 1024),
+                format!("{}", moved.total_bytes() / 1024),
                 format!("{}", report.wire.index_bits / 8 / 1024),
                 format!("{}", report.wire.metadata_bytes),
                 format!("{}", report.exponent_bytes),

@@ -17,9 +17,11 @@
 //! lives in [`crate::sync::strategies`] (one [`crate::sync::SyncStrategy`]
 //! impl per method, plus net-new codecs the closed enum cannot name), and
 //! the hot path is a buffer-reusing [`crate::sync::SyncSession`]. The
-//! [`synchronize`] free function survives as a deprecated one-shot shim
-//! over a throwaway session; [`legacy::synchronize`] preserves the
-//! pre-trait implementation so the equivalence suite can pin the new path
+//! deprecated `aps::synchronize` one-shot shim has been removed after its
+//! one-release grace period — build a session via
+//! [`crate::sync::SyncSessionBuilder`] (see the migration notes in
+//! lib.rs); [`legacy::synchronize`] preserves the pre-trait
+//! implementation so the equivalence suite can pin the session path
 //! bit-for-bit against the old one.
 //!
 //! All reductions run through [`crate::collectives`] so the wire
@@ -27,7 +29,7 @@
 
 pub mod policy;
 
-use crate::collectives::{SimCluster, Topology};
+use crate::collectives::Topology;
 use crate::cpd::{FpFormat, Rounding};
 
 pub use policy::{HybridSchedule, LayerPolicy};
@@ -216,45 +218,7 @@ pub fn local_max_exp(grad: &[f32], world_size: usize) -> Option<i32> {
     Some(c as i32)
 }
 
-/// Synchronize one training step's gradients (one-shot shim).
-///
-/// `grads[w][l]` is worker `w`'s gradient for layer `l` (all workers agree
-/// on layer count and shapes). Returns the reduced per-layer gradients and
-/// a [`SyncReport`].
-///
-/// Deprecated: this builds and discards a full [`crate::sync::SyncSession`]
-/// per call, re-paying every buffer allocation the session exists to
-/// amortize. Build the session once and call
-/// [`crate::sync::SyncSession::step`] per training step instead:
-///
-/// ```
-/// use aps_cpd::aps::{SyncMethod, SyncOptions};
-/// use aps_cpd::sync::SyncSessionBuilder;
-///
-/// let opts = SyncOptions::new(SyncMethod::Fp32);
-/// let mut session = SyncSessionBuilder::from_sync_options(2, &opts).build();
-/// let grads = vec![vec![vec![1.0f32; 8]]; 2];
-/// let (reduced, report) = session.step(&grads);
-/// assert_eq!(reduced[0][0], 1.0);
-/// assert_eq!(report.layers.len(), 1);
-/// ```
-#[deprecated(
-    since = "0.2.0",
-    note = "build a sync::SyncSession via sync::SyncSessionBuilder and call step(); \
-            see the migration notes in lib.rs"
-)]
-pub fn synchronize(
-    cluster: &SimCluster,
-    grads: &[Vec<Vec<f32>>],
-    opts: &SyncOptions,
-) -> (Vec<Vec<f32>>, SyncReport) {
-    let mut session =
-        crate::sync::SyncSessionBuilder::from_sync_options(cluster.world_size, opts).build();
-    let (reduced, report) = session.step(grads);
-    (reduced.to_vec(), report.clone())
-}
-
-/// The pre-trait implementation of [`synchronize`], kept verbatim so the
+/// The pre-trait implementation of the removed `synchronize` shim, kept verbatim so the
 /// equivalence suite (`rust/tests/strategy_layer.rs`) can assert the
 /// strategy/session path is bit-identical to it. Not part of the public
 /// API surface; do not call from new code.
@@ -422,13 +386,27 @@ pub fn reduce_exact(grads: &[Vec<Vec<f32>>], average: bool) -> Vec<Vec<f32>> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the shim IS the unit under test (it drives the session path)
 mod tests {
     use super::*;
+    use crate::collectives::SimCluster;
     use crate::cpd::avg_roundoff_error;
 
     fn cluster8() -> SimCluster {
         SimCluster::new(8)
+    }
+
+    /// One-shot sync through the modern session path (what the removed
+    /// `aps::synchronize` shim used to do) — these tests pin *method*
+    /// semantics, not the entry point.
+    fn synchronize(
+        cluster: &SimCluster,
+        grads: &[Vec<Vec<f32>>],
+        opts: &SyncOptions,
+    ) -> (Vec<Vec<f32>>, SyncReport) {
+        let mut session =
+            crate::sync::SyncSessionBuilder::from_sync_options(cluster.world_size, opts).build();
+        let (reduced, report) = session.step(grads);
+        (reduced.to_vec(), report.clone())
     }
 
     /// Synthetic per-worker gradients with wildly different layer scales —

@@ -16,6 +16,8 @@
 //! across masters — the mechanism behind Tables 8 and 9.
 
 use super::{fold_step, ring, ReduceOptions, ReduceStats};
+use crate::sync::wire::PackedWire;
+use crate::sync::{LayerCtx, SyncStrategy};
 use crate::util::par;
 
 /// Reusable scratch for [`all_reduce_with_scratch`]: the per-group
@@ -54,9 +56,11 @@ pub fn all_reduce_into(
 }
 
 /// Hierarchical all-reduce into a caller-provided buffer, reusing
-/// `scratch` for the per-group partial sums. With a warm scratch the only
-/// remaining per-call allocation is the Kahan compensation vector when
-/// `opts.kahan` is set (tracked in ROADMAP.md).
+/// `scratch` for the per-group partial sums. With a warm scratch nothing
+/// is allocated per call: the Kahan compensation lane (formerly a fresh
+/// `n`-element vector per group per call, the ROADMAP-tracked leak) now
+/// lives in a stack-resident `FOLD_BLOCK`-element block inside the
+/// cache-blocked fold.
 pub fn all_reduce_with_scratch(
     contribs: &[Vec<f32>],
     group_size: usize,
@@ -75,7 +79,9 @@ pub fn all_reduce_with_scratch(
 
     // Phase 1: intra-group fold at each master, in rank order (parallel
     // across groups — they are independent, each owning one scratch
-    // partial). Chunked so small tensors stay on one thread.
+    // partial). Chunked so small tensors stay on one thread. Blocking the
+    // element loop changes memory-access order only, never the
+    // per-element fold sequence, so results stay bit-identical.
     scratch.partials.resize_with(num_groups, Vec::new);
     let groups_per_chunk = (par::PAR_THRESHOLD / (n * group_size).max(1)).max(1);
     par::par_chunks_mut(&mut scratch.partials, groups_per_chunk, |g0, chunk| {
@@ -83,19 +89,38 @@ pub fn all_reduce_with_scratch(
             let base = (g0 + gi) * group_size;
             acc.clear();
             acc.extend_from_slice(&contribs[base]);
-            let mut comp = vec![0.0f32; if opts.kahan { n } else { 0 }];
-            let mut dummy = 0.0f32;
-            for r in 1..group_size {
-                let src = &contribs[base + r];
+            let mut comp = [0.0f32; super::FOLD_BLOCK];
+            let mut b0 = 0usize;
+            while b0 < n {
+                let b1 = (b0 + super::FOLD_BLOCK).min(n);
                 if opts.kahan {
-                    for i in 0..n {
-                        fold_step(&mut acc[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                    let comp = &mut comp[..b1 - b0];
+                    comp.fill(0.0);
+                    for r in 1..group_size {
+                        let src = &contribs[base + r][b0..b1];
+                        let blk = &mut acc[b0..b1];
+                        for i in 0..blk.len() {
+                            fold_step(&mut blk[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                        }
                     }
                 } else {
-                    for i in 0..n {
-                        fold_step(&mut acc[i], &mut dummy, src[i], opts.fmt, opts.mode, false);
+                    let mut dummy = 0.0f32;
+                    for r in 1..group_size {
+                        let src = &contribs[base + r][b0..b1];
+                        let blk = &mut acc[b0..b1];
+                        for i in 0..blk.len() {
+                            fold_step(
+                                &mut blk[i],
+                                &mut dummy,
+                                src[i],
+                                opts.fmt,
+                                opts.mode,
+                                false,
+                            );
+                        }
                     }
                 }
+                b0 = b1;
             }
         }
     });
@@ -113,6 +138,93 @@ pub fn all_reduce_with_scratch(
     // Per-worker wire traffic: a non-master sends n elements up and
     // receives n back; a master receives (k-1)·n, runs the ring, sends
     // (k-1)·n down. Report the master's (worst-case) traffic.
+    let master_bytes =
+        2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;
+    ReduceStats {
+        bytes_per_worker: master_bytes,
+        steps: 4 * (group_size - 1) + 2 * (num_groups.saturating_sub(1)),
+    }
+}
+
+/// Hierarchical all-reduce over **packed** worker contributions: masters
+/// fold their group's [`PackedWire`] segments in cache-blocked chunks
+/// (unpack-block → fold) into the reusable per-group partials, then the
+/// masters' dense partials run the standard inter-group ring. Per-element
+/// fold order and precision match [`all_reduce_with_scratch`] exactly, so
+/// with an exact `decode_packed` the result is bit-identical to the
+/// simulated-f32 path. No repacking between phases: the intra-group
+/// partials feed the ring directly, as in the dense path.
+///
+/// `unpack` is caller-owned block scratch ([`crate::sync::PackScratch`]).
+/// Single-threaded, like [`ring::all_reduce_packed_into`].
+#[allow(clippy::too_many_arguments)] // mirrors the dense signature + (strategy, ctx, unpack)
+pub fn all_reduce_packed_with_scratch(
+    packed: &[PackedWire],
+    group_size: usize,
+    strategy: &dyn SyncStrategy,
+    ctx: &LayerCtx,
+    out: &mut [f32],
+    opts: ReduceOptions,
+    scratch: &mut HierScratch,
+    unpack: &mut Vec<f32>,
+) -> ReduceStats {
+    let p = packed.len();
+    let n = out.len();
+    assert!(group_size >= 1, "group size must be positive");
+    assert!(
+        p % group_size == 0,
+        "world size {p} not divisible by group size {group_size}"
+    );
+    let num_groups = p / group_size;
+
+    scratch.partials.resize_with(num_groups, Vec::new);
+    unpack.clear();
+    unpack.resize(super::FOLD_BLOCK, 0.0);
+    let mut comp = [0.0f32; super::FOLD_BLOCK];
+    for (g, acc) in scratch.partials.iter_mut().enumerate() {
+        let base = g * group_size;
+        acc.clear();
+        acc.resize(n, 0.0);
+        let mut b0 = 0usize;
+        while b0 < n {
+            let b1 = (b0 + super::FOLD_BLOCK).min(n);
+            let blk = &mut acc[b0..b1];
+            strategy.decode_packed(&packed[base], ctx, b0..b1, blk);
+            let seg = &mut unpack[..b1 - b0];
+            if opts.kahan {
+                let comp = &mut comp[..blk.len()];
+                comp.fill(0.0);
+                for r in 1..group_size {
+                    strategy.decode_packed(&packed[base + r], ctx, b0..b1, seg);
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut comp[i], seg[i], opts.fmt, opts.mode, true);
+                    }
+                }
+            } else {
+                let mut dummy = 0.0f32;
+                for r in 1..group_size {
+                    strategy.decode_packed(&packed[base + r], ctx, b0..b1, seg);
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut dummy, seg[i], opts.fmt, opts.mode, false);
+                    }
+                }
+            }
+            b0 = b1;
+        }
+    }
+
+    // Phase 2: ring all-reduce across the dense master partials — the
+    // same code path the simulated wire takes.
+    let ring_stats = if num_groups > 1 {
+        ring::all_reduce_into(&scratch.partials, out, opts)
+    } else {
+        out.copy_from_slice(&scratch.partials[0]);
+        ReduceStats::default()
+    };
+
+    // Identical traffic accounting to the dense path (reports must stay
+    // bit-identical across wire modes).
+    let elt_bytes = ring::wire_bytes(opts) as u64;
     let master_bytes =
         2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;
     ReduceStats {

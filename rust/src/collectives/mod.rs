@@ -23,6 +23,14 @@ pub mod hierarchical;
 pub mod ring;
 
 use crate::cpd::{quantize, FpFormat, Rounding};
+use crate::sync::wire::{PackScratch, PackedWire};
+use crate::sync::{LayerCtx, SyncStrategy};
+
+/// Elements per cache block in the fold kernels (4 KiB of f32): the unit
+/// the packed reduction unpacks at a time, and the size of the
+/// stack-resident Kahan compensation lane (so compensated folds allocate
+/// nothing — the ROADMAP-tracked per-call vectors are gone).
+pub(crate) const FOLD_BLOCK: usize = 1024;
 
 /// All-reduce topology (paper §4.2 discusses the choice).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -90,6 +98,35 @@ pub trait Collective {
     /// implementations account it as a ring over 1-byte entries, matching
     /// the pre-trait `SimCluster::all_reduce_max_i8`.
     fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats;
+
+    /// Sum-reduce **packed** contributions (one [`PackedWire`] per
+    /// worker, decoded through `strategy.decode_packed` with `ctx`) into
+    /// `out`. Must produce bit-identical results and [`ReduceStats`] to
+    /// [`Collective::all_reduce_sum_into`] over the unpacked values.
+    ///
+    /// The default materializes dense f32 contributions into
+    /// `scratch.dense` and reuses the simulated-path reduce, so
+    /// third-party collectives work on the packed wire unchanged (just
+    /// without the traffic win). The built-in ring and hierarchical
+    /// collectives override it with cache-blocked chunked folds that
+    /// never build a dense copy of a contribution.
+    fn all_reduce_packed_sum_into(
+        &self,
+        packed: &[PackedWire],
+        strategy: &dyn SyncStrategy,
+        ctx: &LayerCtx,
+        out: &mut [f32],
+        opts: &ReduceOptions,
+        scratch: &mut PackScratch,
+    ) -> ReduceStats {
+        scratch.dense.resize_with(packed.len(), Vec::new);
+        for (pw, d) in packed.iter().zip(scratch.dense.iter_mut()) {
+            d.clear();
+            d.resize(out.len(), 0.0);
+            strategy.decode_packed(pw, ctx, 0..out.len(), d);
+        }
+        self.all_reduce_sum_into(&scratch.dense, out, opts)
+    }
 }
 
 /// Shared i8 max-reduce body (values + ring traffic accounting).
@@ -149,6 +186,22 @@ impl Collective for RingCollective {
     fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
         max_i8_into(contribs, out, self.world)
     }
+    fn all_reduce_packed_sum_into(
+        &self,
+        packed: &[PackedWire],
+        strategy: &dyn SyncStrategy,
+        ctx: &LayerCtx,
+        out: &mut [f32],
+        opts: &ReduceOptions,
+        scratch: &mut PackScratch,
+    ) -> ReduceStats {
+        assert_eq!(packed.len(), self.world, "one packed contribution per worker");
+        if self.world == 1 {
+            strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
+            return ReduceStats::default();
+        }
+        ring::all_reduce_packed_into(packed, strategy, ctx, out, *opts, &mut scratch.chunk)
+    }
 }
 
 /// Grouped (hierarchical) all-reduce ([`hierarchical`]).
@@ -207,6 +260,31 @@ impl Collective for HierarchicalCollective {
     }
     fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
         max_i8_into(contribs, out, self.world)
+    }
+    fn all_reduce_packed_sum_into(
+        &self,
+        packed: &[PackedWire],
+        strategy: &dyn SyncStrategy,
+        ctx: &LayerCtx,
+        out: &mut [f32],
+        opts: &ReduceOptions,
+        scratch: &mut PackScratch,
+    ) -> ReduceStats {
+        assert_eq!(packed.len(), self.world, "one packed contribution per worker");
+        if self.world == 1 {
+            strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
+            return ReduceStats::default();
+        }
+        hierarchical::all_reduce_packed_with_scratch(
+            packed,
+            self.group_size,
+            strategy,
+            ctx,
+            out,
+            *opts,
+            &mut self.scratch.borrow_mut(),
+            &mut scratch.chunk,
+        )
     }
 }
 

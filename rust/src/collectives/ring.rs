@@ -14,6 +14,8 @@
 //! moves finished chunks without further arithmetic.
 
 use super::{fold_step, ReduceOptions, ReduceStats};
+use crate::sync::wire::PackedWire;
+use crate::sync::{LayerCtx, SyncStrategy};
 use crate::util::par;
 
 /// Run ring all-reduce over per-worker contributions, allocating the
@@ -26,8 +28,10 @@ pub fn all_reduce(contribs: &[Vec<f32>], opts: ReduceOptions) -> (Vec<f32>, Redu
 
 /// Ring all-reduce into a caller-provided buffer — the allocation-free
 /// variant behind [`crate::collectives::Collective`]. Only O(p) pointer
-/// bookkeeping is allocated per call — except with `opts.kahan`, whose
-/// per-chunk compensation vectors still total O(n) per call.
+/// bookkeeping is allocated per call; Kahan compensation lives in a
+/// stack-resident `FOLD_BLOCK`-element block inside the cache-blocked
+/// fold, so `opts.kahan` allocates nothing either (the ROADMAP-tracked
+/// per-call compensation vectors are gone).
 pub fn all_reduce_into(
     contribs: &[Vec<f32>],
     out: &mut [f32],
@@ -53,28 +57,41 @@ pub fn all_reduce_into(
 
     let process = |c: usize, chunk: &mut [f32]| {
         let lo = bounds[c];
-        let len = chunk.len();
-        if len == 0 {
+        if chunk.is_empty() {
             return;
         }
-        let mut comp = vec![0.0f32; if opts.kahan { len } else { 0 }];
         // Fold order: start at worker (c+1) % p, wrap around the ring.
         let start = (c + 1) % p;
-        // Initialize with the starting worker's contribution.
-        chunk.copy_from_slice(&contribs[start][lo..lo + len]);
-        for s in 1..p {
-            let w = (start + s) % p;
-            let src = &contribs[w][lo..lo + len];
+        // Cache-blocked fold: per-element arithmetic (and hence results)
+        // is unchanged, but the Kahan compensation lane shrinks to one
+        // stack block instead of a heap vector per call.
+        let mut comp = [0.0f32; super::FOLD_BLOCK];
+        let mut b0 = 0usize;
+        while b0 < chunk.len() {
+            let b1 = (b0 + super::FOLD_BLOCK).min(chunk.len());
+            let blk = &mut chunk[b0..b1];
+            blk.copy_from_slice(&contribs[start][lo + b0..lo + b1]);
             if opts.kahan {
-                for i in 0..len {
-                    fold_step(&mut chunk[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                let comp = &mut comp[..blk.len()];
+                comp.fill(0.0);
+                for s in 1..p {
+                    let w = (start + s) % p;
+                    let src = &contribs[w][lo + b0..lo + b1];
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut comp[i], src[i], opts.fmt, opts.mode, true);
+                    }
                 }
             } else {
                 let mut dummy = 0.0f32;
-                for i in 0..len {
-                    fold_step(&mut chunk[i], &mut dummy, src[i], opts.fmt, opts.mode, false);
+                for s in 1..p {
+                    let w = (start + s) % p;
+                    let src = &contribs[w][lo + b0..lo + b1];
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut dummy, src[i], opts.fmt, opts.mode, false);
+                    }
                 }
             }
+            b0 = b1;
         }
     };
 
@@ -112,6 +129,80 @@ pub fn all_reduce_into(
         bytes_per_worker: moved * elt_bytes as u64,
         steps: 2 * (p - 1),
     }
+}
+
+/// Ring all-reduce over **packed** worker contributions: the reduction
+/// consumes each worker's [`PackedWire`] bytes in cache-blocked chunks
+/// (unpack-block → fold), never materializing a dense f32 copy of any
+/// contribution. Fold order and operand precision are exactly those of
+/// [`all_reduce_into`], so with an exact `decode_packed` the result is
+/// bit-identical to the simulated-f32 path — including `opts.kahan`,
+/// whose compensation block lives on the stack here too.
+///
+/// `unpack` is caller-owned block scratch (the session's
+/// [`crate::sync::PackScratch::chunk`]); it grows to `FOLD_BLOCK`
+/// elements once and stays.
+///
+/// Runs single-threaded: the packed fold is bandwidth-bound by design
+/// (that is the point), and `decode_packed` takes `&dyn` without a
+/// `Sync` bound. Parallelizing it is a ROADMAP item.
+pub fn all_reduce_packed_into(
+    packed: &[PackedWire],
+    strategy: &dyn SyncStrategy,
+    ctx: &LayerCtx,
+    out: &mut [f32],
+    opts: ReduceOptions,
+    unpack: &mut Vec<f32>,
+) -> ReduceStats {
+    let p = packed.len();
+    let n = out.len();
+    debug_assert!(p >= 2, "single-worker reduces are handled by the caller");
+    let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
+    unpack.clear();
+    unpack.resize(super::FOLD_BLOCK, 0.0);
+    let mut comp = [0.0f32; super::FOLD_BLOCK];
+    for c in 0..p {
+        let (lo, hi) = (bounds[c], bounds[c + 1]);
+        if lo == hi {
+            continue;
+        }
+        let start = (c + 1) % p;
+        let mut b0 = lo;
+        while b0 < hi {
+            let b1 = (b0 + super::FOLD_BLOCK).min(hi);
+            let blk = &mut out[b0..b1];
+            strategy.decode_packed(&packed[start], ctx, b0..b1, blk);
+            let seg = &mut unpack[..b1 - b0];
+            if opts.kahan {
+                let comp = &mut comp[..blk.len()];
+                comp.fill(0.0);
+                for s in 1..p {
+                    let w = (start + s) % p;
+                    strategy.decode_packed(&packed[w], ctx, b0..b1, seg);
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut comp[i], seg[i], opts.fmt, opts.mode, true);
+                    }
+                }
+            } else {
+                let mut dummy = 0.0f32;
+                for s in 1..p {
+                    let w = (start + s) % p;
+                    strategy.decode_packed(&packed[w], ctx, b0..b1, seg);
+                    for i in 0..blk.len() {
+                        fold_step(&mut blk[i], &mut dummy, seg[i], opts.fmt, opts.mode, false);
+                    }
+                }
+            }
+            b0 = b1;
+        }
+    }
+    // Identical traffic accounting to the dense path: `SyncReport`s must
+    // stay bit-identical across wire modes (payload_bytes deliberately
+    // keeps the dense simulation figure; the packed figure is
+    // `SyncReport::wire` / `SyncSession::wire_moved`).
+    let elt_bytes = wire_bytes(opts);
+    let moved = 2 * (p as u64 - 1) * (n as u64) / p as u64;
+    ReduceStats { bytes_per_worker: moved * elt_bytes as u64, steps: 2 * (p - 1) }
 }
 
 /// Width of one element on the wire, rounded up to whole bytes (the paper

@@ -10,7 +10,7 @@ use crate::aps::{HybridSchedule, SyncMethod};
 use crate::collectives::Topology;
 use crate::cpd::FpFormat;
 use crate::optim::{LrSchedule, OptimizerKind};
-use crate::sync::StrategySpec;
+use crate::sync::{StrategySpec, WireMode};
 use crate::util::toml::TomlDoc;
 use crate::Result;
 use anyhow::{anyhow, Context};
@@ -33,6 +33,10 @@ pub struct ExperimentConfig {
     /// of which may be wrapped in residual error feedback with an `ef:`
     /// prefix, e.g. `ef:topk`).
     pub strategy: StrategySpec,
+    /// How the session materializes wire traffic (`sync.wire`:
+    /// `packed | simulated`; packed — the default — moves bit-packed
+    /// `WireCost` bytes through the simulated collectives).
+    pub wire: WireMode,
     pub kahan: bool,
     pub fp32_last_layer: bool,
     pub hybrid: Option<HybridSchedule>,
@@ -164,6 +168,17 @@ impl ExperimentConfig {
         } else {
             base
         };
+        let wire = match doc
+            .opt("sync", "wire")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "packed".to_string())
+            .as_str()
+        {
+            "packed" => WireMode::Packed,
+            "simulated" => WireMode::Simulated,
+            other => return Err(anyhow!("unknown sync.wire {other:?} (packed|simulated)")),
+        };
         let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let fp32_last_layer = doc
             .opt("sync", "fp32_last_layer")
@@ -251,6 +266,7 @@ impl ExperimentConfig {
             world_size,
             topology,
             strategy,
+            wire,
             kahan,
             fp32_last_layer,
             hybrid,
@@ -396,6 +412,46 @@ steps_per_epoch = 2
         assert!(ExperimentConfig::from_toml_str(&bad).is_err());
         let bad = SAMPLE.replace("method = \"aps\"", "method = \"qsgd\"\nqsgd_bucket = 0");
         assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_mode_parses_and_defaults_to_packed() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.wire, WireMode::Packed, "packed is the default");
+        let sim = SAMPLE.replace("kahan = true", "kahan = true\nwire = \"simulated\"");
+        let cfg = ExperimentConfig::from_toml_str(&sim).unwrap();
+        assert_eq!(cfg.wire, WireMode::Simulated);
+        let explicit = SAMPLE.replace("kahan = true", "kahan = true\nwire = \"packed\"");
+        let cfg = ExperimentConfig::from_toml_str(&explicit).unwrap();
+        assert_eq!(cfg.wire, WireMode::Packed);
+        let bad = SAMPLE.replace("kahan = true", "kahan = true\nwire = \"telepathy\"");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn ef_qsgd_label_round_trips_the_knobs() {
+        // Config → spec → label must carry the qsgd bits/bucket knobs
+        // through the ef: wrapper, so bench/table rows stay attributable
+        // to the exact configuration that produced them.
+        let q = SAMPLE.replace(
+            "method = \"aps\"",
+            "method = \"ef:qsgd\"\nqsgd_bits = 5\nqsgd_bucket = 64",
+        );
+        let cfg = ExperimentConfig::from_toml_str(&q).unwrap();
+        assert_eq!(
+            cfg.strategy,
+            StrategySpec::ErrorFeedback {
+                inner: Box::new(StrategySpec::Qsgd { bits: 5, bucket: 64, seed: 7 })
+            }
+        );
+        assert_eq!(cfg.strategy.label(), "ef:qsgd b5/64");
+        // and unwrapped, for completeness
+        let q = SAMPLE.replace(
+            "method = \"aps\"",
+            "method = \"qsgd\"\nqsgd_bits = 3\nqsgd_bucket = 128",
+        );
+        let cfg = ExperimentConfig::from_toml_str(&q).unwrap();
+        assert_eq!(cfg.strategy.label(), "qsgd b3/128");
     }
 
     #[test]

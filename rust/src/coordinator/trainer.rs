@@ -7,7 +7,7 @@ use crate::data::shard_range;
 use crate::metrics::{top1_accuracy, SegmentationMetrics, Series};
 use crate::optim::{LrSchedule, Optimizer, OptimizerKind};
 use crate::runtime::Model;
-use crate::sync::{StrategySpec, SyncSession, SyncSessionBuilder};
+use crate::sync::{StrategySpec, SyncSession, SyncSessionBuilder, WireMode};
 use crate::Result;
 use anyhow::ensure;
 use std::time::Instant;
@@ -24,6 +24,9 @@ pub struct TrainerSetup {
     /// Optional hybrid-precision schedule (FP32 for the first
     /// `fp32_epochs`, the configured strategy afterwards).
     pub hybrid: Option<HybridSchedule>,
+    /// How the session materializes wire traffic (packed bit-buffers by
+    /// default; results are bit-identical either way).
+    pub wire: WireMode,
     pub optimizer: OptimizerKind,
     pub schedule: LrSchedule,
     pub epochs: usize,
@@ -44,6 +47,7 @@ impl TrainerSetup {
             sync,
             strategy: None,
             hybrid: None,
+            wire: WireMode::default(),
             optimizer: OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false },
             schedule: LrSchedule::Constant { lr: 0.05 },
             epochs: 2,
@@ -135,6 +139,7 @@ impl<'m> Trainer<'m> {
         let current_spec = low_spec.clone();
         let session = SyncSessionBuilder::from_sync_options(setup.world_size, &setup.sync)
             .spec(current_spec.clone())
+            .with_wire(setup.wire)
             .build();
         Ok(Trainer { model, setup, workload, session, low_spec, current_spec, params, optimizer })
     }

@@ -219,6 +219,130 @@ pub fn quantize_shifted_slice_into(
     }
 }
 
+/// Quantize `x` into `fmt` and return its storage **bit-code** — the
+/// `fmt.total_bits()`-bit word a real deployment would put on the wire
+/// (sign ‖ biased exponent ‖ mantissa, IEEE-754-like layout, all-ones
+/// exponent reserved for INF/NaN). Shares the rounding logic with
+/// [`quantize`]; [`decode_bits`] is the exact inverse on every
+/// representable value (NaN decodes to the canonical `f32::NAN`, which
+/// is also what [`quantize`] returns for NaN inputs).
+///
+/// Formats with `man_bits == 0` have no NaN code (the single all-ones
+/// exponent word is INF); encoding NaN into such a format panics in
+/// debug builds — callers must escape to a raw representation first.
+#[inline]
+pub fn encode_bits(x: f32, fmt: FpFormat, mode: Rounding) -> u32 {
+    code_of_representable(quantize(x, fmt, mode), fmt)
+}
+
+/// The bit-code of a value already exactly representable in `fmt`
+/// (the extraction half of [`encode_bits`]).
+pub(crate) fn code_of_representable(q: f32, fmt: FpFormat) -> u32 {
+    let mb = fmt.man_bits as u32;
+    let eb = fmt.exp_bits as u32;
+    let sign = (q.is_sign_negative() as u32) << (eb + mb);
+    let exp_ones = ((1u32 << eb) - 1) << mb;
+    if q.is_nan() {
+        debug_assert!(mb >= 1, "NaN has no bit-code in a zero-mantissa format");
+        // canonical quiet NaN: all-ones exponent, MSB mantissa bit set
+        return exp_ones | (1u32 << mb.saturating_sub(1));
+    }
+    if q.is_infinite() {
+        return sign | exp_ones;
+    }
+    if q == 0.0 {
+        return sign; // preserves the sign of -0.0
+    }
+    // Decompose |q| = sig · 2^(e − 23) with sig ∈ [2^23, 2^24).
+    let bits = q.abs().to_bits();
+    let raw_e = (bits >> 23) as i32;
+    let raw_m = (bits & 0x007f_ffff) as u64;
+    let (e, sig): (i32, u64) = if raw_e == 0 {
+        let lead = 63 - raw_m.leading_zeros() as i32;
+        let shift = 23 - lead;
+        (-126 - shift, raw_m << shift)
+    } else {
+        (raw_e - 127, raw_m | (1 << 23))
+    };
+    debug_assert!(e <= fmt.max_exponent(), "{q:e} is out of range for {fmt}");
+    let e_min = fmt.min_normal_exponent();
+    if e >= e_min {
+        // Normal in fmt: mantissa is the top man_bits of the significand.
+        let drop = 23 - mb;
+        debug_assert!(
+            drop == 0 || sig & ((1u64 << drop) - 1) == 0,
+            "{q:e} is not representable in {fmt}"
+        );
+        let man = ((sig >> drop) & ((1u64 << mb) - 1)) as u32;
+        let biased = (e + fmt.bias()) as u32;
+        sign | (biased << mb) | man
+    } else {
+        // Subnormal in fmt: value = man · 2^min_subnormal_exponent.
+        let sh = 23 + fmt.min_subnormal_exponent() - e;
+        debug_assert!((0..64).contains(&sh), "{q:e} below {fmt}'s subnormal range");
+        debug_assert!(sig & ((1u64 << sh) - 1) == 0, "{q:e} is not representable in {fmt}");
+        sign | (sig >> sh) as u32
+    }
+}
+
+/// Decode a [`encode_bits`] bit-code back to the exact `f32` value of
+/// that representable (the up-cast a receiver performs).
+#[inline]
+pub fn decode_bits(code: u32, fmt: FpFormat) -> f32 {
+    let mb = fmt.man_bits as u32;
+    let eb = fmt.exp_bits as u32;
+    let man = code & ((1u32 << mb) - 1);
+    let expf = (code >> mb) & ((1u32 << eb) - 1);
+    let neg = (code >> (eb + mb)) & 1 == 1;
+    let exp_ones = (1u32 << eb) - 1;
+    let mag: f32 = if expf == exp_ones {
+        if man == 0 {
+            f32::INFINITY
+        } else {
+            return f32::NAN; // canonical, sign ignored (matches quantize)
+        }
+    } else if expf == 0 {
+        (man as f64 * pow2_f64(fmt.min_subnormal_exponent())) as f32
+    } else {
+        let e = expf as i32 - fmt.bias();
+        ((1.0 + man as f64 / (1u64 << mb) as f64) * pow2_f64(e)) as f32
+    };
+    if neg {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Bulk [`encode_bits`] — the packed-wire downcast kernel
+/// (`rust/src/sync/wire.rs` packs these codes at `fmt.total_bits()` each).
+pub fn encode_bits_slice_into(xs: &[f32], fmt: FpFormat, mode: Rounding, out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len());
+    match mode {
+        Rounding::Stochastic(seed) => {
+            // Same per-element draw derivation as `quantize_slice_into`,
+            // so code and value paths agree on stochastic wires.
+            for (i, (&x, o)) in xs.iter().zip(out.iter_mut()).enumerate() {
+                let r = splitmix64(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                *o = encode_bits(x, fmt, Rounding::Stochastic(r));
+            }
+        }
+        m => {
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = encode_bits(x, fmt, m);
+            }
+        }
+    }
+}
+
+/// Bulk [`decode_bits`] — the packed-wire upcast kernel.
+pub fn decode_bits_slice_into(codes: &[u32], fmt: FpFormat, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    for (&c, o) in codes.iter().zip(out.iter_mut()) {
+        *o = decode_bits(c, fmt);
+    }
+}
+
 /// Quantize a slice elementwise, allocating the output.
 pub fn quantize_slice(xs: &[f32], fmt: FpFormat, mode: Rounding) -> Vec<f32> {
     let mut out = vec![0.0; xs.len()];
@@ -486,6 +610,96 @@ mod tests {
         assert_eq!(ceil_log2_abs(f32::from_bits(1)), Some(-149));
         // 3·2^-149: log2 = 1.585 - 149 = -147.4 → ceil = -147
         assert_eq!(ceil_log2_abs(f32::from_bits(3)), Some(-147));
+    }
+
+    #[test]
+    fn bit_codes_roundtrip_every_representable() {
+        // decode_bits(code_of_representable(v)) must be the identity on
+        // every finite representable (both signs), ±INF, ±0 and NaN —
+        // exhaustively for small formats, FP32-wide ones included.
+        for fmt in [
+            FpFormat::E5M2,
+            FpFormat::E4M3,
+            FpFormat::E3M0,
+            FpFormat::new(2, 3),
+            FpFormat::new(8, 3),
+            FpFormat::new(6, 1),
+        ] {
+            let mut seen = std::collections::HashSet::new();
+            for v in fmt.enumerate_magnitudes() {
+                for s in [v, -v] {
+                    let code = encode_bits(s, fmt, RNE);
+                    assert!(code < 1u32 << fmt.total_bits(), "{fmt} {s:e}: code {code:#x}");
+                    let back = decode_bits(code, fmt);
+                    assert_eq!(back.to_bits(), s.to_bits(), "{fmt} {s:e} -> {code:#x} -> {back:e}");
+                    seen.insert(code);
+                }
+            }
+            // distinct (sign, magnitude) pairs get distinct codes
+            // (±0 are two distinct codes, as in IEEE storage)
+            assert_eq!(seen.len(), 2 * fmt.finite_magnitude_count() as usize);
+            // specials
+            assert_eq!(decode_bits(encode_bits(f32::INFINITY, fmt, RNE), fmt), f32::INFINITY);
+            assert_eq!(
+                decode_bits(encode_bits(f32::NEG_INFINITY, fmt, RNE), fmt),
+                f32::NEG_INFINITY
+            );
+            if fmt.man_bits >= 1 {
+                let n = decode_bits(encode_bits(f32::NAN, fmt, RNE), fmt);
+                assert_eq!(n.to_bits(), f32::NAN.to_bits(), "{fmt}: NaN must stay canonical");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_bits_shares_quantize_rounding() {
+        // decode(encode(x)) == quantize(x) for arbitrary (unrepresentable)
+        // inputs — the code path rounds exactly like the value path.
+        let fmt = FpFormat::E5M2;
+        let mut x = -80000.0f32;
+        while x < 80000.0 {
+            let q = quantize(x, fmt, RNE);
+            let via_code = decode_bits(encode_bits(x, fmt, RNE), fmt);
+            assert_eq!(via_code.to_bits(), q.to_bits(), "x={x}");
+            x += 13.7;
+        }
+    }
+
+    #[test]
+    fn bit_code_slice_kernels_match_scalar() {
+        let xs: Vec<f32> = (0..500).map(|i| (i as f32 - 250.0) * 0.731).collect();
+        let fmt = FpFormat::E4M3;
+        let mut codes = vec![0u32; xs.len()];
+        encode_bits_slice_into(&xs, fmt, RNE, &mut codes);
+        let mut decoded = vec![0.0f32; xs.len()];
+        decode_bits_slice_into(&codes, fmt, &mut decoded);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(codes[i], encode_bits(x, fmt, RNE));
+            assert_eq!(decoded[i].to_bits(), quantize(x, fmt, RNE).to_bits());
+        }
+        // stochastic mode derives the same per-element draws as
+        // quantize_slice_into, so codes and values agree
+        let mut s_codes = vec![0u32; xs.len()];
+        encode_bits_slice_into(&xs, fmt, Rounding::Stochastic(99), &mut s_codes);
+        let mut s_vals = vec![0.0f32; xs.len()];
+        quantize_slice_into(&xs, &mut s_vals, fmt, Rounding::Stochastic(99));
+        for (i, &c) in s_codes.iter().enumerate() {
+            assert_eq!(decode_bits(c, fmt).to_bits(), s_vals[i].to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn bit_codes_handle_f32_subnormal_range_formats() {
+        // BF16's subnormals live below f32's normal floor; the extraction
+        // must normalize f32-subnormal significands correctly.
+        let fmt = FpFormat::BF16;
+        for e in -133..=-120i32 {
+            let v = (e as f64).exp2() as f32;
+            let code = encode_bits(v, fmt, RNE);
+            assert_eq!(decode_bits(code, fmt).to_bits(), v.to_bits(), "2^{e}");
+            let code = encode_bits(-v, fmt, RNE);
+            assert_eq!(decode_bits(code, fmt).to_bits(), (-v).to_bits(), "-2^{e}");
+        }
     }
 
     #[test]

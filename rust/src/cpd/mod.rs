@@ -8,7 +8,9 @@
 //!   `INF`/`NaN`, subnormals supported).
 //! * [`cast`] — bit-exact FP32 → custom → FP32 quantization with
 //!   round-to-nearest-even (the paper's choice, §4), plus toward-zero and
-//!   stochastic rounding for comparison studies.
+//!   stochastic rounding for comparison studies; `encode_bits` /
+//!   `decode_bits` (and their bulk slice kernels) convert between values
+//!   and the format's storage bit-codes for the packed wire path.
 //! * [`accum`] — low-precision accumulators (every intermediate value is
 //!   re-quantized, the behaviour in paper Fig 12) and the Kahan-compensated
 //!   variant (paper §5.1.1).
@@ -24,9 +26,9 @@ pub mod gemm;
 
 pub use accum::{KahanAccumulator, LowPrecisionAccumulator};
 pub use cast::{
-    ceil_log2_abs, quantize, quantize_shifted, quantize_shifted_slice,
-    quantize_shifted_slice_into, quantize_slice, quantize_slice_inplace, quantize_slice_into,
-    Rounding,
+    ceil_log2_abs, decode_bits, decode_bits_slice_into, encode_bits, encode_bits_slice_into,
+    quantize, quantize_shifted, quantize_shifted_slice, quantize_shifted_slice_into,
+    quantize_slice, quantize_slice_inplace, quantize_slice_into, Rounding,
 };
 pub use error::{avg_roundoff_error, max_roundoff_error};
 pub use format::FpFormat;

@@ -20,9 +20,13 @@
 //!   strategy impls; TernGrad-style ternarization, top-k sparsification
 //!   and QSGD bucketed quantization ship as net-new codecs, and
 //!   [`sync::ErrorFeedback`] layers residual memory over any of them.
+//!   Under the default packed wire ([`sync::WireMode::Packed`]) encoded
+//!   tensors move as bit-packed [`sync::PackedWire`] buffers — 2-bit
+//!   ternary symbols, `bits`-wide QSGD codes, format-width bit-codes —
+//!   so simulated traffic is payload-proportional while staying
+//!   bit-identical to the dense-f32 simulation.
 //! * [`aps`] — the paper-level method vocabulary ([`aps::SyncMethod`],
-//!   Algorithm 1 helpers, [`aps::SyncReport`]) and the deprecated
-//!   `aps::synchronize` shim.
+//!   Algorithm 1 helpers, [`aps::SyncReport`]).
 //! * [`optim`] — momentum SGD, Nesterov, LARS, LR schedules (paper §4.1).
 //! * [`data`] — deterministic synthetic datasets standing in for CIFAR-10,
 //!   cityscapes and a token corpus (see DESIGN.md §3 substitutions).
@@ -34,10 +38,11 @@
 //!
 //! ## Migrating from `aps::synchronize`
 //!
-//! `aps::synchronize(&cluster, &grads, &opts)` is deprecated (kept for
-//! one release as a shim). It allocated every wire buffer, the output
-//! tensors and the report on each call; the replacement owns them across
-//! steps:
+//! `aps::synchronize(&cluster, &grads, &opts)` has been **removed** after
+//! its one-release deprecation window (`aps::legacy::synchronize` remains,
+//! hidden, purely to pin the bit-identity equivalence suite). It allocated
+//! every wire buffer, the output tensors and the report on each call; the
+//! replacement owns them across steps:
 //!
 //! ```
 //! use aps_cpd::aps::{SyncMethod, SyncOptions};

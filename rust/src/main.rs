@@ -71,6 +71,7 @@ fn train(args: &Args) -> Result<()> {
 
     let mut setup = TrainerSetup::new(cfg.world_size, sync);
     setup.strategy = Some(cfg.strategy.clone());
+    setup.wire = cfg.wire;
     setup.hybrid = cfg.hybrid;
     setup.optimizer = cfg.optimizer;
     setup.schedule = cfg.schedule.clone();

@@ -46,9 +46,11 @@
 //! `(2-2^-m)·2^max_exponent` — far more than the few-percent inflation
 //! a residual can add.
 
+use super::wire::PackedWire;
 use super::{Factors, GradView, LayerCtx, SyncStrategy, WireCost};
 use crate::collectives::{Collective, ReduceStats};
 use crate::cpd::FpFormat;
+use core::ops::Range;
 
 /// Residual error feedback around an inner [`SyncStrategy`].
 ///
@@ -182,6 +184,22 @@ impl<S: SyncStrategy> SyncStrategy for ErrorFeedback<S> {
 
     fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
         self.inner.wire_cost(encoded, ctx)
+    }
+
+    /// The residual correction already happened inside [`Self::encode`];
+    /// packing is a pure transcode of the inner codec's wire values, so
+    /// both packed hooks forward unchanged.
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        self.inner.encode_packed(encoded, ctx, out)
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        self.inner.decode_packed(packed, ctx, range, out)
     }
 }
 

@@ -27,27 +27,44 @@
 //!   (per-bucket scales and the like). Sparse codecs such as top-k
 //!   finally account their index traffic honestly; the session aggregates
 //!   the per-layer costs into [`crate::aps::SyncReport::wire`].
+//! * [`wire`] — the packed wire: [`wire::PackedWire`] byte buffers with
+//!   [`wire::BitWriter`]/[`wire::BitReader`] kernels. Under the default
+//!   [`wire::WireMode::Packed`], [`SyncStrategy::encode_packed`]
+//!   transcodes each worker's encoded layer into `WireCost`-tight bytes
+//!   (2-bit ternary symbols, QSGD `bits`/element + bucket scales,
+//!   `FpFormat`-width bit-codes, sparse index/value pairs) and the
+//!   collectives reduce by unpacking cache-blocked chunks — so the
+//!   simulated traffic moves what `WireCost` claims, not f32 lanes,
+//!   while staying bit-identical to the simulated path
+//!   (`rust/tests/packed_wire.rs`).
 //! * [`crate::collectives::Collective`] — a pluggable all-reduce
-//!   (ring / hierarchical today), consumed by strategies and the session.
+//!   (ring / hierarchical today), consumed by strategies and the session,
+//!   with a packed entry point (`all_reduce_packed_sum_into`) whose
+//!   default unpacks to the dense path so third-party collectives keep
+//!   working.
 //! * [`SyncSession`] — owns one strategy, one collective and all scratch
-//!   buffers (wire tensors, exponent vectors, per-layer reports);
-//!   [`SyncSession::step`] synchronizes one training step's gradients
-//!   with no per-step element-storage allocation. Build it with
-//!   [`SyncSessionBuilder`].
+//!   buffers (wire tensors, packed buffers, exponent vectors, per-layer
+//!   reports); [`SyncSession::step`] synchronizes one training step's
+//!   gradients with no per-step element-storage allocation — Kahan
+//!   compensation included (stack-blocked in the fold kernels). Build it
+//!   with [`SyncSessionBuilder`]; [`SyncSession::wire_moved`] reports the
+//!   packed bytes a step actually moved.
 //!
 //! Every shipped codec (and every future one) is pinned by the shared
-//! conformance contract in `rust/tests/codec_conformance.rs`: encode
-//! writes every element, round-trips stay bounded on hostile inputs,
-//! wire costs never under-report, replays are deterministic, and ragged
-//! inputs panic.
+//! conformance contract in `rust/tests/codec_conformance.rs` (run in both
+//! wire modes): encode writes every element, round-trips stay bounded on
+//! hostile inputs, wire costs never under-report, replays are
+//! deterministic, and ragged inputs panic.
 //!
-//! The legacy free function `aps::synchronize` survives as a deprecated
-//! shim over a throwaway session; `aps::legacy::synchronize` keeps the
-//! pre-trait implementation for the bit-identity equivalence suite.
+//! The deprecated `aps::synchronize` one-shot shim has been removed after
+//! its one-release grace period — build a [`SyncSession`];
+//! `aps::legacy::synchronize` keeps the pre-trait implementation for the
+//! bit-identity equivalence suite.
 
 pub mod feedback;
 pub mod session;
 pub mod strategies;
+pub mod wire;
 
 pub use crate::aps::{LayerReport, SyncReport};
 pub use feedback::ErrorFeedback;
@@ -56,10 +73,12 @@ pub use strategies::{
     ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, QsgdStrategy, TernaryStrategy,
     TopKStrategy,
 };
+pub use wire::{BitReader, BitWriter, PackScratch, PackedWire, WireMode};
 
 use crate::aps::SyncMethod;
 use crate::collectives::{Collective, ReduceStats};
 use crate::cpd::{FpFormat, Rounding};
+use core::ops::Range;
 
 /// Borrowed view of every worker's per-layer gradients for one step
 /// (`grads[w][l]` = worker `w`'s gradient tensor for layer `l`).
@@ -282,9 +301,46 @@ pub trait SyncStrategy {
     /// dense shipping in the layer's wire format; sparse/quantized codecs
     /// override it to account index traffic and metadata. Must never
     /// under-report: the conformance suite checks
-    /// `value_bits + index_bits ≥ nnz(encoded)`.
+    /// `value_bits + index_bits ≥ nnz(encoded)`. On the packed wire path
+    /// it must also *match* what [`SyncStrategy::encode_packed`] ships
+    /// (`PackedWire::moved_cost`), which the packed-wire suite and the
+    /// bytes-moved bench column pin.
     fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
         WireCost::dense(encoded.len(), ctx.fmt)
+    }
+
+    /// Transcode this worker's already-encoded f32 wire values (`encoded`
+    /// is the output of the immediately preceding [`SyncStrategy::encode`]
+    /// call for the same layer) into packed bytes. The contract:
+    /// `decode_packed` over any range must reproduce `encoded`
+    /// bit-for-bit, so the packed reduction stays bit-identical to the
+    /// simulated-f32 path.
+    ///
+    /// The default falls back to raw f32 lanes
+    /// ([`PackedWire::pack_raw_f32`]) — third-party codecs keep working
+    /// on the packed path, merely without the bandwidth win. Built-in
+    /// codecs override it to pack `WireCost`-tight layouts (format
+    /// bit-codes, 2-bit ternary symbols, QSGD sign+level codes, sparse
+    /// index/value pairs).
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        let _ = ctx;
+        out.pack_raw_f32(encoded);
+    }
+
+    /// Unpack `range` (element indices) of one worker's packed layer back
+    /// into dense f32 wire values — the exact inverse of
+    /// [`SyncStrategy::encode_packed`]. Called by collectives in
+    /// cache-blocked chunks during a packed reduction; must be pure
+    /// (`&self`) and support arbitrary sub-ranges.
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        let _ = ctx;
+        packed.unpack_raw_f32(range, out);
     }
 }
 
@@ -314,6 +370,18 @@ impl SyncStrategy for Box<dyn SyncStrategy> {
     }
     fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
         (**self).wire_cost(encoded, ctx)
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        (**self).encode_packed(encoded, ctx, out)
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        (**self).decode_packed(packed, ctx, range, out)
     }
 }
 

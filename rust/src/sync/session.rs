@@ -1,19 +1,34 @@
 //! [`SyncSession`] — the hot-path owner of one strategy, one collective,
 //! and every buffer gradient synchronization needs step after step.
 //!
-//! The pre-trait `aps::synchronize` free function re-allocated all wire
-//! tensors, the output tensors and the report on every call. A session
-//! allocates them once (growing to the largest layer on first use) and
-//! then runs [`SyncSession::step`] with no per-step element-storage
-//! allocation — only O(world) pointer bookkeeping inside the ring split.
-//! The hierarchical collective keeps its per-group partials in reusable
-//! scratch too (`rust/tests/session_alloc.rs` pins the steady state with
-//! a counting allocator); the one acknowledged exception, tracked in
-//! ROADMAP.md, is Kahan compensation vectors when that mode is enabled.
+//! The pre-trait `aps::synchronize` free function (removed; see
+//! `aps::legacy` for the pinned historical implementation) re-allocated
+//! all wire tensors, the output tensors and the report on every call. A
+//! session allocates them once (growing to the largest layer on first
+//! use) and then runs [`SyncSession::step`] with no per-step
+//! element-storage allocation — only O(world) pointer bookkeeping inside
+//! the ring split. The hierarchical collective keeps its per-group
+//! partials in reusable scratch, Kahan compensation lives in
+//! stack-resident blocks inside the fold kernels, and the packed wire's
+//! byte buffers and unpack chunks are session-owned
+//! (`rust/tests/session_alloc.rs` pins the steady state with a counting
+//! allocator across all of ring/hierarchical/packed/Kahan).
+//!
+//! Under the default [`WireMode::Packed`], each worker's encoded layer is
+//! transcoded into a [`PackedWire`] (2-bit ternary symbols, QSGD
+//! sign+level codes, `FpFormat`-width bit-codes, sparse pairs) and the
+//! collective reduces by unpacking cache-blocked chunks — the simulated
+//! traffic that moves through memory is the codec's honest `WireCost`,
+//! not dense f32 lanes, while decoded gradients and reports stay
+//! bit-identical to [`WireMode::Simulated`]
+//! (`rust/tests/packed_wire.rs`). [`SyncSession::wire_moved`] exposes the
+//! measured packed traffic.
+//!
 //! Reports and reduced gradients are returned by reference into
 //! session-owned storage; reusing a session yields bit-identical results
 //! to fresh calls (pinned by `rust/tests/strategy_layer.rs`).
 
+use super::wire::{PackScratch, PackedWire, WireMode};
 use super::{ErrorFeedback, Factors, GradView, LayerCtx, StrategySpec, SyncStrategy, WireCost};
 use crate::aps::{LayerReport, SyncOptions, SyncReport};
 use crate::collectives::{Collective, ReduceOptions, Topology};
@@ -32,6 +47,7 @@ pub struct SyncSessionBuilder {
     fp32_last_layer: bool,
     fused: bool,
     error_feedback: bool,
+    wire: WireMode,
 }
 
 impl SyncSessionBuilder {
@@ -51,6 +67,7 @@ impl SyncSessionBuilder {
             fp32_last_layer: false,
             fused: false,
             error_feedback: false,
+            wire: WireMode::default(),
         }
     }
 
@@ -125,6 +142,15 @@ impl SyncSessionBuilder {
         self
     }
 
+    /// Choose how wire traffic is materialized: [`WireMode::Packed`]
+    /// (default — bit-packed buffers, payload-proportional simulated
+    /// traffic) or [`WireMode::Simulated`] (legacy dense f32 lanes).
+    /// Results are bit-identical either way.
+    pub fn with_wire(mut self, mode: WireMode) -> Self {
+        self.wire = mode;
+        self
+    }
+
     pub fn build(self) -> SyncSession {
         let world = self.world;
         let collective =
@@ -149,8 +175,13 @@ impl SyncSessionBuilder {
             average: self.average,
             fp32_last_layer: self.fp32_last_layer,
             fused: self.fused,
+            wire_mode: self.wire,
             factors: Factors::default(),
             wire: Vec::new(),
+            stage: Vec::new(),
+            packed: Vec::new(),
+            pack_scratch: PackScratch::default(),
+            moved: None,
             reduced: Vec::new(),
             report: SyncReport::default(),
             steps_done: 0,
@@ -175,10 +206,23 @@ pub struct SyncSession {
     average: bool,
     fp32_last_layer: bool,
     fused: bool,
+    wire_mode: WireMode,
     factors: Factors,
-    /// Per-worker wire buffers for the layer currently in flight
-    /// (capacity grows to the largest layer, then stays).
+    /// Per-worker dense wire buffers for the layer currently in flight —
+    /// the [`WireMode::Simulated`] path (capacity grows to the largest
+    /// layer, then stays).
     wire: Vec<Vec<f32>>,
+    /// One shared encode-staging buffer for the packed path (each
+    /// worker's f32 wire values exist only transiently here before being
+    /// transcoded into its [`PackedWire`]).
+    stage: Vec<f32>,
+    /// Per-worker packed byte buffers — what the packed reduction
+    /// actually consumes.
+    packed: Vec<PackedWire>,
+    /// Unpack scratch the collectives borrow during packed reductions.
+    pack_scratch: PackScratch,
+    /// Measured packed traffic of the last step (None in simulated mode).
+    moved: Option<WireCost>,
     /// Per-layer reduced gradients (the step output).
     reduced: Vec<Vec<f32>>,
     report: SyncReport,
@@ -204,8 +248,12 @@ impl SyncSession {
         self.report.steps = 0;
         self.report.messages = if self.fused { 1 } else { num_layers };
         // Honest per-worker wire cost, summed over workers and layers here
-        // and averaged into the report at the end of the step.
+        // and averaged into the report at the end of the step — and, on
+        // the packed path, the independently measured packed traffic that
+        // must come out equal.
         let mut wire_cost = WireCost::default();
+        let mut moved = WireCost::default();
+        let packed_mode = self.wire_mode == WireMode::Packed;
 
         // ---- Phase 1: agree on per-layer factors. ----------------------
         self.factors.reset(num_layers);
@@ -214,8 +262,12 @@ impl SyncSession {
         self.report.exponent_bytes = pstats.bytes_per_worker;
         self.report.steps += pstats.steps;
 
-        // ---- Phase 2: encode, reduce, decode — layer by layer. ---------
-        self.wire.resize(world, Vec::new());
+        // ---- Phase 2: encode (→ pack), reduce, decode — per layer. -----
+        if packed_mode {
+            self.packed.resize_with(world, PackedWire::default);
+        } else {
+            self.wire.resize(world, Vec::new());
+        }
         self.reduced.resize(num_layers, Vec::new());
         let base_fmt = self.strategy.wire_format();
 
@@ -243,14 +295,18 @@ impl SyncSession {
             for w in 0..world {
                 ctx.worker = w;
                 let src = view.layer_of(w, l);
-                let buf = &mut self.wire[w];
+                // Packed mode stages each worker's f32 wire values in one
+                // shared buffer: the only dense copy is transient, and the
+                // per-worker storage is the packed bytes.
+                let buf: &mut Vec<f32> =
+                    if packed_mode { &mut self.stage } else { &mut self.wire[w] };
                 buf.resize(n, 0.0);
                 self.strategy.encode(src, &ctx, buf);
                 // One extra read pass for sparse codecs (nnz counting);
                 // dense costs are O(1). Kept as a trait call so the
                 // session never assumes how a codec maps zeros.
-                wire_cost += self.strategy.wire_cost(&self.wire[w], &ctx);
-                for (&x, &q) in src.iter().zip(self.wire[w].iter()) {
+                wire_cost += self.strategy.wire_cost(buf, &ctx);
+                for (&x, &q) in src.iter().zip(buf.iter()) {
                     if x != 0.0 {
                         nonzero_in += 1;
                         if q == 0.0 {
@@ -261,12 +317,30 @@ impl SyncSession {
                         inf_out += 1;
                     }
                 }
+                if packed_mode {
+                    // Fused encode → pack: transcode this worker's wire
+                    // values into its packed buffer and count the bytes
+                    // that will actually move through the reduction.
+                    self.strategy.encode_packed(&self.stage, &ctx, &mut self.packed[w]);
+                    moved += self.packed[w].moved_cost();
+                }
             }
 
             let ropts = ReduceOptions { fmt: layer_fmt, mode: self.rounding, kahan: self.kahan };
             let out = &mut self.reduced[l];
             out.resize(n, 0.0);
-            let stats = self.collective.all_reduce_sum_into(&self.wire, out, &ropts);
+            let stats = if packed_mode {
+                self.collective.all_reduce_packed_sum_into(
+                    &self.packed,
+                    self.strategy.as_ref(),
+                    &ctx,
+                    out,
+                    &ropts,
+                    &mut self.pack_scratch,
+                )
+            } else {
+                self.collective.all_reduce_sum_into(&self.wire, out, &ropts)
+            };
             self.strategy.decode(out, &ctx);
 
             self.report.layers[l] = LayerReport {
@@ -289,8 +363,26 @@ impl SyncSession {
             self.report.steps += self.collective.steps_per_message();
         }
         self.report.wire = wire_cost.per_worker(world);
+        // Measured packed traffic, aggregated exactly like `report.wire`
+        // so the bench-pinned equality is apples to apples.
+        self.moved = packed_mode.then(|| moved.per_worker(world));
         self.steps_done += 1;
         (&self.reduced, &self.report)
+    }
+
+    /// The packed wire traffic the last step *actually moved* through the
+    /// reduction, per worker (payload bits + metadata, measured from the
+    /// [`PackedWire`] buffers) — `None` before the first step and in
+    /// [`WireMode::Simulated`]. For every built-in codec on finite
+    /// gradients this equals [`SyncReport::wire`] exactly; the strategy
+    /// benches assert it (measured bytes-moved == honest accounting).
+    pub fn wire_moved(&self) -> Option<WireCost> {
+        self.moved
+    }
+
+    /// The wire mode this session runs.
+    pub fn wire_mode(&self) -> WireMode {
+        self.wire_mode
     }
 
     /// Swap the strategy, keeping the collective and all scratch (the
@@ -413,6 +505,60 @@ mod tests {
         assert_eq!(report.wire.metadata_bytes, 4 * 3);
         // the packed 4-bit payload beats the simulated dense FP32 figure
         assert!(report.honest_bytes() < report.total_bytes(), "{report:?}");
+    }
+
+    #[test]
+    fn packed_mode_is_default_and_measures_what_it_claims() {
+        let g = grads(4, &[64, 32]);
+        let mut s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Ternary { seed: 5 })
+            .build();
+        assert_eq!(s.wire_mode(), WireMode::Packed);
+        assert!(s.wire_moved().is_none(), "no traffic before the first step");
+        let (_, report) = s.step(&g);
+        let wire = report.wire;
+        // measured packed traffic == honest accounting, field for field
+        assert_eq!(s.wire_moved(), Some(wire));
+        // ternary: 2 bits per element → 96 elems = 24 bytes per worker
+        assert_eq!(wire.value_bits, 2 * 96);
+
+        // simulated mode reports no packed measurement
+        let mut s = SyncSessionBuilder::new(4)
+            .spec(StrategySpec::Ternary { seed: 5 })
+            .with_wire(WireMode::Simulated)
+            .build();
+        let (_, report) = s.step(&g);
+        let sim_wire = report.wire;
+        assert_eq!(sim_wire, wire, "accounting is mode-independent");
+        assert_eq!(s.wire_moved(), None);
+    }
+
+    #[test]
+    fn packed_and_simulated_sessions_are_bit_identical() {
+        // The in-crate smoke version of rust/tests/packed_wire.rs: same
+        // inputs through both wire modes → same bits, same reports.
+        let g = grads(8, &[96, 33]);
+        for spec in [
+            StrategySpec::Aps { fmt: FpFormat::E5M2 },
+            StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 },
+            StrategySpec::TopK { frac: 0.25 },
+        ] {
+            let mut packed = SyncSessionBuilder::new(8).spec(spec.clone()).build();
+            let mut sim = SyncSessionBuilder::new(8)
+                .spec(spec.clone())
+                .with_wire(WireMode::Simulated)
+                .build();
+            let (po, pr) = packed.step(&g);
+            let po = po.to_vec();
+            let pr = pr.clone();
+            let (so, sr) = sim.step(&g);
+            for (l, (a, b)) in po.iter().zip(so.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{spec:?} layer {l} elem {i}");
+                }
+            }
+            assert_eq!(&pr, sr, "{spec:?} report");
+        }
     }
 
     #[test]

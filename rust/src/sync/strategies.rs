@@ -11,10 +11,12 @@
 //! All of them are pinned by the shared contract in
 //! `rust/tests/codec_conformance.rs`.
 
+use super::wire::{self, index_width, BitReader, BitWriter, PackedWire};
 use super::{unscale_in_place, Factors, GradView, LayerCtx, SyncStrategy, WireCost};
 use crate::aps::local_max_exp;
 use crate::collectives::{Collective, ReduceStats};
 use crate::cpd::{quantize_shifted_slice_into, FpFormat};
+use core::ops::Range;
 
 /// Shared phase-2 encode of the four paper methods: shift by the agreed
 /// power-of-two factor and cast into the layer's wire format with a
@@ -53,6 +55,18 @@ impl SyncStrategy for Fp32Strategy {
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
         unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
     }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        wire::pack_cast_layer(encoded, ctx, out);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        wire::unpack_cast_range(packed, ctx, range, out);
+    }
 }
 
 /// Cast to the low-precision wire format with no scaling (the paper's
@@ -80,6 +94,18 @@ impl SyncStrategy for NaiveStrategy {
     }
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
         unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        wire::pack_cast_layer(encoded, ctx, out);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        wire::unpack_cast_range(packed, ctx, range, out);
     }
 }
 
@@ -118,6 +144,18 @@ impl SyncStrategy for LossScalingStrategy {
     }
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
         unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        wire::pack_cast_layer(encoded, ctx, out);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        wire::unpack_cast_range(packed, ctx, range, out);
     }
 }
 
@@ -176,6 +214,18 @@ impl SyncStrategy for ApsStrategy {
     }
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
         unscale_in_place(reduced, ctx.factor_exp, ctx.world, ctx.average);
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        wire::pack_cast_layer(encoded, ctx, out);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        wire::unpack_cast_range(packed, ctx, range, out);
     }
 }
 
@@ -274,12 +324,71 @@ impl SyncStrategy for TernaryStrategy {
         unscale_in_place(reduced, 0, ctx.world, ctx.average);
     }
     fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
-        if ctx.fp32_passthrough {
+        if ctx.fp32_passthrough || encoded.iter().any(|v| !v.is_finite()) {
+            // Dense full-precision layers — and layers carrying divergence
+            // (NaN/INF has no 2-bit symbol; the packed wire ships such a
+            // layer as raw f32, and the cost accounting must match it).
             return WireCost::dense(encoded.len(), FpFormat::FP32);
         }
         // A packed deployment ships one 2-bit symbol per element; the
         // per-layer scale exponent already rides the prepare phase.
         WireCost { value_bits: 2 * encoded.len() as u64, index_bits: 0, metadata_bytes: 0 }
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        if ctx.fp32_passthrough {
+            out.pack_raw_f32(encoded);
+            return;
+        }
+        // Symbols are exactly {0, +s, −s}: 2 bits each (code 3 unused).
+        // Packed optimistically in a single pass; a non-finite value
+        // (divergence has no 2-bit symbol) aborts into the raw-f32
+        // escape, so the common all-finite layer is never rescanned.
+        out.reset(wire::TAG_TERNARY, encoded.len());
+        let mut w = BitWriter::new(out.bytes_mut());
+        let mut diverged = false;
+        for &v in encoded {
+            if !v.is_finite() {
+                diverged = true;
+                break;
+            }
+            let code = if v == 0.0 {
+                0
+            } else if v > 0.0 {
+                1
+            } else {
+                2
+            };
+            w.put(code, 2);
+        }
+        let bits = w.finish();
+        if diverged {
+            out.pack_raw_f32(encoded);
+            return;
+        }
+        out.set_bits(bits, 0);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        if packed.tag() == wire::TAG_RAW_F32 {
+            packed.unpack_raw_f32(range, out);
+            return;
+        }
+        debug_assert_eq!(packed.tag(), wire::TAG_TERNARY);
+        // The same scale expression encode used — bit-identical symbols.
+        let s = crate::aps::ldexp_f32(1.0, ctx.factor_exp);
+        let mut r = BitReader::at(packed.bytes(), range.start as u64 * 2);
+        for o in out.iter_mut() {
+            *o = match r.read(2) {
+                0 => 0.0,
+                1 => s,
+                _ => -s,
+            };
+        }
     }
 }
 
@@ -351,10 +460,70 @@ impl SyncStrategy for TopKStrategy {
         }
         // Honest sparse accounting: each survivor ships its FP32 value
         // plus a position index wide enough to address the layer.
-        let n = encoded.len() as u64;
-        let nnz = encoded.iter().filter(|&&v| v != 0.0).count() as u64;
-        let index_width = (64 - n.saturating_sub(1).leading_zeros() as u64).max(1);
-        WireCost { value_bits: 32 * nnz, index_bits: index_width * nnz, metadata_bytes: 0 }
+        // Survivors are the bit-nonzero entries (−0.0 and NaN included —
+        // the packed wire must reproduce their exact bits, so they ship).
+        let nnz = encoded.iter().filter(|v| v.to_bits() != 0).count() as u64;
+        let iw = index_width(encoded.len()) as u64;
+        WireCost { value_bits: 32 * nnz, index_bits: iw * nnz, metadata_bytes: 0 }
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        if ctx.fp32_passthrough {
+            out.pack_raw_f32(encoded);
+            return;
+        }
+        // Layout: ascending fixed-width indices, then 32-bit raw values
+        // (NaN payloads and −0.0 survive bit-exactly).
+        let iw = index_width(encoded.len());
+        out.reset(wire::TAG_SPARSE, encoded.len());
+        let mut w = BitWriter::new(out.bytes_mut());
+        for (i, v) in encoded.iter().enumerate() {
+            if v.to_bits() != 0 {
+                w.put(i as u32, iw);
+            }
+        }
+        let ibits = w.bits();
+        for v in encoded {
+            if v.to_bits() != 0 {
+                w.put(v.to_bits(), 32);
+            }
+        }
+        let total = w.finish();
+        out.set_bits(total - ibits, ibits);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        _ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        if packed.tag() == wire::TAG_RAW_F32 {
+            packed.unpack_raw_f32(range, out);
+            return;
+        }
+        debug_assert_eq!(packed.tag(), wire::TAG_SPARSE);
+        let iw = index_width(packed.elems()) as u64;
+        let nnz = packed.value_bits() / 32;
+        out.fill(0.0);
+        // Binary search the sorted index stream for the first survivor in
+        // range, then scatter values until we leave it.
+        let (mut lo, mut hi) = (0u64, nnz);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if (packed.read_bits_at(mid * iw, iw as u32) as usize) < range.start {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let vbase = nnz * iw;
+        for j in lo..nnz {
+            let idx = packed.read_bits_at(j * iw, iw as u32) as usize;
+            if idx >= range.end {
+                break;
+            }
+            out[idx - range.start] = f32::from_bits(packed.read_bits_at(vbase + j * 32, 32));
+        }
     }
 }
 
@@ -372,11 +541,18 @@ impl SyncStrategy for TopKStrategy {
 /// FP32 wire; [`SyncStrategy::wire_cost`] accounts the packed
 /// `bits`-per-element payload plus the bucket scales. Under the
 /// fp32-last-layer policy the protected layer passes through dense.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct QsgdStrategy {
     bits: u8,
     bucket: usize,
     seed: u64,
+    /// Per-element integer levels of the last encoded layer — the packed
+    /// wire ships these directly instead of re-deriving them from the
+    /// reconstructed f32 values (reused scratch, one byte per element).
+    pack_levels: Vec<u8>,
+    /// Per-bucket max-magnitude scales of the last encoded layer (the
+    /// packed wire's metadata side channel).
+    pack_scales: Vec<f32>,
 }
 
 impl QsgdStrategy {
@@ -386,7 +562,7 @@ impl QsgdStrategy {
             "qsgd bits must be in 2..=8 (sign + at least one magnitude bit)"
         );
         assert!(bucket >= 1, "qsgd bucket size must be positive");
-        QsgdStrategy { bits, bucket, seed }
+        QsgdStrategy { bits, bucket, seed, pack_levels: Vec::new(), pack_scales: Vec::new() }
     }
 
     /// Quantization levels per sign (`2^(bits-1) - 1`).
@@ -416,6 +592,10 @@ impl SyncStrategy for QsgdStrategy {
             return;
         }
         let s_levels = self.levels() as f32;
+        // Reset the packed-wire caches for this layer (levels default 0).
+        self.pack_scales.clear();
+        self.pack_levels.clear();
+        self.pack_levels.resize(src.len(), 0);
         for (b, (seg, oseg)) in
             src.chunks(self.bucket).zip(out.chunks_mut(self.bucket)).enumerate()
         {
@@ -428,6 +608,7 @@ impl SyncStrategy for QsgdStrategy {
                     max_abs = a;
                 }
             }
+            self.pack_scales.push(max_abs);
             if max_abs == 0.0 {
                 // Nothing representable: ship zeros, propagate divergence.
                 for (&x, o) in seg.iter().zip(oseg.iter_mut()) {
@@ -453,6 +634,7 @@ impl SyncStrategy for QsgdStrategy {
                 let frac = r - level;
                 let u = self.unit(ctx.step, ctx.worker as u64, ctx.layer as u64, (base + j) as u64);
                 let q = level + if u < frac { 1.0 } else { 0.0 };
+                self.pack_levels[base + j] = q as u8; // q ≤ 127 by bits ≤ 8
                 let v = q * unit_scale;
                 *o = if x < 0.0 { -v } else { v };
             }
@@ -463,7 +645,9 @@ impl SyncStrategy for QsgdStrategy {
         unscale_in_place(reduced, 0, ctx.world, ctx.average);
     }
     fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
-        if ctx.fp32_passthrough {
+        if ctx.fp32_passthrough || encoded.iter().any(|v| !v.is_finite()) {
+            // Divergent layers have no sign+level code; the packed wire
+            // ships them raw, and the accounting must match.
             return WireCost::dense(encoded.len(), FpFormat::FP32);
         }
         let n = encoded.len();
@@ -472,6 +656,75 @@ impl SyncStrategy for QsgdStrategy {
             value_bits: n as u64 * self.bits as u64,
             index_bits: 0,
             metadata_bytes: 4 * buckets,
+        }
+    }
+    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+        if ctx.fp32_passthrough {
+            out.pack_raw_f32(encoded);
+            return;
+        }
+        debug_assert_eq!(
+            self.pack_levels.len(),
+            encoded.len(),
+            "encode_packed must follow encode on the same layer"
+        );
+        // sign ‖ level, `bits` per element; per-bucket scales as metadata.
+        // Packed optimistically in one pass; a non-finite value (no
+        // sign+level code exists for divergence) aborts into the raw-f32
+        // escape — the common all-finite layer is never rescanned.
+        let bits = self.bits as u32;
+        out.reset(wire::TAG_QSGD, encoded.len());
+        for &m in &self.pack_scales {
+            out.push_meta_f32(m);
+        }
+        let levels = std::mem::take(&mut self.pack_levels);
+        let mut w = BitWriter::new(out.bytes_mut());
+        let mut diverged = false;
+        for (&v, &lvl) in encoded.iter().zip(&levels) {
+            if !v.is_finite() {
+                diverged = true;
+                break;
+            }
+            let sign = (v.is_sign_negative() as u32) << (bits - 1);
+            w.put(sign | lvl as u32, bits);
+        }
+        let vbits = w.finish();
+        self.pack_levels = levels;
+        if diverged {
+            // pack_raw_f32 resets the buffer (metadata included).
+            out.pack_raw_f32(encoded);
+            return;
+        }
+        out.set_bits(vbits, 0);
+    }
+    fn decode_packed(
+        &self,
+        packed: &PackedWire,
+        _ctx: &LayerCtx,
+        range: Range<usize>,
+        out: &mut [f32],
+    ) {
+        if packed.tag() == wire::TAG_RAW_F32 {
+            packed.unpack_raw_f32(range, out);
+            return;
+        }
+        debug_assert_eq!(packed.tag(), wire::TAG_QSGD);
+        let bits = self.bits as u32;
+        let s_levels = self.levels() as f32;
+        let lvl_mask = (1u32 << (bits - 1)) - 1;
+        let mut r = BitReader::at(packed.bytes(), range.start as u64 * bits as u64);
+        let mut bucket_idx = usize::MAX;
+        let mut unit_scale = 0.0f32;
+        for (k, o) in out.iter_mut().enumerate() {
+            let b = (range.start + k) / self.bucket;
+            if b != bucket_idx {
+                bucket_idx = b;
+                // the exact expression encode used → identical products
+                unit_scale = packed.meta_f32(b) / s_levels;
+            }
+            let code = r.read(bits);
+            let v = (code & lvl_mask) as f32 * unit_scale;
+            *o = if code >> (bits - 1) == 1 { -v } else { v };
         }
     }
 }
@@ -689,5 +942,137 @@ mod tests {
         let c = ctx(FpFormat::BF16, 0, 4);
         let cost = t.wire_cost(&[0.5, 0.0, -0.5, 0.5], &c);
         assert_eq!(cost, WireCost { value_bits: 8, index_bits: 0, metadata_bytes: 0 });
+        // divergent layers cost (and ship) dense FP32 — the raw escape
+        let cost = t.wire_cost(&[0.5, f32::NAN, -0.5, 0.5], &c);
+        assert_eq!(cost, WireCost::dense(4, FpFormat::FP32));
+    }
+
+    #[test]
+    fn ternary_packs_two_bit_symbols_exactly() {
+        let mut t = TernaryStrategy::new(1);
+        let c = ctx(FpFormat::BF16, -1, 4); // s = 0.5
+        let encoded = vec![0.5f32, 0.0, -0.5, 0.5, 0.0, -0.5, 0.5];
+        let mut pw = PackedWire::default();
+        t.encode_packed(&encoded, &c, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_TERNARY);
+        assert_eq!(pw.moved_cost(), t.wire_cost(&encoded, &c));
+        assert_eq!(pw.packed_len(), 2); // 14 bits → 2 bytes
+        let mut out = vec![9.0f32; 7];
+        t.decode_packed(&pw, &c, 0..7, &mut out);
+        assert_eq!(out, encoded);
+        // ranged decode across the byte boundary
+        let mut seg = vec![0.0f32; 3];
+        t.decode_packed(&pw, &c, 3..6, &mut seg);
+        assert_eq!(seg, &encoded[3..6]);
+        // non-finite layers escape to raw f32 and stay bit-exact
+        let diverged = vec![0.5f32, f32::INFINITY, f32::NAN];
+        t.encode_packed(&diverged, &c, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_RAW_F32);
+        assert_eq!(pw.moved_cost(), t.wire_cost(&diverged, &c));
+        let mut out = vec![0.0f32; 3];
+        t.decode_packed(&pw, &c, 0..3, &mut out);
+        assert_eq!(out[0], 0.5);
+        assert!(out[1].is_infinite() && out[2].is_nan());
+    }
+
+    #[test]
+    fn qsgd_packs_sign_level_codes_and_bucket_scales() {
+        let mut q = QsgdStrategy::new(4, 4, 7);
+        let c = ctx(FpFormat::FP32, 0, 2);
+        let src = vec![0.7f32, -0.35, 0.1, 0.0, 100.0, -25.0, 1.0, 12.5, -0.25];
+        let mut encoded = vec![0.0f32; src.len()];
+        q.encode(&src, &c, &mut encoded);
+        let mut pw = PackedWire::default();
+        q.encode_packed(&encoded, &c, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_QSGD);
+        // 9 elems × 4 bits + 3 bucket scales × 4 B
+        assert_eq!(
+            pw.moved_cost(),
+            WireCost { value_bits: 36, index_bits: 0, metadata_bytes: 12 }
+        );
+        assert_eq!(pw.moved_cost(), q.wire_cost(&encoded, &c));
+        let mut out = vec![f32::NAN; src.len()];
+        q.decode_packed(&pw, &c, 0..src.len(), &mut out);
+        for (i, (a, b)) in encoded.iter().zip(&out).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: {a:e} vs {b:e}");
+        }
+        // ranged decode starting mid-bucket
+        let mut seg = vec![0.0f32; 4];
+        q.decode_packed(&pw, &c, 3..7, &mut seg);
+        for (k, b) in seg.iter().enumerate() {
+            assert_eq!(encoded[3 + k].to_bits(), b.to_bits(), "offset {k}");
+        }
+    }
+
+    #[test]
+    fn topk_packs_sparse_pairs_with_exact_value_bits() {
+        let mut t = TopKStrategy::new(0.5);
+        let c = ctx(FpFormat::FP32, 0, 2);
+        let encoded = vec![0.0f32, -4.0, 0.0, 2.0, -0.5, 0.0];
+        let mut pw = PackedWire::default();
+        t.encode_packed(&encoded, &c, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_SPARSE);
+        // 3 survivors × (32 value + 3 index) bits — exactly wire_cost
+        assert_eq!(
+            pw.moved_cost(),
+            WireCost { value_bits: 96, index_bits: 9, metadata_bytes: 0 }
+        );
+        assert_eq!(pw.moved_cost(), t.wire_cost(&encoded, &c));
+        assert_eq!(pw.packed_len(), (96 + 9u64).div_ceil(8));
+        let mut out = vec![f32::NAN; 6];
+        t.decode_packed(&pw, &c, 0..6, &mut out);
+        assert_eq!(out, encoded);
+        // sub-ranges exercise the binary search on both sides
+        let mut seg = vec![f32::NAN; 2];
+        t.decode_packed(&pw, &c, 4..6, &mut seg);
+        assert_eq!(seg, &encoded[4..6]);
+        let mut seg = vec![f32::NAN; 2];
+        t.decode_packed(&pw, &c, 0..2, &mut seg);
+        assert_eq!(seg, &encoded[0..2]);
+    }
+
+    #[test]
+    fn topk_ships_negative_zero_and_nan_survivors_bit_exactly() {
+        // An all-±0 layer keeps its -0.0 (threshold 0), and NaN always
+        // survives: the sparse wire must reproduce the exact bits.
+        let t = TopKStrategy::new(0.5);
+        let c = ctx(FpFormat::FP32, 0, 2);
+        let encoded = vec![0.0f32, -0.0, f32::NAN, 0.0];
+        let cost = t.wire_cost(&encoded, &c);
+        assert_eq!(cost.value_bits, 64, "-0.0 and NaN are survivors");
+        let mut t2 = TopKStrategy::new(0.5);
+        let mut pw = PackedWire::default();
+        t2.encode_packed(&encoded, &c, &mut pw);
+        assert_eq!(pw.moved_cost(), cost);
+        let mut out = vec![1.0f32; 4];
+        t2.decode_packed(&pw, &c, 0..4, &mut out);
+        assert_eq!(out[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[1].to_bits(), (-0.0f32).to_bits());
+        assert!(out[2].is_nan());
+        assert_eq!(out[3].to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn cast_strategies_pack_format_bit_codes() {
+        let mut a = ApsStrategy::new(FpFormat::E5M2);
+        let c = ctx(FpFormat::E5M2, 3, 4);
+        let src = vec![0.111f32, -2.5e-4, 7.0, 0.0, -0.0, 3.3e4];
+        let mut encoded = vec![0.0f32; src.len()];
+        a.encode(&src, &c, &mut encoded);
+        let mut pw = PackedWire::default();
+        a.encode_packed(&encoded, &c, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_FMT_BITS);
+        assert_eq!(pw.moved_cost(), WireCost::dense(6, FpFormat::E5M2));
+        let mut out = vec![f32::NAN; 6];
+        a.decode_packed(&pw, &c, 0..6, &mut out);
+        for (i, (x, y)) in encoded.iter().zip(&out).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}");
+        }
+        // FP32-wire strategies (and passthrough layers) ship raw lanes
+        let mut f = Fp32Strategy;
+        let cf = ctx(FpFormat::FP32, 0, 4);
+        f.encode_packed(&src, &cf, &mut pw);
+        assert_eq!(pw.tag(), wire::TAG_RAW_F32);
+        assert_eq!(pw.moved_cost(), WireCost::dense(6, FpFormat::FP32));
     }
 }

@@ -1,0 +1,513 @@
+//! The packed wire: bit-exact byte buffers for encoded gradients.
+//!
+//! The simulated collectives historically moved every "low-precision"
+//! wire value as a full 32-bit `f32` lane, so an 8-bit (or 2-bit) codec
+//! paid FP32 memory traffic and the strategy benches could not show the
+//! bandwidth win the codecs exist for. This module is the missing layer:
+//!
+//! * [`BitWriter`] / [`BitReader`] — branch-light word-at-a-time kernels
+//!   packing/unpacking values of any width 1..=32 into a byte stream
+//!   (little-endian bit order: the first value occupies the lowest bits
+//!   of the first byte).
+//! * [`PackedWire`] — one worker's encoded layer as the bytes a real
+//!   deployment would ship: a representation tag, the bit-packed
+//!   value/index payload, and side-channel metadata (per-bucket scales).
+//!   Its [`PackedWire::moved_cost`] mirrors [`super::WireCost`]
+//!   *exactly* (bit-level accounting before byte rounding), which is what
+//!   lets the benches assert measured-bytes-moved ==
+//!   `SyncReport::honest_bytes`.
+//! * [`PackScratch`] — the session-owned unpack scratch the collectives
+//!   borrow during a packed reduction, so the zero-steady-state
+//!   allocation invariant extends to the packed path.
+//! * [`WireMode`] — the session knob (`packed` is the default;
+//!   `simulated` keeps the legacy dense-f32 lanes).
+//!
+//! Packing is a pure *transcode* of the f32 wire values a strategy's
+//! `encode` produced: for every shipped codec,
+//! `decode_packed(encode_packed(x)) == x` bit-for-bit, so the packed
+//! reduction (same fold order, same operand precision) is bit-identical
+//! to the simulated-f32 path — pinned by `rust/tests/packed_wire.rs`.
+//!
+//! Escape hatch: representations that cannot carry a value in-band
+//! (non-finite gradients through a 2-bit ternary wire, NaN through a
+//! zero-mantissa float format) fall back to [`PackedWire::pack_raw_f32`]
+//! for that layer, and the codec's `wire_cost` reports the same dense
+//! FP32 figure, keeping `moved == wire_cost` exact. (The one documented
+//! exception: NaN through a `man_bits == 0` cast format escapes to raw
+//! f32 while `wire_cost` stays dense — such formats cannot represent NaN
+//! at all, and no shipped codec/format combination hits it.)
+
+use super::{LayerCtx, WireCost};
+use crate::cpd::cast::{decode_bits, encode_bits_slice_into};
+use crate::cpd::{FpFormat, Rounding};
+use core::ops::Range;
+
+/// How a [`crate::sync::SyncSession`] materializes wire traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Encoded tensors are transcoded into bit-packed [`PackedWire`]
+    /// buffers and the reduction consumes them in cache-blocked chunks —
+    /// simulated traffic moves `WireCost` bits, not f32 lanes.
+    #[default]
+    Packed,
+    /// Legacy dense accounting: one `f32` lane per wire value.
+    Simulated,
+}
+
+/// Representation tags for the built-in packed layouts. Third-party
+/// codecs that override `SyncStrategy::{encode_packed, decode_packed}`
+/// may use any tag ≥ [`TAG_CUSTOM`].
+pub const TAG_RAW_F32: u8 = 0;
+/// `FpFormat` bit-codes, `fmt.total_bits()` per element.
+pub const TAG_FMT_BITS: u8 = 1;
+/// 2-bit ternary symbols (0, +s, −s).
+pub const TAG_TERNARY: u8 = 2;
+/// QSGD sign+level codes, `bits` per element, per-bucket f32 scales in
+/// the metadata channel.
+pub const TAG_QSGD: u8 = 3;
+/// Sparse `(index, value)` pairs: all indices (ascending, fixed width),
+/// then all values (32 bits each).
+pub const TAG_SPARSE: u8 = 4;
+/// First tag available to out-of-tree representations.
+pub const TAG_CUSTOM: u8 = 16;
+
+/// Position bits needed to address one element of an `n`-element layer
+/// (`⌈log2 n⌉`, at least 1) — shared by top-k's `wire_cost` and its
+/// packed layout so the two never drift apart.
+#[inline]
+pub fn index_width(n: usize) -> u32 {
+    (usize::BITS - n.saturating_sub(1).leading_zeros()).max(1)
+}
+
+/// Append-only bit packer over a byte buffer (LSB-first within bytes).
+pub struct BitWriter<'a> {
+    buf: &'a mut Vec<u8>,
+    acc: u64,
+    pending: u32,
+    bits: u64,
+}
+
+impl<'a> BitWriter<'a> {
+    /// Start writing at the current end of `buf`.
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        BitWriter { buf, acc: 0, pending: 0, bits: 0 }
+    }
+
+    /// Append the low `width` bits of `value` (width in 1..=32).
+    #[inline]
+    pub fn put(&mut self, value: u32, width: u32) {
+        debug_assert!((1..=32).contains(&width));
+        debug_assert!(width == 32 || value >> width == 0, "value wider than {width} bits");
+        self.acc |= (value as u64) << self.pending;
+        self.pending += width;
+        self.bits += width as u64;
+        while self.pending >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.pending -= 8;
+        }
+    }
+
+    /// Bits appended so far (whether or not flushed to the buffer).
+    pub fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    /// Flush the final partial byte and return the total bits written.
+    pub fn finish(self) -> u64 {
+        if self.pending > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.bits
+    }
+}
+
+/// Sequential bit reader over a byte slice (the mirror of [`BitWriter`]).
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u64,
+    avail: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from the first bit of `bytes`.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0, acc: 0, avail: 0 }
+    }
+
+    /// Read starting at an arbitrary bit offset.
+    pub fn at(bytes: &'a [u8], bit_offset: u64) -> Self {
+        let mut r = BitReader {
+            bytes,
+            pos: (bit_offset / 8) as usize,
+            acc: 0,
+            avail: 0,
+        };
+        let rem = (bit_offset % 8) as u32;
+        if rem > 0 && r.pos < bytes.len() {
+            r.acc = (bytes[r.pos] as u64) >> rem;
+            r.avail = 8 - rem;
+            r.pos += 1;
+        }
+        r
+    }
+
+    /// Read the next `width` bits (width in 1..=32). Reading past the end
+    /// of the buffer yields zero bits.
+    #[inline]
+    pub fn read(&mut self, width: u32) -> u32 {
+        debug_assert!((1..=32).contains(&width));
+        while self.avail < width && self.pos < self.bytes.len() {
+            self.acc |= (self.bytes[self.pos] as u64) << self.avail;
+            self.pos += 1;
+            self.avail += 8;
+        }
+        let mask = (1u64 << width) - 1;
+        let v = (self.acc & mask) as u32;
+        self.acc >>= width;
+        self.avail = self.avail.saturating_sub(width);
+        v
+    }
+}
+
+/// One worker's encoded layer as packed bytes — see the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct PackedWire {
+    tag: u8,
+    elems: usize,
+    bytes: Vec<u8>,
+    meta: Vec<u8>,
+    value_bits: u64,
+    index_bits: u64,
+    /// Scratch for the bulk format-bit transcode (reused across layers).
+    codes: Vec<u32>,
+}
+
+impl PackedWire {
+    /// Reset for a fresh layer under representation `tag`, keeping all
+    /// buffer capacity (no steady-state allocation).
+    pub fn reset(&mut self, tag: u8, elems: usize) {
+        self.tag = tag;
+        self.elems = elems;
+        self.bytes.clear();
+        self.meta.clear();
+        self.value_bits = 0;
+        self.index_bits = 0;
+    }
+
+    /// Representation tag (`TAG_*`).
+    pub fn tag(&self) -> u8 {
+        self.tag
+    }
+    /// Number of encoded elements this buffer represents.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+    /// The bit-packed payload bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+    /// Mutable payload access for strategy-side [`BitWriter`]s.
+    pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.bytes
+    }
+    /// Payload value bits (accounting, pre byte-rounding).
+    pub fn value_bits(&self) -> u64 {
+        self.value_bits
+    }
+    /// Sparse index bits (accounting, pre byte-rounding).
+    pub fn index_bits(&self) -> u64 {
+        self.index_bits
+    }
+    /// Record the payload split after writing through [`Self::bytes_mut`].
+    pub fn set_bits(&mut self, value_bits: u64, index_bits: u64) {
+        debug_assert!(
+            (value_bits + index_bits).div_ceil(8) <= self.bytes.len() as u64,
+            "recorded bits exceed the packed payload"
+        );
+        self.value_bits = value_bits;
+        self.index_bits = index_bits;
+    }
+
+    /// Total payload bytes a deployment would ship for this layer
+    /// (value+index bits rounded up, plus metadata).
+    pub fn packed_len(&self) -> u64 {
+        (self.value_bits + self.index_bits).div_ceil(8) + self.meta.len() as u64
+    }
+
+    /// The traffic this buffer actually represents, in [`WireCost`]
+    /// terms — the packed path's measured counterpart of
+    /// [`crate::sync::SyncStrategy::wire_cost`].
+    pub fn moved_cost(&self) -> WireCost {
+        WireCost {
+            value_bits: self.value_bits,
+            index_bits: self.index_bits,
+            metadata_bytes: self.meta.len() as u64,
+        }
+    }
+
+    /// Append one f32 to the metadata side channel (LE bytes).
+    pub fn push_meta_f32(&mut self, v: f32) {
+        self.meta.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Read metadata f32 `i` (panics when out of range).
+    pub fn meta_f32(&self, i: usize) -> f32 {
+        let b = i * 4;
+        f32::from_le_bytes(self.meta[b..b + 4].try_into().unwrap())
+    }
+
+    /// Random-access read of `width` bits at `bit_offset` in the payload
+    /// (used by sparse binary search; reads past the end yield zeros).
+    pub fn read_bits_at(&self, bit_offset: u64, width: u32) -> u32 {
+        debug_assert!((1..=32).contains(&width));
+        let byte = (bit_offset / 8) as usize;
+        let sh = (bit_offset % 8) as u32;
+        let mut acc = 0u64;
+        for (i, &b) in self.bytes.iter().skip(byte).take(8).enumerate() {
+            acc |= (b as u64) << (8 * i as u32);
+        }
+        ((acc >> sh) & ((1u64 << width) - 1)) as u32
+    }
+
+    // ---- built-in representations -----------------------------------
+
+    /// The universal fallback: raw little-endian f32 lanes. Exact for
+    /// every value including NaN payloads; costs dense FP32.
+    pub fn pack_raw_f32(&mut self, values: &[f32]) {
+        self.reset(TAG_RAW_F32, values.len());
+        for v in values {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.value_bits = values.len() as u64 * 32;
+    }
+
+    /// Unpack `range` of a [`Self::pack_raw_f32`] buffer into `out`.
+    pub fn unpack_raw_f32(&self, range: Range<usize>, out: &mut [f32]) {
+        assert_eq!(
+            self.tag, TAG_RAW_F32,
+            "default decode_packed only understands raw-f32 payloads; \
+             override SyncStrategy::decode_packed for custom representations"
+        );
+        debug_assert_eq!(out.len(), range.len());
+        for (k, o) in out.iter_mut().enumerate() {
+            let b = (range.start + k) * 4;
+            *o = f32::from_le_bytes(self.bytes[b..b + 4].try_into().unwrap());
+        }
+    }
+
+    /// Pack already-quantized wire values as `fmt` bit-codes
+    /// (`fmt.total_bits()` per element) via the bulk
+    /// [`crate::cpd::cast::encode_bits_slice_into`] kernel. Re-quantizing
+    /// a representable value is the identity, so this is a pure
+    /// transcode for any `mode`.
+    pub fn pack_format_bits(&mut self, encoded: &[f32], fmt: FpFormat, mode: Rounding) {
+        self.reset(TAG_FMT_BITS, encoded.len());
+        let mut codes = std::mem::take(&mut self.codes);
+        codes.clear();
+        codes.resize(encoded.len(), 0);
+        encode_bits_slice_into(encoded, fmt, mode, &mut codes);
+        let width = fmt.total_bits();
+        let mut w = BitWriter::new(&mut self.bytes);
+        for &c in &codes {
+            w.put(c, width);
+        }
+        self.value_bits = w.finish();
+        self.codes = codes;
+    }
+
+    /// Unpack `range` of a [`Self::pack_format_bits`] buffer.
+    pub fn unpack_format_bits(&self, fmt: FpFormat, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(self.tag, TAG_FMT_BITS);
+        debug_assert_eq!(out.len(), range.len());
+        let width = fmt.total_bits();
+        let mut r = BitReader::at(&self.bytes, range.start as u64 * width as u64);
+        for o in out.iter_mut() {
+            *o = decode_bits(r.read(width), fmt);
+        }
+    }
+}
+
+/// Shared packed encode for the cast codecs (FP32 / naive / loss-scaling
+/// / APS): format bit-codes at the layer's wire width, with the raw-f32
+/// escape for the identity format and for NaN through zero-mantissa
+/// formats (which have no NaN code).
+pub(crate) fn pack_cast_layer(encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+    let fmt = ctx.fmt;
+    if fmt.is_fp32() || (fmt.man_bits == 0 && encoded.iter().any(|v| v.is_nan())) {
+        out.pack_raw_f32(encoded);
+    } else {
+        out.pack_format_bits(encoded, fmt, ctx.rounding);
+    }
+}
+
+/// Shared packed decode for the cast codecs.
+pub(crate) fn unpack_cast_range(
+    packed: &PackedWire,
+    ctx: &LayerCtx,
+    range: Range<usize>,
+    out: &mut [f32],
+) {
+    match packed.tag() {
+        TAG_RAW_F32 => packed.unpack_raw_f32(range, out),
+        _ => packed.unpack_format_bits(ctx.fmt, range, out),
+    }
+}
+
+/// Session-owned scratch the collectives borrow during a packed
+/// reduction: one cache-block unpack buffer for the built-in chunked
+/// folds, plus dense per-worker buffers for the compatibility default of
+/// [`crate::collectives::Collective::all_reduce_packed_sum_into`].
+#[derive(Clone, Debug, Default)]
+pub struct PackScratch {
+    /// One unpack block (`collectives::FOLD_BLOCK` elements once warm).
+    pub chunk: Vec<f32>,
+    /// Dense per-worker staging for collectives without a packed fold.
+    pub dense: Vec<Vec<f32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn bitwriter_bitreader_roundtrip_all_widths() {
+        for width in 1..=32u32 {
+            let mut rng = Rng::new(100 + width as u64);
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let vals: Vec<u32> = (0..97).map(|_| rng.next_u64() as u32 & mask).collect();
+            let mut buf = Vec::new();
+            let mut w = BitWriter::new(&mut buf);
+            for &v in &vals {
+                w.put(v, width);
+            }
+            let bits = w.finish();
+            assert_eq!(bits, 97 * width as u64);
+            assert_eq!(buf.len() as u64, bits.div_ceil(8));
+            let mut r = BitReader::new(&buf);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(r.read(width), v, "width {width} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitreader_at_arbitrary_offsets() {
+        // Mixed widths; then re-read each value via BitReader::at and
+        // read_bits_at at its recorded offset (word-boundary crossings
+        // included by construction).
+        let mut rng = Rng::new(7);
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        let mut entries = Vec::new(); // (offset, width, value)
+        let mut off = 0u64;
+        for _ in 0..500 {
+            let width = 1 + rng.below(32) as u32;
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let v = rng.next_u64() as u32 & mask;
+            entries.push((off, width, v));
+            w.put(v, width);
+            off += width as u64;
+        }
+        let total = w.finish();
+        assert_eq!(total, off);
+        let mut pw = PackedWire::default();
+        pw.reset(TAG_CUSTOM, 500);
+        pw.bytes_mut().extend_from_slice(&buf);
+        for &(off, width, v) in &entries {
+            let mut r = BitReader::at(&buf, off);
+            assert_eq!(r.read(width), v, "seq at {off}");
+            assert_eq!(pw.read_bits_at(off, width), v, "random at {off}");
+        }
+    }
+
+    #[test]
+    fn raw_f32_roundtrip_preserves_all_bits() {
+        let vals = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::NAN,
+            f32::from_bits(0x7fa0_0001), // non-canonical NaN payload
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(1), // min subnormal
+            f32::MAX,
+        ];
+        let mut pw = PackedWire::default();
+        pw.pack_raw_f32(&vals);
+        assert_eq!(pw.tag(), TAG_RAW_F32);
+        assert_eq!(pw.value_bits(), vals.len() as u64 * 32);
+        assert_eq!(pw.moved_cost(), WireCost::dense(vals.len(), FpFormat::FP32));
+        let mut out = vec![0.0f32; vals.len()];
+        pw.unpack_raw_f32(0..vals.len(), &mut out);
+        for (a, b) in vals.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // ranged unpack
+        let mut mid = vec![0.0f32; 3];
+        pw.unpack_raw_f32(2..5, &mut mid);
+        assert_eq!(mid[0], 1.5);
+        assert!(mid[1].is_nan());
+        assert_eq!(mid[2].to_bits(), 0x7fa0_0001);
+    }
+
+    #[test]
+    fn format_bits_roundtrip_on_quantized_values() {
+        use crate::cpd::{quantize, Rounding::NearestEven};
+        for fmt in [FpFormat::E5M2, FpFormat::E4M3, FpFormat::BF16, FpFormat::new(6, 9)] {
+            let mut rng = Rng::new(fmt.total_bits() as u64);
+            let raw: Vec<f32> = (0..300)
+                .map(|_| rng.normal() * (rng.range(-20.0, 20.0)).exp2())
+                .collect();
+            let q: Vec<f32> = raw.iter().map(|&x| quantize(x, fmt, NearestEven)).collect();
+            let mut pw = PackedWire::default();
+            let ctx_rounding = NearestEven;
+            pw.pack_format_bits(&q, fmt, ctx_rounding);
+            assert_eq!(pw.value_bits(), 300 * fmt.total_bits() as u64);
+            assert_eq!(pw.moved_cost(), WireCost::dense(300, fmt));
+            let mut out = vec![0.0f32; 300];
+            pw.unpack_format_bits(fmt, 0..300, &mut out);
+            for (i, (a, b)) in q.iter().zip(&out).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt} elem {i}: {a:e} vs {b:e}");
+            }
+            // ranged unpack across a word boundary
+            let mut seg = vec![0.0f32; 7];
+            pw.unpack_format_bits(fmt, 13..20, &mut seg);
+            for (k, o) in seg.iter().enumerate() {
+                assert_eq!(o.to_bits(), q[13 + k].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn index_width_matches_ceil_log2() {
+        assert_eq!(index_width(1), 1);
+        assert_eq!(index_width(2), 1);
+        assert_eq!(index_width(3), 2);
+        assert_eq!(index_width(6), 3);
+        assert_eq!(index_width(256), 8);
+        assert_eq!(index_width(257), 9);
+        assert_eq!(index_width(65536), 16);
+    }
+
+    #[test]
+    fn packed_len_rounds_bits_to_bytes_plus_meta() {
+        let mut pw = PackedWire::default();
+        pw.reset(TAG_QSGD, 5);
+        let mut w = BitWriter::new(pw.bytes_mut());
+        for i in 0..5 {
+            w.put(i, 3);
+        }
+        let bits = w.finish();
+        pw.set_bits(bits, 0);
+        pw.push_meta_f32(0.5);
+        assert_eq!(pw.packed_len(), 2 + 4); // 15 bits → 2 bytes, + 4 meta
+        assert_eq!(
+            pw.moved_cost(),
+            WireCost { value_bits: 15, index_bits: 0, metadata_bytes: 4 }
+        );
+        assert_eq!(pw.meta_f32(0), 0.5);
+    }
+}

@@ -27,7 +27,9 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use aps_cpd::cpd::{FpFormat, Rounding};
 use aps_cpd::data::Rng;
-use aps_cpd::sync::{LayerCtx, StrategySpec, SyncSession, SyncSessionBuilder, SyncStrategy};
+use aps_cpd::sync::{
+    LayerCtx, StrategySpec, SyncSession, SyncSessionBuilder, SyncStrategy, WireMode,
+};
 use aps_cpd::util::ptest::generators;
 
 /// One conformance subject: a label, a fresh-strategy factory, and
@@ -95,8 +97,8 @@ fn codecs() -> Vec<Codec> {
     ]
 }
 
-fn session(codec: &Codec, world: usize) -> SyncSession {
-    SyncSessionBuilder::new(world).spec((codec.spec)()).build()
+fn session(codec: &Codec, world: usize, mode: WireMode) -> SyncSession {
+    SyncSessionBuilder::new(world).spec((codec.spec)()).with_wire(mode).build()
 }
 
 /// Deterministic mixed-scale per-worker gradients.
@@ -162,7 +164,7 @@ fn check_encode_and_wire_cost(codec: &Codec) {
 /// Contract 3: a world-1 no-averaging round trip through the full
 /// session keeps every element bounded by 2·max|g| — or reports the
 /// overflow that produced a non-finite value.
-fn check_roundtrip_bound(codec: &Codec) {
+fn check_roundtrip_bound(codec: &Codec, mode: WireMode) {
     let mut rng = Rng::new(0xB0DE ^ codec.label.len() as u64);
     for case in 0..80 {
         let xs = generators::nasty_vec(&mut rng, 64);
@@ -170,6 +172,7 @@ fn check_roundtrip_bound(codec: &Codec) {
         let mut s = SyncSessionBuilder::new(1)
             .spec((codec.spec)())
             .with_average(false)
+            .with_wire(mode)
             .build();
         let grads = vec![vec![xs.clone()]];
         let (out, report) = s.step(&grads);
@@ -200,10 +203,10 @@ fn check_roundtrip_bound(codec: &Codec) {
 
 /// Contract 4: identically-built sessions replay bit-identically across
 /// multiple steps — outputs and reports.
-fn check_determinism(codec: &Codec) {
+fn check_determinism(codec: &Codec, mode: WireMode) {
     let world = 4;
-    let mut a = session(codec, world);
-    let mut b = session(codec, world);
+    let mut a = session(codec, world, mode);
+    let mut b = session(codec, world, mode);
     for step in 0..3 {
         let grads = scaled_grads(world, step, &[(33, 1.0), (8, 1e-5)]);
         let (oa, ra) = a.step(&grads);
@@ -225,17 +228,17 @@ fn check_determinism(codec: &Codec) {
 }
 
 /// Contract 5: ragged inputs panic before any codec work happens.
-fn check_ragged_panics(codec: &Codec) {
+fn check_ragged_panics(codec: &Codec, mode: WireMode) {
     let ragged_lengths = vec![vec![vec![1.0f32; 4]], vec![vec![1.0f32; 5]]];
     let r = catch_unwind(AssertUnwindSafe(|| {
-        let mut s = session(codec, 2);
+        let mut s = session(codec, 2, mode);
         let _ = s.step(&ragged_lengths);
     }));
     assert!(r.is_err(), "{}: ragged layer lengths must panic", codec.label);
 
     let ragged_counts = vec![vec![vec![1.0f32; 4]], vec![]];
     let r = catch_unwind(AssertUnwindSafe(|| {
-        let mut s = session(codec, 2);
+        let mut s = session(codec, 2, mode);
         let _ = s.step(&ragged_counts);
     }));
     assert!(r.is_err(), "{}: ragged layer counts must panic", codec.label);
@@ -244,9 +247,9 @@ fn check_ragged_panics(codec: &Codec) {
 /// Memoryless codecs only: a zero-gradient step right after a dense step
 /// must produce an all-zero reduction (stale wire buffers overwritten,
 /// no hidden state).
-fn check_zero_step_after_dense(codec: &Codec) {
+fn check_zero_step_after_dense(codec: &Codec, mode: WireMode) {
     let world = 2;
-    let mut s = session(codec, world);
+    let mut s = session(codec, world, mode);
     let dense = scaled_grads(world, 1, &[(24, 1.0)]);
     let _ = s.step(&dense);
     let zeros = vec![vec![vec![0.0f32; 24]]; world];
@@ -258,21 +261,29 @@ fn check_zero_step_after_dense(codec: &Codec) {
     );
 }
 
-/// The whole contract for one codec (the ragged-input probe runs in its
-/// own test so the intentional panics can be hook-silenced in one place).
-fn assert_codec_contract(codec: &Codec) {
-    check_encode_and_wire_cost(codec);
-    check_roundtrip_bound(codec);
-    check_determinism(codec);
+/// The session-level contract for one codec under one wire mode (the
+/// ragged-input probe runs in its own test so the intentional panics can
+/// be hook-silenced in one place; the direct-encode checks are
+/// mode-independent and run once per codec in the test below).
+fn assert_codec_contract(codec: &Codec, mode: WireMode) {
+    check_roundtrip_bound(codec, mode);
+    check_determinism(codec, mode);
     if !codec.has_memory {
-        check_zero_step_after_dense(codec);
+        check_zero_step_after_dense(codec, mode);
     }
 }
 
 #[test]
 fn every_strategy_satisfies_the_codec_contract() {
+    // The packed leg: the session contract holds on the default packed
+    // wire AND on the legacy simulated wire (bit-identity between the
+    // two is pinned separately by rust/tests/packed_wire.rs); the
+    // direct-encode wire-cost check bypasses the session, so once is
+    // enough.
     for codec in &codecs() {
-        assert_codec_contract(codec);
+        check_encode_and_wire_cost(codec);
+        assert_codec_contract(codec, WireMode::Packed);
+        assert_codec_contract(codec, WireMode::Simulated);
     }
 }
 
@@ -283,7 +294,8 @@ fn ragged_inputs_panic_for_every_strategy() {
     // no global panic-hook games (which would race parallel tests) are
     // needed.
     for codec in &codecs() {
-        check_ragged_panics(codec);
+        check_ragged_panics(codec, WireMode::Packed);
+        check_ragged_panics(codec, WireMode::Simulated);
     }
 }
 

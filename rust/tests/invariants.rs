@@ -1,11 +1,7 @@
 //! Property-based invariants (util::ptest) over the numeric substrate and
 //! the coordinator-state layer — the repository's proptest suite.
 
-// The deprecated `aps::synchronize` shim is exercised deliberately: it
-// drives the new strategy/session path through the legacy entry point.
-#![allow(deprecated)]
-
-use aps_cpd::aps::{self, SyncMethod, SyncOptions};
+use aps_cpd::aps::{self, SyncMethod, SyncOptions, SyncReport};
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{
     avg_roundoff_error, quantize, quantize_shifted, FpFormat, Rounding,
@@ -14,6 +10,19 @@ use aps_cpd::data::Rng;
 use aps_cpd::util::ptest::{check, check_msg, generators};
 
 const RNE: Rounding = Rounding::NearestEven;
+
+/// One-shot sync through a throwaway session (the removed
+/// `aps::synchronize` shim's behaviour, inlined).
+fn synchronize(
+    cluster: &SimCluster,
+    grads: &[Vec<Vec<f32>>],
+    opts: &SyncOptions,
+) -> (Vec<Vec<f32>>, SyncReport) {
+    let mut session =
+        aps_cpd::sync::SyncSessionBuilder::from_sync_options(cluster.world_size, opts).build();
+    let (reduced, report) = session.step(grads);
+    (reduced.to_vec(), report.clone())
+}
 
 #[test]
 fn prop_cast_idempotent() {
@@ -190,7 +199,7 @@ fn prop_aps_never_overflows() {
         |(grads, fmt)| {
             let cluster = SimCluster::new(grads.len());
             let opts = SyncOptions::new(SyncMethod::Aps { fmt: *fmt });
-            let (out, report) = aps::synchronize(&cluster, grads, &opts);
+            let (out, report) = synchronize(&cluster, grads, &opts);
             if report.any_overflow() {
                 return Err("overflow on the wire".into());
             }
@@ -233,12 +242,12 @@ fn prop_aps_rescues_underflowing_gradients() {
             let cluster = SimCluster::new(grads.len());
             let fmt = FpFormat::E5M2;
             let exact = aps::reduce_exact(grads, true);
-            let (aps_out, _) = aps::synchronize(
+            let (aps_out, _) = synchronize(
                 &cluster,
                 grads,
                 &SyncOptions::new(SyncMethod::Aps { fmt }),
             );
-            let (naive_out, _) = aps::synchronize(
+            let (naive_out, _) = synchronize(
                 &cluster,
                 grads,
                 &SyncOptions::new(SyncMethod::Naive { fmt }),

@@ -1,0 +1,275 @@
+//! The packed-wire suite: the bit-packed path must be a *perfect*
+//! transcode of the simulated-f32 path.
+//!
+//! * **bit-identity** — for every conformance strategy (the same 11 the
+//!   codec contract covers), a session on the packed wire produces
+//!   bit-identical decoded gradients and `SyncReport`s to a session on
+//!   the simulated wire, on hostile `nasty_f32` inputs, across worlds,
+//!   topologies and multiple steps;
+//! * **measured == claimed** — the packed buffers' `moved_cost` equals
+//!   the codec's `wire_cost` field-for-field, and `packed_len` never
+//!   exceeds `WireCost::total_bytes` (the honest figure rounded up to
+//!   whole bytes) — including the raw-f32 escapes for non-finite layers;
+//! * **BitWriter/BitReader** — round-trips at every width 1..=32 across
+//!   word boundaries through the public API.
+
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::{FpFormat, Rounding};
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{
+    BitReader, BitWriter, LayerCtx, PackedWire, StrategySpec, SyncSessionBuilder, SyncStrategy,
+    WireMode,
+};
+use aps_cpd::util::ptest::generators;
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+/// The same 11-codec family the conformance contract pins.
+fn specs() -> Vec<(&'static str, StrategySpec)> {
+    vec![
+        ("fp32", StrategySpec::Fp32),
+        ("naive/e5m2", StrategySpec::Naive { fmt: FpFormat::E5M2 }),
+        (
+            "loss_scaling/e5m2",
+            StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        ),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ternary", StrategySpec::Ternary { seed: 9 }),
+        ("topk@0.25", StrategySpec::TopK { frac: 0.25 }),
+        ("qsgd b4/32", StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 }),
+        ("ef:ternary", ef(StrategySpec::Ternary { seed: 9 })),
+        ("ef:topk", ef(StrategySpec::TopK { frac: 0.25 })),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 })),
+    ]
+}
+
+/// Hostile per-worker gradients: every worker/layer filled from the
+/// shared `nasty_f32` stream (subnormals, huge magnitudes, ±0, exact
+/// powers of two), equal shapes across workers.
+fn nasty_grads(rng: &mut Rng, world: usize, layers: &[usize]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|_| {
+            layers
+                .iter()
+                .map(|&n| (0..n).map(|_| generators::nasty_f32(rng)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn packed_path_is_bit_identical_to_simulated_for_every_strategy() {
+    let layers = [33usize, 64, 9];
+    for (label, spec) in &specs() {
+        for (world, topo) in [
+            (1usize, Topology::Ring),
+            (4, Topology::Ring),
+            (8, Topology::Ring),
+            (8, Topology::Hierarchical { group_size: 4 }),
+        ] {
+            let mut rng = Rng::new(0xAB5EED ^ world as u64 ^ label.len() as u64);
+            let mut packed = SyncSessionBuilder::new(world)
+                .spec(spec.clone())
+                .with_topology(topo)
+                .build();
+            let mut sim = SyncSessionBuilder::new(world)
+                .spec(spec.clone())
+                .with_topology(topo)
+                .with_wire(WireMode::Simulated)
+                .build();
+            for step in 0..3 {
+                let grads = nasty_grads(&mut rng, world, &layers);
+                let (po, pr) = packed.step(&grads);
+                let po = po.to_vec();
+                let pr = pr.clone();
+                let (so, sr) = sim.step(&grads);
+                for (l, (a, b)) in po.iter().zip(so.iter()).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                             packed {x:e} vs simulated {y:e}"
+                        );
+                    }
+                }
+                assert_eq!(&pr, sr, "{label}/{topo:?} w{world} step {step}: reports diverged");
+                // And the packed path's measured traffic equals the
+                // honest accounting (nasty_f32 draws are all finite, so
+                // no escape-representation slack applies).
+                assert_eq!(
+                    packed.wire_moved(),
+                    Some(pr.wire),
+                    "{label}/{topo:?} w{world} step {step}: moved != claimed"
+                );
+            }
+        }
+    }
+}
+
+fn encode_ctx(fmt: FpFormat, world: usize) -> LayerCtx {
+    LayerCtx {
+        layer: 0,
+        num_layers: 1,
+        worker: 0,
+        world,
+        factor_exp: 0,
+        fmt,
+        fp32_passthrough: false,
+        rounding: Rounding::NearestEven,
+        average: true,
+        step: 0,
+    }
+}
+
+/// Direct encode → pack → unpack for one strategy on one input: packed
+/// buffers must reproduce the f32 wire values bit-for-bit (full range and
+/// sub-ranges), match `wire_cost` exactly, and never exceed its byte
+/// figure.
+fn check_transcode(label: &str, spec: &StrategySpec, xs: &[f32]) {
+    let mut strategy = spec.build();
+    let ctx = encode_ctx(strategy.wire_format(), 2);
+    let n = xs.len();
+    let mut encoded = vec![f32::NAN; n];
+    strategy.encode(xs, &ctx, &mut encoded);
+    let cost = strategy.wire_cost(&encoded, &ctx);
+    let mut pw = PackedWire::default();
+    strategy.encode_packed(&encoded, &ctx, &mut pw);
+
+    assert_eq!(pw.moved_cost(), cost, "{label}: packed buffer diverges from wire_cost");
+    assert!(
+        pw.packed_len() <= cost.total_bytes(),
+        "{label}: packed_len {} exceeds WireCost bytes {}",
+        pw.packed_len(),
+        cost.total_bytes()
+    );
+
+    let mut dec = vec![0.0f32; n];
+    strategy.decode_packed(&pw, &ctx, 0..n, &mut dec);
+    for (i, (a, b)) in encoded.iter().zip(&dec).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{label} elem {i}: encoded {a:e} vs unpacked {b:e}"
+        );
+    }
+    // arbitrary sub-ranges (cache-blocked consumption pattern)
+    let mut rng = Rng::new(n as u64 + label.len() as u64);
+    for _ in 0..8 {
+        let lo = rng.below(n);
+        let hi = lo + 1 + rng.below(n - lo);
+        let mut seg = vec![f32::NAN; hi - lo];
+        strategy.decode_packed(&pw, &ctx, lo..hi, &mut seg);
+        for (k, b) in seg.iter().enumerate() {
+            assert_eq!(
+                encoded[lo + k].to_bits(),
+                b.to_bits(),
+                "{label} range {lo}..{hi} offset {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transcode_matches_wire_cost_on_hostile_inputs() {
+    let mut rng = Rng::new(0xBEEF);
+    for (label, spec) in &specs() {
+        for case in 0..40 {
+            let xs = generators::nasty_vec(&mut rng, 96);
+            check_transcode(&format!("{label} case {case}"), spec, &xs);
+        }
+    }
+}
+
+#[test]
+fn non_finite_layers_escape_to_raw_f32_with_matching_cost() {
+    // Divergent gradients have no 2-bit/`bits`-wide code; those layers
+    // ship raw f32 and the cost accounting reports the same dense FP32
+    // figure — `moved == wire_cost` stays exact even here.
+    let mut xs: Vec<f32> = (0..40).map(|i| (i as f32 - 20.0) * 0.3).collect();
+    xs[3] = f32::NAN;
+    xs[17] = f32::INFINITY;
+    xs[31] = f32::NEG_INFINITY;
+    for (label, spec) in &specs() {
+        check_transcode(&format!("{label} non-finite"), spec, &xs);
+    }
+}
+
+#[test]
+fn fp32_passthrough_layers_ship_dense_on_the_packed_wire() {
+    // Under the fp32-last-layer policy the protected layer must ride the
+    // packed wire as raw f32 — and the session paths must still agree.
+    let world = 4;
+    let grads = nasty_grads(&mut Rng::new(77), world, &[24, 16]);
+    for spec in [
+        StrategySpec::Ternary { seed: 3 },
+        StrategySpec::Qsgd { bits: 4, bucket: 8, seed: 3 },
+        StrategySpec::TopK { frac: 0.5 },
+        StrategySpec::Naive { fmt: FpFormat::E5M2 },
+    ] {
+        let mut packed = SyncSessionBuilder::new(world)
+            .spec(spec.clone())
+            .with_fp32_last_layer(true)
+            .build();
+        let mut sim = SyncSessionBuilder::new(world)
+            .spec(spec.clone())
+            .with_fp32_last_layer(true)
+            .with_wire(WireMode::Simulated)
+            .build();
+        let (po, pr) = packed.step(&grads);
+        let po = po.to_vec();
+        let pr = pr.clone();
+        let (so, sr) = sim.step(&grads);
+        for (l, (a, b)) in po.iter().zip(so.iter()).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{spec:?} layer {l} elem {i}");
+            }
+        }
+        assert_eq!(&pr, sr, "{spec:?} report");
+        assert_eq!(packed.wire_moved(), Some(pr.wire), "{spec:?} moved != claimed");
+        // the protected 16-element layer pays dense FP32 per worker
+        assert!(pr.wire.value_bits >= 16 * 32, "{spec:?}: {:?}", pr.wire);
+    }
+}
+
+#[test]
+fn bit_writer_reader_roundtrip_widths_1_to_32_across_word_boundaries() {
+    let mut rng = Rng::new(0x817);
+    // Fixed-width streams at every width…
+    for width in 1..=32u32 {
+        let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let vals: Vec<u32> = (0..131).map(|_| rng.next_u64() as u32 & mask).collect();
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        for &v in &vals {
+            w.put(v, width);
+        }
+        let bits = w.finish();
+        assert_eq!(bits, vals.len() as u64 * width as u64);
+        let mut r = BitReader::new(&buf);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(r.read(width), v, "width {width} elem {i}");
+        }
+    }
+    // …and one mixed-width stream, re-read from random offsets.
+    let mut buf = Vec::new();
+    let mut w = BitWriter::new(&mut buf);
+    let mut entries = Vec::new();
+    let mut off = 0u64;
+    for _ in 0..1000 {
+        let width = 1 + rng.below(32) as u32;
+        let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let v = rng.next_u64() as u32 & mask;
+        w.put(v, width);
+        entries.push((off, width, v));
+        off += width as u64;
+    }
+    w.finish();
+    for &(off, width, v) in &entries {
+        let mut r = BitReader::at(&buf, off);
+        assert_eq!(r.read(width), v, "offset {off} width {width}");
+    }
+}

@@ -1,13 +1,19 @@
 //! Steady-state allocation test for the session hot path.
 //!
 //! A `SyncSession` promises no per-step element-storage allocation once
-//! its buffers are warm, and since the hierarchical-scratch fix that
-//! promise extends through `HierarchicalCollective` (per-group partials
-//! now live in reusable scratch) and through `ErrorFeedback` (residual
-//! and reconstruction buffers). This binary installs a byte-counting
-//! global allocator and pins the promise: after a warmup, several steps
-//! together must allocate less than a small pointer-bookkeeping budget —
-//! orders of magnitude below one gradient tensor.
+//! its buffers are warm, and that promise now extends through
+//! `HierarchicalCollective` (per-group partials in reusable scratch),
+//! `ErrorFeedback` (residual and reconstruction buffers), the packed
+//! wire path (per-worker `PackedWire` byte buffers, the shared encode
+//! stage and the unpack chunk are all session-owned — and packed is the
+//! session default, so the ring/hierarchical cases below pin it), and
+//! Kahan-compensated reductions (compensation now lives in stack blocks
+//! inside the fold kernels — the formerly ROADMAP-tracked per-call
+//! vectors are gone, pinned by the `with_kahan(true)` cases). This
+//! binary installs a byte-counting global allocator and pins the
+//! promise: after a warmup, several steps together must allocate less
+//! than a small pointer-bookkeeping budget — orders of magnitude below
+//! one gradient tensor.
 //!
 //! Everything runs inside a single `#[test]` so no concurrently-running
 //! test can pollute the counter. Tensor sizes are kept below the
@@ -19,7 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use aps_cpd::collectives::Topology;
 use aps_cpd::cpd::FpFormat;
-use aps_cpd::sync::{StrategySpec, SyncSession, SyncSessionBuilder};
+use aps_cpd::sync::{StrategySpec, SyncSession, SyncSessionBuilder, WireMode};
 
 struct CountingAlloc;
 
@@ -126,6 +132,41 @@ fn steady_state_steps_allocate_no_element_storage() {
                 inner: Box::new(StrategySpec::TopK { frac: 0.25 }),
             })
             .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &layers,
+        budget,
+    );
+
+    // Kahan-compensated sessions, both topologies: pins the closed
+    // ROADMAP item — compensation used to allocate one n-element vector
+    // per reduce call (~26 KiB/step here), which would blow this budget.
+    assert_steady_state(
+        "ring/aps+kahan",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_kahan(true)
+            .build(),
+        &layers,
+        budget,
+    );
+    assert_steady_state(
+        "hierarchical/aps+kahan",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_kahan(true)
+            .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &layers,
+        budget,
+    );
+
+    // The legacy simulated wire keeps the same guarantee (packed is the
+    // default above; this pins the explicit opt-out too).
+    assert_steady_state(
+        "ring/aps simulated-wire",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_wire(WireMode::Simulated)
             .build(),
         &layers,
         budget,
