@@ -81,6 +81,7 @@ fn main() {
         Bench::quick()
     };
     let total_elems: u64 = layers.iter().map(|&(n, _)| n as u64).sum();
+    // apslint: allow(lossy_cast) -- total_elems is the sum of the fixed bench layer sizes (a few million), far below usize::MAX
     let dense_fp32_wire = WireCost::dense(total_elems as usize, FpFormat::FP32);
 
     let mut t = Table::new(&[

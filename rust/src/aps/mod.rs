@@ -325,6 +325,7 @@ pub mod legacy {
                 cluster.all_reduce_sum(&contribs, opts.topo, ropts);
 
             // Cast back up (already f32 storage) and undo the shift; average.
+            // apslint: allow(lossy_cast) -- fe is a small FP exponent (|fe| < 2^15), so its negation is exact in i32
             let unscale = -(fe as i64) as i32;
             let div = if opts.average { world as f64 } else { 1.0 };
             let m = (unscale as f64).exp2() / div;

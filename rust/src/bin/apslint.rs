@@ -1,0 +1,79 @@
+//! `apslint` — the repo's static-analysis pass. See `aps_cpd::lint` for
+//! the rule table, rationale and waiver syntax.
+//!
+//! ```text
+//! cargo run --bin apslint                      # lint the repo, write apslint_report.json
+//! cargo run --bin apslint -- --json out.json   # report elsewhere
+//! cargo run --bin apslint -- --quiet           # summary line only
+//! cargo run --bin apslint -- path/to/repo      # lint another checkout
+//! ```
+//!
+//! Exit code 0 when every error-severity diagnostic carries a reasoned
+//! waiver, 1 when any does not (this is what fails CI), 2 on I/O or
+//! usage errors.
+
+use aps_cpd::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json_path = PathBuf::from("apslint_report.json");
+    let mut quiet = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_path = PathBuf::from(p),
+                None => {
+                    eprintln!("apslint: --json needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quiet" | "-q" => quiet = true,
+            "--help" | "-h" => {
+                eprintln!("usage: apslint [ROOT] [--json PATH] [--quiet]");
+                return ExitCode::SUCCESS;
+            }
+            other if !other.starts_with('-') => root = PathBuf::from(other),
+            other => {
+                eprintln!("apslint: unknown flag {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cfg = lint::Config::repo_default();
+    let report = match lint::run(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("apslint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if !quiet {
+        for d in &report.diagnostics {
+            println!("{}", d.render());
+        }
+    }
+    println!(
+        "apslint: {} error(s), {} warning(s), {} waived across {} files",
+        report.errors(),
+        report.warnings(),
+        report.waived(),
+        report.files_scanned
+    );
+
+    if let Err(e) = std::fs::write(&json_path, report.to_json().to_string() + "\n") {
+        eprintln!("apslint: cannot write {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+
+    if report.ok() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -69,6 +69,7 @@ pub fn all_reduce_with_scratch(
     scratch: &mut HierScratch,
 ) -> ReduceStats {
     let p = contribs.len();
+    // apslint: allow(panic_in_hot_path) -- the first contribution defines the layer shape; ragged input panics are the documented collective contract
     let n = contribs[0].len();
     assert!(group_size >= 1, "group size must be positive");
     assert!(
@@ -82,6 +83,7 @@ pub fn all_reduce_with_scratch(
     // partial). Chunked so small tensors stay on one thread. Blocking the
     // element loop changes memory-access order only, never the
     // per-element fold sequence, so results stay bit-identical.
+    // apslint: allow(alloc_in_hot_path) -- grows only on topology change (empty Vec::new never allocates); steady state reuses the scratch, as pinned by rust/tests/session_alloc.rs
     scratch.partials.resize_with(num_groups, Vec::new);
     let groups_per_chunk = (par::PAR_THRESHOLD / (n * group_size).max(1)).max(1);
     par::par_chunks_mut(&mut scratch.partials, groups_per_chunk, |g0, chunk| {
@@ -129,6 +131,7 @@ pub fn all_reduce_with_scratch(
     let ring_stats = if num_groups > 1 {
         ring::all_reduce_into(&scratch.partials, out, opts)
     } else {
+        // apslint: allow(panic_in_hot_path) -- num_groups >= 1 is guaranteed by the divisibility assert above, so partials[0] exists
         out.copy_from_slice(&scratch.partials[0]);
         ReduceStats::default()
     };
@@ -177,6 +180,7 @@ pub fn all_reduce_packed_with_scratch(
     );
     let num_groups = p / group_size;
 
+    // apslint: allow(alloc_in_hot_path) -- grows only on topology change (empty Vec::new never allocates); steady state reuses the scratch, as pinned by rust/tests/session_alloc.rs
     scratch.partials.resize_with(num_groups, Vec::new);
     unpack.clear();
     unpack.resize(super::FOLD_BLOCK, 0.0);
@@ -218,6 +222,7 @@ pub fn all_reduce_packed_with_scratch(
     let ring_stats = if num_groups > 1 {
         ring::all_reduce_into(&scratch.partials, out, opts)
     } else {
+        // apslint: allow(panic_in_hot_path) -- num_groups >= 1 is guaranteed by the divisibility assert above, so partials[0] exists
         out.copy_from_slice(&scratch.partials[0]);
         ReduceStats::default()
     };

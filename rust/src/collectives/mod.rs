@@ -119,6 +119,7 @@ pub trait Collective {
         opts: &ReduceOptions,
         scratch: &mut PackScratch,
     ) -> ReduceStats {
+        // apslint: allow(alloc_in_hot_path) -- default fallback for third-party collectives only; built-ins override with non-materializing folds. Grows on first call, then reuses the scratch.
         scratch.dense.resize_with(packed.len(), Vec::new);
         for (pw, d) in packed.iter().zip(scratch.dense.iter_mut()) {
             d.clear();
@@ -132,6 +133,7 @@ pub trait Collective {
 /// Shared i8 max-reduce body (values + ring traffic accounting).
 fn max_i8_into(contribs: &[Vec<i8>], out: &mut [i8], world: usize) -> ReduceStats {
     assert_eq!(contribs.len(), world, "one contribution per worker");
+    // apslint: allow(panic_in_hot_path) -- world >= 1 is asserted at collective construction; the first contribution defines the shape
     let n = contribs[0].len();
     assert_eq!(out.len(), n);
     out.fill(i8::MIN);
@@ -178,6 +180,7 @@ impl Collective for RingCollective {
     ) -> ReduceStats {
         assert_eq!(contribs.len(), self.world, "one contribution per worker");
         if self.world == 1 {
+            // apslint: allow(panic_in_hot_path) -- world == 1 checked on the line above, so contribs[0] exists
             out.copy_from_slice(&contribs[0]);
             return ReduceStats::default();
         }
@@ -197,6 +200,7 @@ impl Collective for RingCollective {
     ) -> ReduceStats {
         assert_eq!(packed.len(), self.world, "one packed contribution per worker");
         if self.world == 1 {
+            // apslint: allow(panic_in_hot_path) -- world == 1 checked on the line above, so packed[0] exists
             strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
             return ReduceStats::default();
         }
@@ -247,6 +251,7 @@ impl Collective for HierarchicalCollective {
     ) -> ReduceStats {
         assert_eq!(contribs.len(), self.world, "one contribution per worker");
         if self.world == 1 {
+            // apslint: allow(panic_in_hot_path) -- world == 1 checked on the line above, so contribs[0] exists
             out.copy_from_slice(&contribs[0]);
             return ReduceStats::default();
         }
@@ -272,6 +277,7 @@ impl Collective for HierarchicalCollective {
     ) -> ReduceStats {
         assert_eq!(packed.len(), self.world, "one packed contribution per worker");
         if self.world == 1 {
+            // apslint: allow(panic_in_hot_path) -- world == 1 checked on the line above, so packed[0] exists
             strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
             return ReduceStats::default();
         }

@@ -38,14 +38,17 @@ pub fn all_reduce_into(
     opts: ReduceOptions,
 ) -> ReduceStats {
     let p = contribs.len();
+    // apslint: allow(panic_in_hot_path) -- the first contribution defines the layer shape; ragged input panics are the documented collective contract
     let n = contribs[0].len();
     assert_eq!(out.len(), n);
 
     // Chunk boundaries: chunk c covers [bounds[c], bounds[c+1]).
+    // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping, not element storage; within the steady-state budget pinned by rust/tests/session_alloc.rs
     let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
 
     // Each chunk's fold is independent → parallelize over chunks.
     // Manual split (chunks are uneven when p ∤ n).
+    // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping, not element storage; within the steady-state budget pinned by rust/tests/session_alloc.rs
     let mut slices: Vec<&mut [f32]> = Vec::with_capacity(p);
     let mut rest = out;
     for c in 0..p {
@@ -97,6 +100,7 @@ pub fn all_reduce_into(
 
     // Bounded thread pool: round-robin chunks over available cores; run
     // sequentially when the tensor is small (thread spawn not worth it).
+    // apslint: allow(nondeterminism) -- thread count only selects chunk scheduling; each chunk's fold order is fixed by the ring, so results are bit-identical for any thread count
     let nthreads = par::num_threads().min(p).max(1);
     if n * p < par::PAR_THRESHOLD || nthreads == 1 {
         for (c, chunk) in slices.into_iter().enumerate() {
@@ -104,6 +108,7 @@ pub fn all_reduce_into(
         }
     } else {
         let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+            // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping (empty Vec::new never allocates); within the session_alloc.rs budget
             (0..nthreads).map(|_| Vec::new()).collect();
         for (c, sl) in slices.into_iter().enumerate() {
             buckets[c % nthreads].push((c, sl));
@@ -157,6 +162,7 @@ pub fn all_reduce_packed_into(
     let p = packed.len();
     let n = out.len();
     debug_assert!(p >= 2, "single-worker reduces are handled by the caller");
+    // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping, not element storage; within the steady-state budget pinned by rust/tests/session_alloc.rs
     let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
     unpack.clear();
     unpack.resize(super::FOLD_BLOCK, 0.0);

@@ -217,6 +217,7 @@ impl<'m> Trainer<'m> {
             loss_sum += loss as f64;
             all.push(grads);
         }
+        // apslint: allow(lossy_cast) -- mean loss is a diagnostic; f32 matches the per-step loss the model already reports
         Ok(((loss_sum / world as f64) as f32, all))
     }
 

@@ -144,6 +144,7 @@ pub fn quantize_shifted(x: f32, factor_exp: i32, fmt: FpFormat, mode: Rounding) 
     // exponent ∈ [-149, e_max+1] — always a normal f64). Powers of two are
     // bit-assembled rather than computed with libm exp2 (≈2× on the slice
     // path, EXPERIMENTS.md §Perf).
+    // apslint: allow(lossy_cast) -- exact: rounded is a <= 25-bit integer (see comment above), far below the 2^53 f64 mantissa
     let val = rounded as f64 * pow2_f64(e - 23 + drop.max(0));
     let max_val =
         (2.0 - pow2_f64(-(fmt.man_bits as i32))) * pow2_f64(fmt.max_exponent());
@@ -212,6 +213,7 @@ pub fn quantize_shifted_slice_into(
             }
         }
     };
+    // apslint: allow(nondeterminism) -- thread count only selects chunking; the stochastic-rounding RNG is keyed by absolute element index, so results are bit-identical for any thread count
     if crate::util::par::num_threads() > 1 && xs.len() >= crate::util::par::PAR_THRESHOLD {
         crate::util::par::par_chunks_mut(out, crate::util::par::PAR_THRESHOLD, run);
     } else {

@@ -47,6 +47,7 @@ impl Rng {
     /// Uniform in [0, 1).
     #[inline]
     pub fn uniform(&mut self) -> f32 {
+        // apslint: allow(lossy_cast) -- exact: the shift keeps 24 bits, the f32 mantissa width; (1u64 << 24) is a power of two
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
@@ -59,6 +60,7 @@ impl Rng {
     /// Uniform integer in [0, n).
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
+        // apslint: allow(lossy_cast) -- the modulus bounds the value by n, which is a usize
         (self.next_u64() % n as u64) as usize
     }
 

@@ -77,6 +77,7 @@ impl SyntheticImages {
     /// Example identity is global, so sharding is just index ranges.
     pub fn example(&self, i: u64) -> (Vec<f32>, u32) {
         let mut rng = Rng::new(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // apslint: allow(lossy_cast) -- the modulus bounds the value by num_classes, a u32
         let label = (rng.next_u64() % self.num_classes as u64) as u32;
         let n = self.pixels();
         let mut img = vec![0.0f32; n];

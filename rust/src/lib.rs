@@ -35,6 +35,9 @@
 //! * [`coordinator`] — the distributed-training driver tying it together.
 //! * [`perfmodel`] — the α–β communication cost model (paper Fig 11).
 //! * [`metrics`] — accuracy / mIoU / histograms / round-off error (Eq. 5).
+//! * [`lint`] — `apslint`, the repo-native static-analysis pass that
+//!   enforces the wire-honesty / no-alloc / determinism invariants at
+//!   the source level (`cargo run --bin apslint`).
 //!
 //! ## Migrating from `aps::synchronize`
 //!
@@ -76,6 +79,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cpd;
 pub mod data;
+pub mod lint;
 pub mod metrics;
 pub mod optim;
 pub mod perfmodel;

@@ -1,0 +1,415 @@
+//! A small, self-contained Rust lexer for the `apslint` pass.
+//!
+//! This is *not* a full Rust lexer — it is exactly enough to turn a
+//! source file into a flat token stream with line numbers, which is what
+//! the rule matchers in [`super::rules`] pattern-match over. It handles
+//! the parts that would otherwise produce false matches:
+//!
+//! * line comments and (nested) block comments — retained as
+//!   [`TokKind::Comment`] tokens so the waiver scanner can read them;
+//! * string literals, raw strings (`r"…"`, `r#"…"#`), byte strings, and
+//!   char literals — retained as opaque [`TokKind::Literal`]s so that,
+//!   e.g., the string `"Vec::new"` never matches the alloc rule;
+//! * char literals vs. lifetimes (`'a'` vs. `'a`);
+//! * numeric literals including type suffixes (`0usize`, `1e-3f32`),
+//!   kept as a single token so the lossy-cast rule can read the suffix.
+//!
+//! Known simplifications (fine for linting, documented here on purpose):
+//! multi-char operators are emitted as individual [`TokKind::Punct`]
+//! chars (`::` is `:`, `:`), and a hex literal whose digits happen to end
+//! in `f32`/`u32`-like text (e.g. `0x1f32`) is read as suffixed.
+
+/// Token payload. Lines are 1-based.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `Vec`, …).
+    Ident(String),
+    /// Lifetime, without the leading quote (`'a` → `a`).
+    Lifetime(String),
+    /// Any literal: string, raw string, char, byte, or number.
+    /// The full source text is kept (including numeric type suffixes).
+    Literal(String),
+    /// A single punctuation character.
+    Punct(char),
+    /// A comment, full text including the `//` or `/* … */` markers.
+    /// For block comments the line is the line the comment *starts* on.
+    Comment(String),
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+impl Tok {
+    /// The identifier text, if this token is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+    /// True when this token is the given punctuation char.
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.kind, TokKind::Punct(p) if *p == c)
+    }
+    /// The literal text, if this token is a literal.
+    pub fn literal(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Literal(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs run to EOF and
+/// unknown bytes become [`TokKind::Punct`] tokens — a linter must keep
+/// going on odd input rather than refuse the file.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = b[i];
+
+        // -- whitespace -------------------------------------------------
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // -- comments ---------------------------------------------------
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.push(Tok { kind: TokKind::Comment(b[start..i].iter().collect()), line });
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Tok {
+                kind: TokKind::Comment(b[start..i].iter().collect()),
+                line: start_line,
+            });
+            continue;
+        }
+
+        // -- raw strings / raw identifiers / byte strings ---------------
+        if c == 'r' || c == 'b' {
+            // r"…", r#"…"#, br"…", b"…", b'…', r#ident
+            let mut j = i + 1;
+            let mut is_raw = c == 'r';
+            if c == 'b' && j < n && b[j] == 'r' {
+                is_raw = true;
+                j += 1;
+            }
+            if is_raw {
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    // raw string: scan for `"` followed by `hashes` hashes
+                    let start = i;
+                    let start_line = line;
+                    j += 1;
+                    'raw: while j < n {
+                        if b[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if b[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        j += 1;
+                    }
+                    out.push(Tok {
+                        kind: TokKind::Literal(b[start..j].iter().collect()),
+                        line: start_line,
+                    });
+                    i = j;
+                    continue;
+                }
+                if c == 'r' && hashes == 1 && j < n && is_ident_start(b[j]) {
+                    // raw identifier r#ident
+                    let start = j;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    out.push(Tok { kind: TokKind::Ident(b[start..j].iter().collect()), line });
+                    i = j;
+                    continue;
+                }
+                // not actually raw — fall through to plain ident below
+            }
+            if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+                // byte string / byte char: skip the `b`, reuse the string
+                // and char paths below by treating the quote directly.
+                let quote = b[i + 1];
+                let start = i;
+                let start_line = line;
+                let mut j = i + 2;
+                while j < n {
+                    if b[j] == '\\' {
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == quote {
+                        j += 1;
+                        break;
+                    }
+                    j += 1;
+                }
+                out.push(Tok {
+                    kind: TokKind::Literal(b[start..j].iter().collect()),
+                    line: start_line,
+                });
+                i = j;
+                continue;
+            }
+        }
+
+        // -- identifiers / keywords -------------------------------------
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.push(Tok { kind: TokKind::Ident(b[start..i].iter().collect()), line });
+            continue;
+        }
+
+        // -- numbers (with suffix, exponent, hex/oct/bin) ----------------
+        if c.is_ascii_digit() {
+            let start = i;
+            let is_prefixed = c == '0'
+                && i + 1 < n
+                && matches!(b[i + 1], 'x' | 'X' | 'o' | 'O' | 'b' | 'B');
+            i += 1;
+            while i < n {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    // `1e-3`: the sign after e/E belongs to the exponent
+                    // (decimal literals only — `0x1E-2` is subtraction).
+                    if matches!(d, 'e' | 'E')
+                        && !is_prefixed
+                        && i + 1 < n
+                        && matches!(b[i + 1], '+' | '-')
+                    {
+                        i += 2;
+                        continue;
+                    }
+                    i += 1;
+                    continue;
+                }
+                if d == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    i += 2;
+                    continue;
+                }
+                break;
+            }
+            out.push(Tok { kind: TokKind::Literal(b[start..i].iter().collect()), line });
+            continue;
+        }
+
+        // -- strings -----------------------------------------------------
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.push(Tok {
+                kind: TokKind::Literal(b[start..i].iter().collect()),
+                line: start_line,
+            });
+            continue;
+        }
+
+        // -- char literal vs. lifetime ----------------------------------
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char: '\n', '\'', '\u{…}'
+                let start = i;
+                let mut j = i + 3; // skip quote, backslash, escaped char
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                j = (j + 1).min(n);
+                out.push(Tok { kind: TokKind::Literal(b[start..j].iter().collect()), line });
+                i = j;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // plain char: 'a', '0', ' '
+                out.push(Tok {
+                    kind: TokKind::Literal(b[i..i + 3].iter().collect()),
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                // lifetime: 'a, 'static, '_
+                let start = i + 1;
+                let mut j = start;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                out.push(Tok { kind: TokKind::Lifetime(b[start..j].iter().collect()), line });
+                i = j;
+                continue;
+            }
+            // stray quote — emit as punct and keep going
+            out.push(Tok { kind: TokKind::Punct('\''), line });
+            i += 1;
+            continue;
+        }
+
+        // -- everything else is single-char punctuation -----------------
+        out.push(Tok { kind: TokKind::Punct(c), line });
+        i += 1;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let t = kinds("fn f(x: u32) -> u32 { x }");
+        assert_eq!(t[0], TokKind::Ident("fn".into()));
+        assert_eq!(t[1], TokKind::Ident("f".into()));
+        assert!(t.contains(&TokKind::Punct('{')));
+    }
+
+    #[test]
+    fn strings_are_opaque() {
+        let t = kinds(r#"let s = "Vec::new() // not a comment";"#);
+        assert!(!t.iter().any(|k| matches!(k, TokKind::Comment(_))));
+        assert!(t.iter().any(
+            |k| matches!(k, TokKind::Literal(s) if s.contains("Vec::new"))
+        ));
+        assert!(!t.iter().any(|k| matches!(k, TokKind::Ident(s) if s == "Vec")));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let t = kinds(r##"let s = r#"a "quoted" b"#; let r#fn = 1;"##);
+        assert!(t.iter().any(
+            |k| matches!(k, TokKind::Literal(s) if s.contains("quoted"))
+        ));
+        assert!(t.iter().any(|k| matches!(k, TokKind::Ident(s) if s == "fn")));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let t = kinds("let c = 'a'; fn f<'a>(x: &'a str) {}");
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "'a'")));
+        assert_eq!(
+            t.iter().filter(|k| matches!(k, TokKind::Lifetime(s) if s == "a")).count(),
+            2
+        );
+        let t = kinds(r"let q = '\''; let nl = '\n';");
+        assert_eq!(
+            t.iter().filter(|k| matches!(k, TokKind::Literal(_))).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let toks = lex("a\n/* x /* y */ z\n */ b");
+        assert_eq!(toks[0].line, 1);
+        assert!(matches!(&toks[1].kind, TokKind::Comment(_)));
+        assert_eq!(toks[2].ident(), Some("b"));
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn numeric_suffixes_kept() {
+        let t = kinds("let a = 0usize; let b = 1e-3f32; let c = 0x1E - 2;");
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "0usize")));
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "1e-3f32")));
+        // 0x1E - 2 must stay three tokens (hex literal, minus, 2)
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "0x1E")));
+        assert!(t.iter().any(|k| matches!(k, TokKind::Punct('-'))));
+    }
+
+    #[test]
+    fn float_method_call_not_merged() {
+        let t = kinds("let x = 1.max(2); let r = 0..4;");
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "1")));
+        assert!(t.iter().any(|k| matches!(k, TokKind::Ident(s) if s == "max")));
+        assert!(t.iter().any(|k| matches!(k, TokKind::Literal(s) if s == "0")));
+    }
+}

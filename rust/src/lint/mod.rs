@@ -1,0 +1,665 @@
+//! # `apslint` — repo-native static analysis for the APS invariants
+//!
+//! The crate's core guarantees — honest [`crate::sync::WireCost`]
+//! accounting, zero per-step allocation in `SyncSession::step`, and
+//! bit-identity between the packed and simulated wires — are enforced at
+//! runtime by `session_alloc.rs`, `packed_wire.rs` and the codec
+//! conformance suite. This module is their *static* complement: a small
+//! lexer ([`lexer`]) plus a rule engine ([`rules`]) that pattern-matches
+//! the token stream of every file under `rust/src`, `benches` and
+//! `examples`, and fails CI on any unwaived diagnostic. Run it with
+//! `cargo run --bin apslint`.
+//!
+//! ## Rules
+//!
+//! | rule | severity | what it catches | why |
+//! |---|---|---|---|
+//! | `alloc_in_hot_path` | error | `Vec::new` / `Vec::with_capacity` / `vec!` / `.to_vec()` / `.collect()` / `Box::new` inside the configured hot-path set | static complement to the counting-allocator pin in `rust/tests/session_alloc.rs`: the steady-state step path must not allocate |
+//! | `wire_honesty` | error | a `SyncStrategy` impl that overrides `wire_cost` without overriding **both** `encode_packed` and `decode_packed` | a codec must never claim packed bits it does not actually pack — measured == claimed traffic is the paper's headline invariant |
+//! | `lossy_cast` | error | truncating `as` casts (`u64 as u32`, `usize as u32`, `u64 as usize`, `f64 as f32`, `u64 as f64`, wide-int `as f32`) where the source type is locally resolvable | bit-kernel index math must survive 32-bit targets; value casts must be exact or carry a written reason |
+//! | `unsafe_code` | error | any `unsafe` token outside `#[cfg(test)]` code | the crate is unsafe-free today; pin it |
+//! | `panic_in_hot_path` | error | `.unwrap()` / `.expect()` / literal indexing (`x[0]`) inside the hot-path set | hidden panics on the step path; `assert!`s stay allowed — ragged-input panics are the documented conformance contract |
+//! | `nondeterminism` | error | `HashMap` / `HashSet`, `Instant::now` / `SystemTime::now`, `num_threads` / `available_parallelism` inside encode / decode / fold paths | guard rail for the parallel packed fold (ROADMAP open item 1): wire bytes and fold results must not depend on host thread count or wall clock |
+//!
+//! `lossy_cast` only fires when the source type is *resolvable* from
+//! local, explicit evidence: a `let x: T` annotation, an `fn` parameter,
+//! a struct field declared in the same file, a literal suffix
+//! (`0u64 as u32`), a cast chain (`x as u64 as u32`), a parenthesized
+//! expression over a single resolved variable and integer literals
+//! (`(bit_offset / 8) as usize`), or a known method (`.len()` → `usize`,
+//! `.leading_zeros()` → `u32`). Anything else is conservatively left
+//! unflagged — the rule is a tripwire for the bit kernels, not a type
+//! checker.
+//!
+//! ## Waivers
+//!
+//! A diagnostic is waived — reported, but not fatal — by a comment on the
+//! same line as the flagged token or on the line directly above it:
+//!
+//! ```text
+//! // apslint: allow(lossy_cast) -- low-byte extraction; masked to 8 bits above
+//! let byte = self.acc as u8;
+//! ```
+//!
+//! The `-- reason` text is mandatory: a waiver without a written reason
+//! is itself an error (`waiver_syntax`). Multiple rules may be listed:
+//! `allow(alloc_in_hot_path, lossy_cast) -- …`. Naming a rule that does
+//! not exist is a warning, so typos cannot silently disable anything.
+//!
+//! ## Report
+//!
+//! [`Report::to_json`] serializes every diagnostic (waived ones
+//! included, with their reasons) plus summary counts; the `apslint`
+//! binary writes it to `apslint_report.json` and CI uploads it as an
+//! artifact. See EXPERIMENTS.md ("Static analysis") for how to read it.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::Json;
+use lexer::{Tok, TokKind};
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+/// The shipped rule set. `waiver_syntax` is the engine's own meta-rule
+/// (malformed waivers) and cannot itself be waived.
+pub const RULES: &[&str] = &[
+    "alloc_in_hot_path",
+    "wire_honesty",
+    "lossy_cast",
+    "unsafe_code",
+    "panic_in_hot_path",
+    "nondeterminism",
+];
+
+/// Diagnostic severity. Unwaived `Error`s fail the run; `Warning`s are
+/// reported (and counted in the JSON) but never change the exit code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding, tied to a file and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// `Some(reason)` when an `apslint: allow(...)` waiver covers this
+    /// diagnostic; the written reason is carried into the report.
+    pub waived: Option<String>,
+}
+
+impl Diagnostic {
+    /// True when this diagnostic should fail the run.
+    pub fn is_fatal(&self) -> bool {
+        self.severity == Severity::Error && self.waived.is_none()
+    }
+    /// `file:line: severity[rule]: message` (the clickable format).
+    pub fn render(&self) -> String {
+        let waiver = match &self.waived {
+            Some(r) => format!(" (waived: {r})"),
+            None => String::new(),
+        };
+        format!(
+            "{}:{}: {}[{}]: {}{}",
+            self.file,
+            self.line,
+            self.severity.as_str(),
+            self.rule,
+            self.message,
+            waiver
+        )
+    }
+}
+
+/// A file (matched by path suffix) whose listed functions are hot-path:
+/// no allocation, no hidden panics. An empty `functions` list marks the
+/// whole file hot.
+#[derive(Clone, Debug)]
+pub struct HotSpec {
+    pub file_suffix: String,
+    pub functions: Vec<String>,
+}
+
+/// Engine configuration: the hot-path set plus the nondeterminism scope.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub hot: Vec<HotSpec>,
+    /// Path fragments (e.g. `"sync/"`) in which functions whose names
+    /// start with one of [`Config::nd_fn_prefixes`] are encode/decode/
+    /// fold paths for the `nondeterminism` rule (in addition to the hot
+    /// set, which is always in scope for it).
+    pub nd_path_fragments: Vec<String>,
+    pub nd_fn_prefixes: Vec<String>,
+}
+
+impl Config {
+    /// The repository's real hot-path set. Kept here, in code, so the
+    /// lint config is reviewed like any other source change.
+    pub fn repo_default() -> Config {
+        let hot = |suffix: &str, fns: &[&str]| HotSpec {
+            file_suffix: suffix.to_string(),
+            functions: fns.iter().map(|s| s.to_string()).collect(),
+        };
+        Config {
+            hot: vec![
+                // The per-step session path (static complement to the
+                // counting-allocator test).
+                hot("sync/session.rs", &["step"]),
+                // Bit-packing kernels: every BitWriter/BitReader method
+                // and every pack_*/unpack_* transcoder.
+                hot(
+                    "sync/wire.rs",
+                    &[
+                        "put",
+                        "finish",
+                        "at",
+                        "read",
+                        "read_bits_at",
+                        "low_byte",
+                        "byte_index",
+                        "bit_rem",
+                        "pack_format_bits",
+                        "unpack_format_bits",
+                        "pack_raw_f32",
+                        "unpack_raw_f32",
+                        "pack_cast_layer",
+                        "unpack_cast_range",
+                        "meta_f32",
+                        "push_meta_f32",
+                    ],
+                ),
+                // Collective fold kernels.
+                hot("collectives/ring.rs", &["all_reduce_into", "all_reduce_packed_into"]),
+                hot(
+                    "collectives/hierarchical.rs",
+                    &["all_reduce_with_scratch", "all_reduce_packed_with_scratch"],
+                ),
+                hot(
+                    "collectives/mod.rs",
+                    &[
+                        "fold_step",
+                        "all_reduce_sum_into",
+                        "all_reduce_packed_sum_into",
+                        "all_reduce_max_i8_into",
+                        "max_i8_into",
+                    ],
+                ),
+                // Quantize slice kernels.
+                hot(
+                    "cpd/cast.rs",
+                    &[
+                        "quantize_shifted_slice_into",
+                        "quantize_slice_into",
+                        "decode_bits",
+                        "encode_bits",
+                    ],
+                ),
+            ],
+            nd_path_fragments: vec!["sync/".into(), "collectives/".into(), "cpd/".into()],
+            nd_fn_prefixes: vec![
+                "encode".into(),
+                "decode".into(),
+                "fold".into(),
+                "all_reduce".into(),
+                "pack".into(),
+                "unpack".into(),
+                "quantize".into(),
+            ],
+        }
+    }
+
+    /// No hot paths, no nondeterminism scope — only the whole-file rules
+    /// (`unsafe_code`, `lossy_cast`, `wire_honesty`) fire. Useful for
+    /// fixture tests.
+    pub fn empty() -> Config {
+        Config::default()
+    }
+
+    fn hot_spec_for(&self, path: &str) -> Option<&HotSpec> {
+        self.hot.iter().find(|h| path.ends_with(&h.file_suffix))
+    }
+}
+
+/// A function span over code-token indices. `sig` is the index of the
+/// `fn` token (so parameter lists are in `sig..body.start`); `body`
+/// excludes the braces themselves.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: u32,
+    pub sig: usize,
+    pub body: Range<usize>,
+}
+
+/// A parsed waiver comment.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub line: u32,
+}
+
+/// Everything the rules need to know about one file.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    /// Code tokens only (comments stripped).
+    pub code: Vec<Tok>,
+    pub fn_spans: Vec<FnSpan>,
+    /// Code-token index ranges that are `#[cfg(test)]` / `#[test]` /
+    /// `mod tests` bodies — excluded from every rule.
+    pub test_ranges: Vec<Range<usize>>,
+    pub waivers: Vec<Waiver>,
+    pub cfg: &'a Config,
+}
+
+impl<'a> FileCtx<'a> {
+    /// True when code-token index `i` lies inside test-only code.
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|r| r.contains(&i))
+    }
+
+    /// The innermost function span containing code-token index `i`.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnSpan> {
+        self.fn_spans
+            .iter()
+            .filter(|f| f.body.contains(&i))
+            .min_by_key(|f| f.body.end - f.body.start)
+    }
+
+    /// True when index `i` is inside a configured hot-path function.
+    pub fn in_hot_path(&self, i: usize) -> bool {
+        if self.in_test(i) {
+            return false;
+        }
+        let Some(spec) = self.cfg.hot_spec_for(self.path) else {
+            return false;
+        };
+        if spec.functions.is_empty() {
+            return true;
+        }
+        // A nested hot fn keeps its enclosing names in scope too: check
+        // every span containing `i`, not just the innermost.
+        self.fn_spans
+            .iter()
+            .any(|f| f.body.contains(&i) && spec.functions.contains(&f.name))
+    }
+
+    /// True when index `i` is in scope for the `nondeterminism` rule:
+    /// the hot set, plus encode/decode/fold-named functions under the
+    /// configured path fragments.
+    pub fn in_nd_scope(&self, i: usize) -> bool {
+        if self.in_test(i) {
+            return false;
+        }
+        if self.in_hot_path(i) {
+            return true;
+        }
+        if !self.cfg.nd_path_fragments.iter().any(|p| self.path.contains(p.as_str())) {
+            return false;
+        }
+        self.fn_spans.iter().any(|f| {
+            f.body.contains(&i)
+                && self.cfg.nd_fn_prefixes.iter().any(|p| f.name.starts_with(p.as_str()))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Waiver parsing
+// ---------------------------------------------------------------------
+
+/// Parse `apslint: allow(rule, …) -- reason` out of a comment. Returns
+/// `Ok(None)` for comments that don't mention apslint, `Err(message)`
+/// for ones that do but are malformed.
+fn parse_waiver(text: &str, line: u32) -> Result<Option<Waiver>, String> {
+    let Some(pos) = text.find("apslint:") else {
+        return Ok(None);
+    };
+    let rest = text[pos + "apslint:".len()..].trim_start();
+    let Some(body) = rest.strip_prefix("allow") else {
+        return Err("expected `allow(<rule, …>)` after `apslint:`".to_string());
+    };
+    let body = body.trim_start();
+    let Some(open) = body.strip_prefix('(') else {
+        return Err("expected `(` after `apslint: allow`".to_string());
+    };
+    let Some(close) = open.find(')') else {
+        return Err("unclosed `(` in `apslint: allow(...)`".to_string());
+    };
+    let rules: Vec<String> = open[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Err("`apslint: allow()` lists no rules".to_string());
+    }
+    let after = open[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix("--")
+        .map(|r| r.trim_end_matches("*/").trim().to_string())
+        .unwrap_or_default();
+    if reason.is_empty() {
+        return Err(
+            "waiver has no reason: write `apslint: allow(<rule>) -- <why this is sound>`"
+                .to_string(),
+        );
+    }
+    Ok(Some(Waiver { rules, reason, line }))
+}
+
+// ---------------------------------------------------------------------
+// File analysis
+// ---------------------------------------------------------------------
+
+/// Build the per-file context: strip comments into waivers, compute
+/// function spans and test ranges. Malformed waivers are pushed onto
+/// `diags` directly.
+fn build_ctx<'a>(
+    path: &'a str,
+    toks: Vec<Tok>,
+    cfg: &'a Config,
+    diags: &mut Vec<Diagnostic>,
+) -> FileCtx<'a> {
+    let mut code: Vec<Tok> = Vec::with_capacity(toks.len());
+    let mut waivers: Vec<Waiver> = Vec::new();
+    for t in toks {
+        match &t.kind {
+            // Doc comments (`///`, `//!`, `/**`, `/*!`) are prose about
+            // the code, not directives — only plain comments can carry
+            // waivers. This also keeps documentation that *shows* the
+            // waiver syntax (like this module's) from being parsed.
+            TokKind::Comment(text)
+                if text.starts_with("///")
+                    || text.starts_with("//!")
+                    || text.starts_with("/**")
+                    || text.starts_with("/*!") => {}
+            TokKind::Comment(text) => match parse_waiver(text, t.line) {
+                Ok(Some(w)) => {
+                    for r in &w.rules {
+                        if !RULES.contains(&r.as_str()) {
+                            diags.push(Diagnostic {
+                                rule: "waiver_syntax",
+                                severity: Severity::Warning,
+                                file: path.to_string(),
+                                line: t.line,
+                                message: format!(
+                                    "waiver names unknown rule `{r}` (known: {})",
+                                    RULES.join(", ")
+                                ),
+                                waived: None,
+                            });
+                        }
+                    }
+                    waivers.push(w);
+                }
+                Ok(None) => {}
+                Err(msg) => diags.push(Diagnostic {
+                    rule: "waiver_syntax",
+                    severity: Severity::Error,
+                    file: path.to_string(),
+                    line: t.line,
+                    message: msg,
+                    waived: None,
+                }),
+            },
+            _ => code.push(t),
+        }
+    }
+
+    // Single pass for fn spans and test ranges.
+    let mut fn_spans: Vec<FnSpan> = Vec::new();
+    let mut test_ranges: Vec<Range<usize>> = Vec::new();
+    let mut depth = 0i64;
+    let mut bracket_depth = 0i64; // ( ) and [ ] — guards `;` in types
+    let mut pending_fn: Option<(String, u32, usize)> = None;
+    let mut pending_test = false;
+    let mut fn_stack: Vec<(String, u32, usize, i64, usize)> = Vec::new();
+    let mut test_stack: Vec<(i64, usize)> = Vec::new();
+
+    for i in 0..code.len() {
+        match &code[i].kind {
+            TokKind::Ident(s) if s == "fn" => {
+                if let Some(name) = code.get(i + 1).and_then(|t| t.ident()) {
+                    pending_fn = Some((name.to_string(), code[i].line, i));
+                }
+            }
+            TokKind::Ident(s) if s == "mod" => {
+                if code.get(i + 1).and_then(|t| t.ident()) == Some("tests") {
+                    pending_test = true;
+                }
+            }
+            TokKind::Punct('#') => {
+                // `#[test]`, `#[cfg(test)]`
+                let id = |k: usize| code.get(i + k).and_then(|t| t.ident());
+                let p = |k: usize, c: char| code.get(i + k).is_some_and(|t| t.is_punct(c));
+                if p(1, '[')
+                    && ((id(2) == Some("test") && p(3, ']'))
+                        || (id(2) == Some("cfg")
+                            && p(3, '(')
+                            && id(4) == Some("test")
+                            && p(5, ')')
+                            && p(6, ']')))
+                {
+                    pending_test = true;
+                }
+            }
+            TokKind::Punct('(') | TokKind::Punct('[') => bracket_depth += 1,
+            TokKind::Punct(')') | TokKind::Punct(']') => bracket_depth -= 1,
+            TokKind::Punct('{') => {
+                if let Some((name, line, sig)) = pending_fn.take() {
+                    fn_stack.push((name, line, sig, depth, i));
+                }
+                if pending_test {
+                    test_stack.push((depth, i));
+                    pending_test = false;
+                }
+                depth += 1;
+            }
+            TokKind::Punct('}') => {
+                depth -= 1;
+                if fn_stack.last().is_some_and(|f| f.3 == depth) {
+                    let (name, line, sig, _, open) =
+                        fn_stack.pop().expect("checked non-empty");
+                    fn_spans.push(FnSpan { name, line, sig, body: open + 1..i });
+                }
+                if test_stack.last().is_some_and(|t| t.0 == depth) {
+                    let (_, open) = test_stack.pop().expect("checked non-empty");
+                    test_ranges.push(open..i + 1);
+                }
+            }
+            TokKind::Punct(';') if bracket_depth == 0 => {
+                // trait method declarations / attributed items end here
+                pending_fn = None;
+                pending_test = false;
+            }
+            _ => {}
+        }
+    }
+    // Unclosed spans at EOF (unbalanced file): close them at the end so
+    // the rules still see the tokens.
+    while let Some((name, line, sig, _, open)) = fn_stack.pop() {
+        fn_spans.push(FnSpan { name, line, sig, body: open + 1..code.len() });
+    }
+    while let Some((_, open)) = test_stack.pop() {
+        test_ranges.push(open..code.len());
+    }
+
+    FileCtx { path, code, fn_spans, test_ranges, waivers, cfg }
+}
+
+/// Lint one source string. `path` is used for hot-path matching and in
+/// diagnostics; it should be the repo-relative path with `/` separators.
+pub fn check_source(path: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let toks = lexer::lex(src);
+    let ctx = build_ctx(path, toks, cfg, &mut diags);
+
+    rules::alloc_in_hot_path(&ctx, &mut diags);
+    rules::wire_honesty(&ctx, &mut diags);
+    rules::lossy_cast(&ctx, &mut diags);
+    rules::unsafe_code(&ctx, &mut diags);
+    rules::panic_in_hot_path(&ctx, &mut diags);
+    rules::nondeterminism(&ctx, &mut diags);
+
+    // Apply waivers: a waiver covers its own line and the next line, so
+    // both trailing comments and own-line comments directly above work.
+    for d in &mut diags {
+        if d.rule == "waiver_syntax" {
+            continue; // the meta-rule cannot be waived
+        }
+        for w in &ctx.waivers {
+            if (d.line == w.line || d.line == w.line + 1)
+                && w.rules.iter().any(|r| r == d.rule)
+            {
+                d.waived = Some(w.reason.clone());
+                break;
+            }
+        }
+    }
+
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Repo walk + report
+// ---------------------------------------------------------------------
+
+/// Aggregated result of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// Unwaived errors — the count that fails the run.
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.is_fatal()).count()
+    }
+    pub fn warnings(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Warning && d.waived.is_none())
+            .count()
+    }
+    pub fn waived(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.waived.is_some()).count()
+    }
+    pub fn ok(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Machine-readable report (see EXPERIMENTS.md "Static analysis").
+    pub fn to_json(&self) -> Json {
+        let mut per_rule: BTreeMap<String, Json> = BTreeMap::new();
+        for rule in RULES.iter().chain(std::iter::once(&"waiver_syntax")) {
+            let fired =
+                self.diagnostics.iter().filter(|d| d.rule == *rule).count();
+            if fired > 0 {
+                per_rule.insert(rule.to_string(), Json::Num(fired as f64));
+            }
+        }
+        Json::obj(vec![
+            ("tool", Json::Str("apslint".to_string())),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("errors", Json::Num(self.errors() as f64)),
+                    ("warnings", Json::Num(self.warnings() as f64)),
+                    ("waived", Json::Num(self.waived() as f64)),
+                ]),
+            ),
+            ("per_rule", Json::Obj(per_rule)),
+            (
+                "diagnostics",
+                Json::Arr(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            let mut fields = vec![
+                                ("rule", Json::Str(d.rule.to_string())),
+                                ("severity", Json::Str(d.severity.as_str().to_string())),
+                                ("file", Json::Str(d.file.clone())),
+                                ("line", Json::Num(d.line as f64)),
+                                ("message", Json::Str(d.message.clone())),
+                                ("waived", Json::Bool(d.waived.is_some())),
+                            ];
+                            if let Some(r) = &d.waived {
+                                fields.push(("waiver_reason", Json::Str(r.clone())));
+                            }
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, skipping `vendor` and
+/// `target` trees. Paths come back sorted for deterministic reports.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "vendor" || name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The scan roots, relative to the repo root.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "benches", "examples"];
+
+/// Lint the repository at `root` with `cfg`.
+pub fn run(root: &Path, cfg: &Config) -> anyhow::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut report = Report::default();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.diagnostics.extend(check_source(&rel, &src, cfg));
+        report.files_scanned += 1;
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}

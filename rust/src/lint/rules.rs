@@ -1,0 +1,697 @@
+//! The `apslint` rule implementations.
+//!
+//! Each rule is a free function `fn(&FileCtx, &mut Vec<Diagnostic>)`
+//! that pattern-matches the file's code-token stream. See the module
+//! docs in [`super`] for the rule table, rationale, and waiver syntax.
+
+use super::lexer::{Tok, TokKind};
+use super::{Diagnostic, FileCtx, Severity};
+use std::collections::BTreeMap;
+
+fn id<'a>(code: &'a [Tok], i: usize) -> Option<&'a str> {
+    code.get(i).and_then(|t| t.ident())
+}
+fn p(code: &[Tok], i: usize, c: char) -> bool {
+    code.get(i).is_some_and(|t| t.is_punct(c))
+}
+fn lit<'a>(code: &'a [Tok], i: usize) -> Option<&'a str> {
+    code.get(i).and_then(|t| t.literal())
+}
+
+fn diag(
+    diags: &mut Vec<Diagnostic>,
+    rule: &'static str,
+    ctx: &FileCtx,
+    line: u32,
+    message: String,
+) {
+    diags.push(Diagnostic {
+        rule,
+        severity: Severity::Error,
+        file: ctx.path.to_string(),
+        line,
+        message,
+        waived: None,
+    });
+}
+
+// ---------------------------------------------------------------------
+// Rule: alloc_in_hot_path
+// ---------------------------------------------------------------------
+
+/// No `Vec::new` / `Vec::with_capacity` / `vec!` / `.to_vec()` /
+/// `.collect()` / `Box::new` inside the configured hot-path functions.
+/// Capacity-*reusing* calls (`clear`, `resize`, `push`,
+/// `extend_from_slice` on long-lived scratch) are deliberately allowed:
+/// after warmup they do not allocate, which is exactly the property the
+/// counting-allocator test pins at runtime.
+pub fn alloc_in_hot_path(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        if !ctx.in_hot_path(i) {
+            continue;
+        }
+        let line = code[i].line;
+        if p(code, i + 1, ':') && p(code, i + 2, ':') {
+            let callee = id(code, i + 3);
+            if id(code, i) == Some("Vec")
+                && matches!(callee, Some("new") | Some("with_capacity"))
+            {
+                diag(
+                    diags,
+                    "alloc_in_hot_path",
+                    ctx,
+                    line,
+                    format!(
+                        "`Vec::{}` allocates on the hot path; reuse session-owned scratch",
+                        callee.unwrap_or_default()
+                    ),
+                );
+            }
+            if id(code, i) == Some("Box") && callee == Some("new") {
+                diag(
+                    diags,
+                    "alloc_in_hot_path",
+                    ctx,
+                    line,
+                    "`Box::new` allocates on the hot path".to_string(),
+                );
+            }
+        }
+        if id(code, i) == Some("vec") && p(code, i + 1, '!') {
+            diag(
+                diags,
+                "alloc_in_hot_path",
+                ctx,
+                line,
+                "`vec![…]` allocates on the hot path; reuse session-owned scratch".to_string(),
+            );
+        }
+        if p(code, i, '.') {
+            if id(code, i + 1) == Some("to_vec") {
+                diag(
+                    diags,
+                    "alloc_in_hot_path",
+                    ctx,
+                    line,
+                    "`.to_vec()` copies into a fresh allocation on the hot path".to_string(),
+                );
+            }
+            if id(code, i + 1) == Some("collect") {
+                diag(
+                    diags,
+                    "alloc_in_hot_path",
+                    ctx,
+                    line,
+                    "`.collect()` allocates on the hot path; write into reused scratch"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: wire_honesty
+// ---------------------------------------------------------------------
+
+/// Any `impl SyncStrategy for T` that overrides `wire_cost` must also
+/// override both `encode_packed` and `decode_packed`: a codec that
+/// claims a non-default wire cost but rides the default f32 packing
+/// would move bytes its own accounting never admits to.
+pub fn wire_honesty(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    let mut i = 0usize;
+    while i < code.len() {
+        if id(code, i) != Some("impl") || ctx.in_test(i) {
+            i += 1;
+            continue;
+        }
+        // Header runs from `impl` to the opening brace.
+        let mut open = i + 1;
+        while open < code.len() && !p(code, open, '{') && !p(code, open, ';') {
+            open += 1;
+        }
+        if !p(code, open, '{') {
+            i = open + 1;
+            continue;
+        }
+        // Trait position: the path segment directly before a `for` that
+        // is not a higher-ranked `for<'a>`.
+        let mut is_sync_strategy = false;
+        let mut type_name = String::new();
+        for j in i + 1..open {
+            if id(code, j) == Some("for")
+                && !p(code, j + 1, '<')
+                && id(code, j - 1) == Some("SyncStrategy")
+            {
+                is_sync_strategy = true;
+                for k in j + 1..open {
+                    if let Some(name) = id(code, k) {
+                        if name != "dyn" {
+                            type_name = name.to_string();
+                            break;
+                        }
+                    }
+                }
+                break;
+            }
+        }
+        if !is_sync_strategy {
+            i = open + 1;
+            continue;
+        }
+        // Collect method names defined at the impl's top level.
+        let mut depth = 1i64;
+        let mut methods: Vec<String> = Vec::new();
+        let mut j = open + 1;
+        while j < code.len() && depth > 0 {
+            match &code[j].kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => depth -= 1,
+                TokKind::Ident(s) if s == "fn" && depth == 1 => {
+                    if let Some(name) = id(code, j + 1) {
+                        methods.push(name.to_string());
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let has = |m: &str| methods.iter().any(|n| n == m);
+        if has("wire_cost") && !(has("encode_packed") && has("decode_packed")) {
+            diag(
+                diags,
+                "wire_honesty",
+                ctx,
+                code[i].line,
+                format!(
+                    "`impl SyncStrategy for {type_name}` overrides `wire_cost` but not both \
+                     `encode_packed` and `decode_packed` — it would claim packed bits the \
+                     default f32 packing never moves"
+                ),
+            );
+        }
+        i = j;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: lossy_cast
+// ---------------------------------------------------------------------
+
+/// `as` casts that can truncate or lose precision, where the source
+/// type is resolvable from local, explicit evidence (see module docs
+/// for the resolution rules — unresolvable sources are never flagged).
+pub fn lossy_cast(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    let fields = struct_fields(code);
+    for i in 0..code.len() {
+        if id(code, i) != Some("as") || ctx.in_test(i) {
+            continue;
+        }
+        let Some(dst) = id(code, i + 1).filter(|t| is_prim(t)) else {
+            continue; // `use x as y`, `as &dyn T`, …
+        };
+        let Some(src) = resolve_source(ctx, &fields, i) else {
+            continue;
+        };
+        if let Some(why) = lossiness(&src, dst) {
+            diag(
+                diags,
+                "lossy_cast",
+                ctx,
+                code[i].line,
+                format!("`{src} as {dst}` {why}"),
+            );
+        }
+    }
+}
+
+const PRIMS: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+    "f32", "f64",
+];
+
+fn is_prim(t: &str) -> bool {
+    PRIMS.contains(&t)
+}
+
+/// Integer width for truncation checks. `usize`/`isize` are treated as
+/// 64-bit as a *source* and 32-bit as a *target* — conservative in both
+/// directions, which is the point: `u64 as usize` truncates on 32-bit
+/// hosts, `usize as u32` truncates on 64-bit hosts, and `u32 as usize`
+/// is safe everywhere.
+fn int_width(t: &str, as_target: bool) -> Option<u32> {
+    Some(match t {
+        "u8" | "i8" => 8,
+        "u16" | "i16" => 16,
+        "u32" | "i32" => 32,
+        "u64" | "i64" => 64,
+        "u128" | "i128" => 128,
+        "usize" | "isize" => {
+            if as_target {
+                32
+            } else {
+                64
+            }
+        }
+        _ => return None,
+    })
+}
+
+/// Why `src as dst` is lossy, or `None` when it is not a concern.
+/// Float→int casts are never flagged: rounding is the quantization
+/// kernels' entire job and always intentional here.
+fn lossiness(src: &str, dst: &str) -> Option<&'static str> {
+    if src == dst {
+        return None;
+    }
+    if src == "f64" && dst == "f32" {
+        return Some("loses precision (f64 → f32)");
+    }
+    if src == "f32" || src == "f64" {
+        return None;
+    }
+    // Integer source from here on.
+    let sw = int_width(src, false)?;
+    if dst == "f64" {
+        // usize is excluded: `.len() as f64` in stats code is ubiquitous
+        // and lengths here are nowhere near 2^53.
+        return if matches!(src, "u64" | "i64" | "u128" | "i128") {
+            Some("loses precision above 2^53 (f64 mantissa)")
+        } else {
+            None
+        };
+    }
+    if dst == "f32" {
+        // usize is excluded for the same reason as the f64 arm: small
+        // index/length casts into f32 tensors are the dominant use.
+        return if sw > 24 && !matches!(src, "usize" | "isize") {
+            Some("loses precision above 2^24 (f32 mantissa)")
+        } else {
+            None
+        };
+    }
+    let dw = int_width(dst, true)?;
+    if sw > dw {
+        return if dst == "usize" || dst == "isize" {
+            Some("truncates on 32-bit targets")
+        } else if src == "usize" || src == "isize" {
+            Some("truncates on 64-bit hosts")
+        } else {
+            Some("truncates")
+        };
+    }
+    None
+}
+
+/// Struct fields declared in this file with primitive types:
+/// `field -> type`. A field name declared twice with conflicting types
+/// is dropped (ambiguous).
+fn struct_fields(code: &[Tok]) -> BTreeMap<String, String> {
+    let mut out: BTreeMap<String, String> = BTreeMap::new();
+    let mut ambiguous: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if id(code, i) != Some("struct") {
+            i += 1;
+            continue;
+        }
+        // Find the body brace; tuple structs `struct X(…);` and unit
+        // structs have none and are skipped.
+        let mut open = i + 1;
+        while open < code.len()
+            && !p(code, open, '{')
+            && !p(code, open, ';')
+            && !p(code, open, '(')
+        {
+            open += 1;
+        }
+        if !p(code, open, '{') {
+            i = open + 1;
+            continue;
+        }
+        let mut depth = 1i64;
+        let mut j = open + 1;
+        while j < code.len() && depth > 0 {
+            match &code[j].kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => depth -= 1,
+                TokKind::Ident(name) if depth == 1 => {
+                    if p(code, j + 1, ':')
+                        && !p(code, j + 2, ':')
+                        && id(code, j + 2).is_some_and(is_prim)
+                        && (p(code, j + 3, ',') || p(code, j + 3, '}'))
+                    {
+                        let ty = id(code, j + 2).unwrap_or_default().to_string();
+                        match out.get(name) {
+                            Some(prev) if prev != &ty => ambiguous.push(name.clone()),
+                            _ => {
+                                out.insert(name.clone(), ty);
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        i = j;
+    }
+    for name in ambiguous {
+        out.remove(&name);
+    }
+    out
+}
+
+/// Resolve the primitive type of the expression ending just before the
+/// `as` at token index `i`, using only local, explicit evidence.
+fn resolve_source(
+    ctx: &FileCtx,
+    fields: &BTreeMap<String, String>,
+    i: usize,
+) -> Option<String> {
+    let code = &ctx.code;
+    if i == 0 {
+        return None;
+    }
+    match &code[i - 1].kind {
+        // literal suffix: `0u64 as u32`, `1e-3f64 as f32`
+        TokKind::Literal(text) => literal_suffix(text),
+        TokKind::Ident(name) => {
+            // cast chain: `x as u64 as u32`
+            if is_prim(name) && id(code, i.wrapping_sub(2)) == Some("as") {
+                return Some(name.clone());
+            }
+            // field access: `self.acc as u8`, `w.nbits as usize`
+            if i >= 2 && p(code, i - 2, '.') {
+                return fields.get(name.as_str()).cloned();
+            }
+            lookup_binding(ctx, fields, name, i)
+        }
+        // parenthesized expression: `(bit_offset / 8) as usize`,
+        // `x.len() as f64`, `(man as f64 * p) as f32`
+        TokKind::Punct(')') => {
+            let open = matching_open(code, i - 1)?;
+            resolve_paren_group(ctx, fields, open, i - 1)
+        }
+        _ => None,
+    }
+}
+
+/// Type suffix of a numeric literal, if it has one. (Known lexer
+/// limitation: a suffix-less hex literal whose digits end in e.g.
+/// `f32` would be read as suffixed; no such literal exists here.)
+fn literal_suffix(text: &str) -> Option<String> {
+    if text.starts_with('"') || text.starts_with('\'') || text.starts_with('r')
+        || text.starts_with('b')
+    {
+        return None;
+    }
+    PRIMS.iter().find(|s| text.ends_with(*s)).map(|s| s.to_string())
+}
+
+/// Index of the `(` matching the `)` at `close`.
+fn matching_open(code: &[Tok], close: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for j in (0..=close).rev() {
+        if p(code, j, ')') {
+            depth += 1;
+        } else if p(code, j, '(') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Resolve a `( … )` group in `open+1..close`. Handles, in order:
+/// known method-call results (`.len()` → `usize`,
+/// `.leading_zeros()` → `u32`), a trailing inner cast (`(x as u64)`),
+/// and otherwise a flat integer expression over resolved variables,
+/// field accesses and unsuffixed literals — every identifier must
+/// resolve and all resolved types must agree, or the group is treated
+/// as unresolvable.
+fn resolve_paren_group(
+    ctx: &FileCtx,
+    fields: &BTreeMap<String, String>,
+    open: usize,
+    close: usize,
+) -> Option<String> {
+    let code = &ctx.code;
+    // Method call: `recv.len() as …` — the `(` is the argument list.
+    if open >= 2 && p(code, open - 2, '.') {
+        return match id(code, open - 1) {
+            Some("len") => Some("usize".to_string()),
+            Some("leading_zeros") | Some("trailing_zeros") | Some("count_ones")
+            | Some("count_zeros") => Some("u32".to_string()),
+            _ => None,
+        };
+    }
+    // Any other call `f(…) as …` is unresolvable.
+    if open >= 1 && id(code, open - 1).is_some() {
+        return None;
+    }
+    // Trailing inner cast: `(… as u64)`.
+    if close >= 2 && id(code, close - 2) == Some("as") {
+        let t = id(code, close - 1)?;
+        return is_prim(t).then(|| t.to_string());
+    }
+    // Flat expression walk.
+    let mut ty: Option<String> = None;
+    let mut j = open + 1;
+    while j < close {
+        match &code[j].kind {
+            TokKind::Ident(name) => {
+                if name == "as" {
+                    return None; // inner cast not in trailing position
+                }
+                let t = if p(code, j + 1, '.') {
+                    // only plain field access `a.b` (no call) resolves
+                    let f = id(code, j + 2)?;
+                    if p(code, j + 3, '(') {
+                        return None;
+                    }
+                    let t = fields.get(f).cloned()?;
+                    j += 2;
+                    t
+                } else if name == "self" {
+                    return None;
+                } else {
+                    lookup_binding(ctx, fields, name, j)?
+                };
+                match &ty {
+                    Some(prev) if prev != &t => return None,
+                    _ => ty = Some(t),
+                }
+            }
+            TokKind::Literal(text) => {
+                if let Some(t) = literal_suffix(text) {
+                    match &ty {
+                        Some(prev) if prev != &t => return None,
+                        _ => ty = Some(t),
+                    }
+                } else if text.contains('.') {
+                    return None; // unsuffixed float literal
+                }
+                // unsuffixed integer literals adopt the expression type
+            }
+            TokKind::Punct(c)
+                if matches!(c, '+' | '-' | '*' | '/' | '%' | '&' | '|' | '^' | '<' | '>') => {}
+            _ => return None,
+        }
+        j += 1;
+    }
+    ty
+}
+
+/// Find the latest explicit binding of `name` before token `at` inside
+/// the innermost enclosing function: a `let name: T`, a typed closure
+/// or fn parameter `name: T`, or a `const NAME: T` in the signature's
+/// generics. `self.field` is handled by the caller via the field table.
+fn lookup_binding(
+    ctx: &FileCtx,
+    _fields: &BTreeMap<String, String>,
+    name: &str,
+    at: usize,
+) -> Option<String> {
+    let code = &ctx.code;
+    let f = ctx.enclosing_fn(at)?;
+    let mut found: Option<String> = None;
+    // Parameters (and signature const generics): `name : prim` between
+    // the `fn` token and the body, not part of a `::` path.
+    for j in f.sig..f.body.start {
+        if id(code, j) == Some(name)
+            && p(code, j + 1, ':')
+            && !p(code, j + 2, ':')
+            && !p(code, j.wrapping_sub(1), ':')
+            && id(code, j + 2).is_some_and(is_prim)
+        {
+            found = Some(id(code, j + 2).unwrap_or_default().to_string());
+        }
+    }
+    // `let [mut] name : prim` and typed closure params inside the body,
+    // latest before `at` wins (shadowing).
+    for j in f.body.start..at.min(f.body.end) {
+        let is_let_binding = id(code, j) == Some("let")
+            && {
+                let mut k = j + 1;
+                if id(code, k) == Some("mut") {
+                    k += 1;
+                }
+                id(code, k) == Some(name) && p(code, k + 1, ':') && !p(code, k + 2, ':')
+                    && id(code, k + 2).is_some_and(is_prim)
+            };
+        if is_let_binding {
+            let mut k = j + 1;
+            if id(code, k) == Some("mut") {
+                k += 1;
+            }
+            found = Some(id(code, k + 2).unwrap_or_default().to_string());
+        }
+    }
+    found
+}
+
+// ---------------------------------------------------------------------
+// Rule: unsafe_code
+// ---------------------------------------------------------------------
+
+/// The crate is `unsafe`-free; keep it that way. Test code is exempt
+/// (the counting global allocator in `rust/tests` is unsafe by the
+/// nature of `GlobalAlloc`, and tests are outside the scan roots
+/// anyway).
+pub fn unsafe_code(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    for i in 0..ctx.code.len() {
+        if id(&ctx.code, i) == Some("unsafe") && !ctx.in_test(i) {
+            diag(
+                diags,
+                "unsafe_code",
+                ctx,
+                ctx.code[i].line,
+                "`unsafe` is banned: the crate is unsafe-free and pinned so".to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: panic_in_hot_path
+// ---------------------------------------------------------------------
+
+/// No hidden panics on the hot path: `.unwrap()`, `.expect(…)` and
+/// literal indexing (`xs[0]`). Explicit `assert!`s remain allowed —
+/// ragged-input panics are the documented conformance contract.
+pub fn panic_in_hot_path(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        if !ctx.in_hot_path(i) {
+            continue;
+        }
+        let line = code[i].line;
+        if p(code, i, '.') && p(code, i + 2, '(') {
+            match id(code, i + 1) {
+                Some("unwrap") => diag(
+                    diags,
+                    "panic_in_hot_path",
+                    ctx,
+                    line,
+                    "`.unwrap()` hides a panic on the hot path".to_string(),
+                ),
+                Some("expect") => diag(
+                    diags,
+                    "panic_in_hot_path",
+                    ctx,
+                    line,
+                    "`.expect(…)` hides a panic on the hot path".to_string(),
+                ),
+                _ => {}
+            }
+        }
+        // Literal indexing `recv[0]`: previous token must make this an
+        // index (identifier, `)`, or `]`), not an array literal `[0]`.
+        if p(code, i, '[')
+            && lit(code, i + 1).is_some_and(is_plain_int)
+            && p(code, i + 2, ']')
+            && i >= 1
+            && (id(code, i - 1).is_some() || p(code, i - 1, ')') || p(code, i - 1, ']'))
+        {
+            diag(
+                diags,
+                "panic_in_hot_path",
+                ctx,
+                line,
+                format!(
+                    "literal index `[{}]` can panic on the hot path; assert the shape once \
+                     and use checked access",
+                    lit(code, i + 1).unwrap_or_default()
+                ),
+            );
+        }
+    }
+}
+
+fn is_plain_int(text: &str) -> bool {
+    !text.is_empty() && text.chars().all(|c| c.is_ascii_digit() || c == '_')
+}
+
+// ---------------------------------------------------------------------
+// Rule: nondeterminism
+// ---------------------------------------------------------------------
+
+/// Encode/decode/fold paths must be reproducible: wire bytes and fold
+/// results may not depend on hash iteration order, the wall clock, or
+/// the host's thread count. `num_threads`/`available_parallelism`
+/// *calls* are flagged so each use carries a waiver explaining why it
+/// only affects scheduling, never values.
+pub fn nondeterminism(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.code;
+    for i in 0..code.len() {
+        if !ctx.in_nd_scope(i) {
+            continue;
+        }
+        let line = code[i].line;
+        match id(code, i) {
+            Some(name @ ("HashMap" | "HashSet")) => diag(
+                diags,
+                "nondeterminism",
+                ctx,
+                line,
+                format!(
+                    "`{name}` iteration order is nondeterministic; use `BTreeMap`/`BTreeSet` \
+                     or index-ordered vectors in encode/decode/fold paths"
+                ),
+            ),
+            Some(name @ ("Instant" | "SystemTime"))
+                if p(code, i + 1, ':')
+                    && p(code, i + 2, ':')
+                    && id(code, i + 3) == Some("now") =>
+            {
+                diag(
+                    diags,
+                    "nondeterminism",
+                    ctx,
+                    line,
+                    format!("`{name}::now()` makes encode/decode/fold results time-dependent"),
+                )
+            }
+            Some(name @ ("num_threads" | "available_parallelism")) if p(code, i + 1, '(') => {
+                diag(
+                    diags,
+                    "nondeterminism",
+                    ctx,
+                    line,
+                    format!(
+                        "`{name}()` in an encode/decode/fold path: results must be \
+                         bit-identical for any thread count — waive with the reason why \
+                         this only affects scheduling"
+                    ),
+                )
+            }
+            _ => {}
+        }
+    }
+}

@@ -100,6 +100,7 @@ impl SegmentationMetrics {
             if total == 0 {
                 continue;
             }
+            // apslint: allow(lossy_cast) -- example counts stay far below 2^53, so the f64 division is exact in its inputs
             sum += tp as f64 / total as f64;
             n += 1;
         }
@@ -185,12 +186,14 @@ impl ExpHistogram {
                 c += v;
             }
         }
+        // apslint: allow(lossy_cast) -- histogram element counts stay far below 2^53, so the f64 division is exact in its inputs
         c as f64 / nz as f64
     }
 
     /// Percentile exponent (0..=100) of the non-zero mass.
     pub fn percentile_exp(&self, pct: f64) -> i32 {
         let nz: u64 = self.counts.iter().sum::<u64>() + self.below + self.above;
+        // apslint: allow(lossy_cast) -- histogram element counts stay far below 2^53, so nz is exact in f64
         let target = (nz as f64 * pct / 100.0) as u64;
         let mut acc = self.below;
         if acc >= target {
@@ -202,6 +205,7 @@ impl ExpHistogram {
                 return self.min_exp + i as i32;
             }
         }
+        // apslint: allow(lossy_cast) -- the histogram has a fixed, small number of exponent bins (< 300), exact in i32
         self.min_exp + self.counts.len() as i32
     }
 

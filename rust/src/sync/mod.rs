@@ -389,6 +389,7 @@ impl SyncStrategy for Box<dyn SyncStrategy> {
 /// bit-identical to the pre-trait `aps::synchronize` epilogue (f64
 /// arithmetic, single rounding back to f32).
 pub(crate) fn unscale_in_place(xs: &mut [f32], factor_exp: i32, world: usize, average: bool) {
+    // apslint: allow(lossy_cast) -- factor_exp is a small FP exponent (|fe| < 2^15), so its negation is exact in i32
     let unscale = -(factor_exp as i64) as i32;
     let div = if average { world as f64 } else { 1.0 };
     let m = (unscale as f64).exp2() / div;

@@ -35,6 +35,7 @@ fn unit_draw(seed: u64, step: u64, worker: u64, layer: u64, elem: u64) -> f32 {
     let mut h = crate::cpd::cast::splitmix64(seed ^ step);
     h = crate::cpd::cast::splitmix64(h ^ (worker << 32) ^ layer);
     h = crate::cpd::cast::splitmix64(h ^ elem);
+    // apslint: allow(lossy_cast) -- exact: the shift keeps 24 bits, the f32 mantissa width; (1u64 << 24) is a power of two
     (h >> 40) as f32 / (1u64 << 24) as f32
 }
 

@@ -79,6 +79,37 @@ pub fn index_width(n: usize) -> u32 {
     (usize::BITS - n.saturating_sub(1).leading_zeros()).max(1)
 }
 
+/// Low byte of the bit accumulator — the one intentional 8-bit
+/// truncation at the heart of the LSB-first packer, kept in a named
+/// helper so the flush sites read as what they are.
+#[inline]
+fn low_byte(acc: u64) -> u8 {
+    // apslint: allow(lossy_cast) -- explicit low-byte extraction: exactly the 8 bits being flushed
+    (acc & 0xFF) as u8
+}
+
+/// Byte index of `bit_offset` within an in-memory buffer. Slices are
+/// bounded by `isize::MAX` bytes, so the quotient fits `usize` on every
+/// target (including 32-bit); the debug assert pins that contract
+/// instead of truncating silently.
+#[inline]
+fn byte_index(bit_offset: u64) -> usize {
+    let byte: u64 = bit_offset / 8;
+    debug_assert!(
+        usize::try_from(byte).is_ok(),
+        "bit offset {bit_offset} is beyond addressable memory"
+    );
+    // apslint: allow(lossy_cast) -- asserted above: byte index of an in-memory slice fits usize
+    byte as usize
+}
+
+/// Bit position of `bit_offset` within its byte (0..8).
+#[inline]
+fn bit_rem(bit_offset: u64) -> u32 {
+    // apslint: allow(lossy_cast) -- remainder mod 8 is < 8, exact in u32
+    (bit_offset % 8) as u32
+}
+
 /// Append-only bit packer over a byte buffer (LSB-first within bytes).
 pub struct BitWriter<'a> {
     buf: &'a mut Vec<u8>,
@@ -102,7 +133,7 @@ impl<'a> BitWriter<'a> {
         self.pending += width;
         self.bits += width as u64;
         while self.pending >= 8 {
-            self.buf.push(self.acc as u8);
+            self.buf.push(low_byte(self.acc));
             self.acc >>= 8;
             self.pending -= 8;
         }
@@ -116,7 +147,7 @@ impl<'a> BitWriter<'a> {
     /// Flush the final partial byte and return the total bits written.
     pub fn finish(self) -> u64 {
         if self.pending > 0 {
-            self.buf.push(self.acc as u8);
+            self.buf.push(low_byte(self.acc));
         }
         self.bits
     }
@@ -140,11 +171,11 @@ impl<'a> BitReader<'a> {
     pub fn at(bytes: &'a [u8], bit_offset: u64) -> Self {
         let mut r = BitReader {
             bytes,
-            pos: (bit_offset / 8) as usize,
+            pos: byte_index(bit_offset),
             acc: 0,
             avail: 0,
         };
-        let rem = (bit_offset % 8) as u32;
+        let rem = bit_rem(bit_offset);
         if rem > 0 && r.pos < bytes.len() {
             r.acc = (bytes[r.pos] as u64) >> rem;
             r.avail = 8 - rem;
@@ -254,6 +285,7 @@ impl PackedWire {
     /// Read metadata f32 `i` (panics when out of range).
     pub fn meta_f32(&self, i: usize) -> f32 {
         let b = i * 4;
+        // apslint: allow(panic_in_hot_path) -- try_into on a 4-byte slice is infallible; the slicing itself is the documented out-of-range panic
         f32::from_le_bytes(self.meta[b..b + 4].try_into().unwrap())
     }
 
@@ -261,11 +293,11 @@ impl PackedWire {
     /// (used by sparse binary search; reads past the end yield zeros).
     pub fn read_bits_at(&self, bit_offset: u64, width: u32) -> u32 {
         debug_assert!((1..=32).contains(&width));
-        let byte = (bit_offset / 8) as usize;
-        let sh = (bit_offset % 8) as u32;
+        let byte = byte_index(bit_offset);
+        let sh = bit_rem(bit_offset);
         let mut acc = 0u64;
         for (i, &b) in self.bytes.iter().skip(byte).take(8).enumerate() {
-            acc |= (b as u64) << (8 * i as u32);
+            acc |= (b as u64) << (8 * i);
         }
         ((acc >> sh) & ((1u64 << width) - 1)) as u32
     }
@@ -292,6 +324,7 @@ impl PackedWire {
         debug_assert_eq!(out.len(), range.len());
         for (k, o) in out.iter_mut().enumerate() {
             let b = (range.start + k) * 4;
+            // apslint: allow(panic_in_hot_path) -- try_into on a 4-byte slice is infallible; the slicing itself is the documented out-of-range panic
             *o = f32::from_le_bytes(self.bytes[b..b + 4].try_into().unwrap());
         }
     }

@@ -68,6 +68,7 @@ impl Measurement {
 
     /// Report with throughput derived from `bytes` processed per iter.
     pub fn report_throughput(&self, bytes: u64) -> String {
+        // apslint: allow(lossy_cast) -- bench byte counts stay far below 2^53; (1u64 << 30) is a power of two, exact in f64
         let gibs = bytes as f64 / self.median() / (1u64 << 30) as f64;
         format!("{}  [{:.2} GiB/s]", self.report(), gibs)
     }

@@ -78,6 +78,7 @@ impl Args {
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        // apslint: allow(lossy_cast) -- CLI defaults are small hand-written constants; flag parsing itself goes through usize
         Ok(self.get_usize(key, default as usize)? as u64)
     }
 

@@ -15,7 +15,25 @@ pub const PAR_THRESHOLD: usize = 16 * 1024;
 
 /// Run `f(chunk_start_index, chunk)` over disjoint chunks of `data` in
 /// parallel. Falls back to a single call when the slice is small.
+///
+/// Callers must be schedule-oblivious: `f` receives the chunk's absolute
+/// start index, and chunk boundaries only partition the iteration space —
+/// they must never change what is computed per element. Under that
+/// contract results are bit-identical for any thread count, which
+/// `tests/apslint_rules.rs` pins by permuting `max_threads` explicitly.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with(data, min_chunk, num_threads(), f)
+}
+
+/// [`par_chunks_mut`] with an explicit thread-count cap instead of the
+/// host's [`num_threads`]. This is the determinism test hook: running the
+/// same input at `max_threads` = 1, 2, and N exercises every chunking
+/// schedule a host could pick, so a test can assert the outputs are
+/// bit-identical without depending on the machine it runs on.
+pub fn par_chunks_mut_with<T: Send, F>(data: &mut [T], min_chunk: usize, max_threads: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -23,7 +41,7 @@ where
     if n == 0 {
         return;
     }
-    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    let threads = max_threads.min(n.div_ceil(min_chunk.max(1))).max(1);
     if threads == 1 {
         f(0, data);
         return;

@@ -1,0 +1,325 @@
+//! Tier-1: apslint rule semantics, waiver handling, and the whole-repo
+//! gate — plus the schedule-permutation determinism check that backs the
+//! `nondeterminism` waivers on `num_threads()` call sites.
+//!
+//! Each rule gets a fire / no-fire / waived fixture triple so a rule that
+//! silently stops matching (or starts over-matching) fails here before it
+//! fails in CI review. The whole-repo smoke runs the real binary's code
+//! path (`lint::run` + `Config::repo_default()`) and asserts the tree
+//! stays clean: zero unwaived diagnostics.
+
+use std::path::Path;
+
+use aps_cpd::lint::{self, check_source, Config, HotSpec, Severity};
+use aps_cpd::util::par;
+
+/// Config with one hot function `step` in files ending `sync/hot.rs`.
+fn hot_cfg() -> Config {
+    Config {
+        hot: vec![HotSpec {
+            file_suffix: "sync/hot.rs".to_string(),
+            functions: vec!["step".to_string()],
+        }],
+        nd_path_fragments: vec![],
+        nd_fn_prefixes: vec![],
+    }
+}
+
+/// Config with nd scope: `encode*` functions under `sync/`.
+fn nd_cfg() -> Config {
+    Config {
+        hot: vec![],
+        nd_path_fragments: vec!["sync/".to_string()],
+        nd_fn_prefixes: vec!["encode".to_string()],
+    }
+}
+
+fn fatal_rules(path: &str, src: &str, cfg: &Config) -> Vec<&'static str> {
+    check_source(path, src, cfg)
+        .iter()
+        .filter(|d| d.is_fatal())
+        .map(|d| d.rule)
+        .collect()
+}
+
+// ---- alloc_in_hot_path ------------------------------------------------
+
+#[test]
+fn alloc_fires_in_hot_fn() {
+    let src = "fn step() { let v: Vec<u8> = Vec::new(); drop(v); }\n";
+    assert_eq!(fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()), ["alloc_in_hot_path"]);
+}
+
+#[test]
+fn alloc_silent_outside_hot_fn() {
+    let src = "fn setup() { let v: Vec<u8> = Vec::new(); drop(v); }\n";
+    assert!(fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()).is_empty());
+}
+
+#[test]
+fn alloc_waiver_downgrades_to_waived() {
+    let src = "fn step() {\n\
+               // apslint: allow(alloc_in_hot_path) -- warmup only\n\
+               let v: Vec<u8> = Vec::new(); drop(v); }\n";
+    let diags = check_source("rust/src/sync/hot.rs", src, &hot_cfg());
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].rule, "alloc_in_hot_path");
+    assert_eq!(diags[0].waived.as_deref(), Some("warmup only"));
+    assert!(!diags[0].is_fatal());
+}
+
+#[test]
+fn alloc_ignores_test_code() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn step() { let v = vec![1u8]; drop(v); }\n}\n";
+    assert!(fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()).is_empty());
+}
+
+// ---- wire_honesty -----------------------------------------------------
+
+const DISHONEST_IMPL: &str = "\
+impl SyncStrategy for TopK {
+    fn wire_cost(&self, n: usize) -> u64 { n as u64 }
+    fn encode(&self, xs: &[f32]) -> Vec<f32> { xs.to_vec() }
+}
+";
+
+const HONEST_IMPL: &str = "\
+impl SyncStrategy for TopK {
+    fn wire_cost(&self, n: usize) -> u64 { n as u64 }
+    fn encode_packed(&self, xs: &[f32]) -> PackedWire { todo!() }
+    fn decode_packed(&self, w: &PackedWire, out: &mut [f32]) {}
+}
+";
+
+#[test]
+fn wire_honesty_fires_on_cost_without_packed_codec() {
+    let got = fatal_rules("rust/src/sync/custom.rs", DISHONEST_IMPL, &Config::empty());
+    assert_eq!(got, ["wire_honesty"]);
+}
+
+#[test]
+fn wire_honesty_silent_when_packed_codec_present() {
+    assert!(fatal_rules("rust/src/sync/custom.rs", HONEST_IMPL, &Config::empty()).is_empty());
+}
+
+#[test]
+fn wire_honesty_waivable() {
+    let src = "// apslint: allow(wire_honesty) -- prototype, dense-only by design\n\
+               impl SyncStrategy for TopK {\n\
+                   fn wire_cost(&self, n: usize) -> u64 { n as u64 }\n\
+               }\n";
+    let diags = check_source("rust/src/sync/custom.rs", src, &Config::empty());
+    assert_eq!(diags.len(), 1);
+    assert!(!diags[0].is_fatal());
+}
+
+// ---- lossy_cast -------------------------------------------------------
+
+#[test]
+fn lossy_cast_fires_on_narrowing() {
+    let src = "fn f(x: u64) -> u32 { x as u32 }\n";
+    assert_eq!(fatal_rules("rust/src/aps/mod.rs", src, &Config::empty()), ["lossy_cast"]);
+}
+
+#[test]
+fn lossy_cast_silent_on_widening() {
+    let src = "fn f(x: u32) -> u64 { x as u64 }\n";
+    assert!(fatal_rules("rust/src/aps/mod.rs", src, &Config::empty()).is_empty());
+}
+
+#[test]
+fn lossy_cast_silent_on_float_to_int_quantization() {
+    // Quantization is the repo's whole point; float → int is intentional.
+    let src = "fn f(x: f32) -> i8 { x as i8 }\n";
+    assert!(fatal_rules("rust/src/cpd/q.rs", src, &Config::empty()).is_empty());
+}
+
+#[test]
+fn lossy_cast_tracks_let_bindings_and_chains() {
+    let src = "fn f() { let x: u64 = big(); let y = x as u64 as u32; use_(y); }\n";
+    assert_eq!(fatal_rules("rust/src/aps/mod.rs", src, &Config::empty()), ["lossy_cast"]);
+}
+
+#[test]
+fn lossy_cast_waivable() {
+    let src = "fn f(x: u64) -> u32 {\n\
+               // apslint: allow(lossy_cast) -- bounded by modulus above\n\
+               x as u32 }\n";
+    let diags = check_source("rust/src/aps/mod.rs", src, &Config::empty());
+    assert_eq!(diags.len(), 1);
+    assert!(!diags[0].is_fatal());
+}
+
+// ---- unsafe_code ------------------------------------------------------
+
+#[test]
+fn unsafe_fires_anywhere_in_non_test_code() {
+    let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert_eq!(fatal_rules("rust/src/util/x.rs", src, &Config::empty()), ["unsafe_code"]);
+}
+
+#[test]
+fn unsafe_silent_in_test_mod() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *const u8) -> u8 { unsafe { *p } }\n}\n";
+    assert!(fatal_rules("rust/src/util/x.rs", src, &Config::empty()).is_empty());
+}
+
+#[test]
+fn unsafe_waivable() {
+    let src = "// apslint: allow(unsafe_code) -- FFI boundary, audited\n\
+               fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    let diags = check_source("rust/src/util/x.rs", src, &Config::empty());
+    assert_eq!(diags.len(), 1);
+    assert!(!diags[0].is_fatal());
+}
+
+// ---- panic_in_hot_path ------------------------------------------------
+
+#[test]
+fn panic_fires_on_unwrap_in_hot_fn() {
+    let src = "fn step(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    assert_eq!(
+        fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()),
+        ["panic_in_hot_path"]
+    );
+}
+
+#[test]
+fn panic_fires_on_literal_index_in_hot_fn() {
+    let src = "fn step(xs: &[u8]) -> u8 { xs[0] }\n";
+    assert_eq!(
+        fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()),
+        ["panic_in_hot_path"]
+    );
+}
+
+#[test]
+fn panic_silent_outside_hot_path() {
+    let src = "fn setup(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    assert!(fatal_rules("rust/src/sync/hot.rs", src, &hot_cfg()).is_empty());
+}
+
+#[test]
+fn panic_waivable() {
+    let src = "fn step(xs: &[u8]) -> u8 {\n\
+               // apslint: allow(panic_in_hot_path) -- length asserted by caller\n\
+               xs[0] }\n";
+    let diags = check_source("rust/src/sync/hot.rs", src, &hot_cfg());
+    assert_eq!(diags.len(), 1);
+    assert!(!diags[0].is_fatal());
+}
+
+// ---- nondeterminism ---------------------------------------------------
+
+#[test]
+fn nondeterminism_fires_on_hashmap_in_scope() {
+    let src = "fn encode_x() { let m: std::collections::HashMap<u8, u8> = Default::default(); drop(m); }\n";
+    assert_eq!(fatal_rules("rust/src/sync/s.rs", src, &nd_cfg()), ["nondeterminism"]);
+}
+
+#[test]
+fn nondeterminism_fires_on_thread_count_in_scope() {
+    let src = "fn encode_x(n: usize) -> usize { crate::util::par::num_threads().min(n) }\n";
+    assert_eq!(fatal_rules("rust/src/sync/s.rs", src, &nd_cfg()), ["nondeterminism"]);
+}
+
+#[test]
+fn nondeterminism_silent_outside_scope() {
+    // Same body, but the function name is not an nd prefix and the file
+    // is outside the nd path fragments.
+    let src = "fn report() { let m: std::collections::HashMap<u8, u8> = Default::default(); drop(m); }\n";
+    assert!(fatal_rules("rust/src/sync/s.rs", src, &nd_cfg()).is_empty());
+    let src2 = "fn encode_x() { let m: std::collections::HashMap<u8, u8> = Default::default(); drop(m); }\n";
+    assert!(fatal_rules("rust/src/metrics/s.rs", src2, &nd_cfg()).is_empty());
+}
+
+#[test]
+fn nondeterminism_waivable() {
+    let src = "fn encode_x(n: usize) -> usize {\n\
+               // apslint: allow(nondeterminism) -- schedule-only, results index-keyed\n\
+               crate::util::par::num_threads().min(n) }\n";
+    let diags = check_source("rust/src/sync/s.rs", src, &nd_cfg());
+    assert_eq!(diags.len(), 1);
+    assert!(!diags[0].is_fatal());
+}
+
+// ---- waiver syntax ----------------------------------------------------
+
+#[test]
+fn waiver_without_reason_is_error() {
+    let src = "// apslint: allow(unsafe_code)\nfn f() {}\n";
+    let diags = check_source("rust/src/util/x.rs", src, &Config::empty());
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].rule, "waiver_syntax");
+    assert!(diags[0].is_fatal());
+}
+
+#[test]
+fn waiver_with_unknown_rule_is_warning() {
+    let src = "// apslint: allow(no_such_rule) -- oops\nfn f() {}\n";
+    let diags = check_source("rust/src/util/x.rs", src, &Config::empty());
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].severity, Severity::Warning);
+    assert!(!diags[0].is_fatal());
+}
+
+#[test]
+fn doc_comments_never_carry_waivers() {
+    // Documentation *about* waivers (like the lint module's own docs)
+    // must not parse as waivers — or trip waiver_syntax.
+    let src = "/// Write `// apslint: allow(rule)` to waive.\nfn f() {}\n";
+    assert!(check_source("rust/src/util/x.rs", src, &Config::empty()).is_empty());
+}
+
+// ---- whole-repo smoke -------------------------------------------------
+
+/// The gate CI enforces: the tree, scanned with the repo config, has zero
+/// unwaived diagnostics (waivers with written reasons are fine).
+#[test]
+fn repo_is_clean_under_default_config() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::run(root, &Config::repo_default()).expect("scan repo");
+    assert!(report.files_scanned > 0, "scanner found no files — wrong root?");
+    let fatal: Vec<String> =
+        report.diagnostics.iter().filter(|d| d.is_fatal()).map(|d| d.render()).collect();
+    assert!(
+        report.ok(),
+        "unwaived apslint diagnostics:\n{}",
+        fatal.join("\n")
+    );
+}
+
+// ---- schedule permutation ---------------------------------------------
+
+/// Local splitmix64 (private copy; `cpd::cast::splitmix64` is pub(crate))
+/// so the per-element work below is keyed by absolute index alone.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The contract behind every `nondeterminism` waiver on a
+/// `num_threads()` site: chunking is schedule-only. Run the same
+/// index-keyed element kernel under 1, 2, and 8 threads and assert the
+/// outputs are bit-identical.
+#[test]
+fn par_chunks_schedule_is_bit_invariant() {
+    let n = 100_003; // prime: uneven chunks at every thread count
+    let kernel = |start: usize, chunk: &mut [f32]| {
+        for (i, x) in chunk.iter_mut().enumerate() {
+            let gi = (start + i) as u64;
+            // 24-bit draw → exact in f32, like the stochastic codecs.
+            *x = (splitmix64(gi) >> 40) as f32;
+        }
+    };
+    let mut runs: Vec<Vec<u32>> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let mut out = vec![0.0f32; n];
+        par::par_chunks_mut_with(&mut out, 64, threads, kernel);
+        runs.push(out.iter().map(|v| v.to_bits()).collect());
+    }
+    assert_eq!(runs[0], runs[1], "1 vs 2 threads diverged");
+    assert_eq!(runs[0], runs[2], "1 vs 8 threads diverged");
+}
