@@ -21,6 +21,11 @@
 //! also asserts the codec-accounting invariants, so a regression in any
 //! codec's traffic numbers fails the workflow rather than silently
 //! skewing EXPERIMENTS.md.
+//!
+//! A trailing section sweeps the parallel packed fold at 1/2/4/8 fold
+//! threads (ternary @ ring) for wall-clock scaling numbers, asserting
+//! the reduced gradients stay bit-identical across thread counts — the
+//! bench-side echo of `rust/tests/packed_parallel.rs`.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -164,6 +169,40 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- parallel packed fold scaling ------------------------------------
+    // Same hot path, explicit fold-thread caps: the split only regroups
+    // ring chunks onto threads, so outputs must not move by one bit while
+    // wall/step drops on multi-core hosts.
+    println!("\nparallel packed fold scaling (ternary @ ring):");
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for k in [1usize, 2, 4, 8] {
+        let mut session = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 42 })
+            .with_fold_threads(k)
+            .build();
+        let m = bench.run("fold", || {
+            let (reduced, report) = session.step(&grads);
+            (reduced[0][0], report.payload_bytes)
+        });
+        let reduced = session.reduced().to_vec();
+        match &baseline {
+            None => baseline = Some(reduced),
+            Some(base) => {
+                for (l, (a, b)) in base.iter().zip(reduced.iter()).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{k} fold threads layer {l} elem {i}: schedule-dependent result"
+                        );
+                    }
+                }
+            }
+        }
+        println!("  {k} fold thread(s): {} /step", fmt_secs(m.median()));
+    }
+
     support::shape_note();
     println!(
         "\n(bytes are per worker per step; fp32 baseline payload = {} KiB, packed wire = {} KiB)",

@@ -16,7 +16,7 @@
 //! across masters — the mechanism behind Tables 8 and 9.
 
 use super::{fold_step, ring, ReduceOptions, ReduceStats};
-use crate::sync::wire::PackedWire;
+use crate::sync::wire::{PackScratch, PackedWire};
 use crate::sync::{LayerCtx, SyncStrategy};
 use crate::util::par;
 
@@ -159,7 +159,8 @@ pub fn all_reduce_with_scratch(
 /// partials feed the ring directly, as in the dense path.
 ///
 /// `unpack` is caller-owned block scratch ([`crate::sync::PackScratch`]).
-/// Single-threaded, like [`ring::all_reduce_packed_into`].
+/// Single-threaded, like [`ring::all_reduce_packed_into`]; `Sync`-safe
+/// decoders take [`all_reduce_packed_with_scratch_par`] instead.
 #[allow(clippy::too_many_arguments)] // mirrors the dense signature + (strategy, ctx, unpack)
 pub fn all_reduce_packed_with_scratch(
     packed: &[PackedWire],
@@ -229,6 +230,144 @@ pub fn all_reduce_packed_with_scratch(
 
     // Identical traffic accounting to the dense path (reports must stay
     // bit-identical across wire modes).
+    let elt_bytes = ring::wire_bytes(opts) as u64;
+    let master_bytes =
+        2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;
+    ReduceStats {
+        bytes_per_worker: master_bytes,
+        steps: 4 * (group_size - 1) + 2 * (num_groups.saturating_sub(1)),
+    }
+}
+
+/// Parallel twin of [`all_reduce_packed_with_scratch`] for `Sync`-safe
+/// decoders (obtained through [`SyncStrategy::parallel_decoder`]): phase
+/// 1's per-group master folds are distributed over worker threads as
+/// contiguous group runs by the fixed-split schedule of
+/// [`par::par_chunks_mut_with_scratch`], each thread folding its groups
+/// with a private unpack block ([`PackScratch::chunks`], session-owned).
+/// A group's whole rank-order fold chain stays on one thread, so results
+/// are bit-identical to the single-threaded fold for any thread count
+/// (`rust/tests/packed_parallel.rs` pins 1/2/4/8). Phase 2 (the masters'
+/// dense ring) is shared with the single-threaded path unchanged.
+///
+/// Thread count: `pack.max_threads` (`0` = auto by tensor size and host
+/// parallelism; explicit values are honored exactly — the test hook).
+/// One thread delegates to the single-threaded fold.
+#[allow(clippy::too_many_arguments)] // mirrors the single-threaded signature with PackScratch in place of the raw unpack block
+pub fn all_reduce_packed_with_scratch_par(
+    packed: &[PackedWire],
+    group_size: usize,
+    strategy: &(dyn SyncStrategy + Sync),
+    ctx: &LayerCtx,
+    out: &mut [f32],
+    opts: ReduceOptions,
+    scratch: &mut HierScratch,
+    pack: &mut PackScratch,
+) -> ReduceStats {
+    let p = packed.len();
+    let n = out.len();
+    assert!(group_size >= 1, "group size must be positive");
+    assert!(
+        p % group_size == 0,
+        "world size {p} not divisible by group size {group_size}"
+    );
+    let num_groups = p / group_size;
+    let threads = match pack.max_threads {
+        0 if n * p < par::PAR_THRESHOLD => 1,
+        // apslint: allow(nondeterminism) -- thread count only selects how groups are assigned to threads; each group's rank-order fold chain is fixed, so results are bit-identical for any count (pinned by the rust/tests/packed_parallel.rs schedule-permutation suite)
+        0 => par::num_threads().min(num_groups).max(1),
+        k => k.min(num_groups),
+    };
+    if threads == 1 {
+        return all_reduce_packed_with_scratch(
+            packed,
+            group_size,
+            strategy,
+            ctx,
+            out,
+            opts,
+            scratch,
+            &mut pack.chunk,
+        );
+    }
+
+    // apslint: allow(alloc_in_hot_path) -- grows only on topology change (empty Vec::new never allocates); steady state reuses the scratch, as pinned by rust/tests/session_alloc.rs
+    scratch.partials.resize_with(num_groups, Vec::new);
+    if pack.chunks.len() < threads {
+        // apslint: allow(alloc_in_hot_path) -- per-thread unpack blocks grow on the first parallel fold only; steady state reuses them, as pinned by rust/tests/session_alloc.rs
+        pack.chunks.resize_with(threads, Vec::new);
+    }
+
+    // Phase 1: per-group master folds, each group wholly on one thread.
+    par::par_chunks_mut_with_scratch(
+        &mut scratch.partials,
+        &mut pack.chunks[..threads],
+        1,
+        threads,
+        |g0, groups, unpack| {
+            unpack.clear();
+            // apslint: allow(alloc_in_hot_path) -- grows each thread's unpack block to FOLD_BLOCK on the first parallel fold; steady state reuses it, as pinned by rust/tests/session_alloc.rs
+            unpack.resize(super::FOLD_BLOCK, 0.0);
+            let mut comp = [0.0f32; super::FOLD_BLOCK];
+            for (gi, acc) in groups.iter_mut().enumerate() {
+                let base = (g0 + gi) * group_size;
+                acc.clear();
+                // apslint: allow(alloc_in_hot_path) -- grows a group partial to the largest tensor seen, then reuses it; steady state pinned by rust/tests/session_alloc.rs
+                acc.resize(n, 0.0);
+                let mut b0 = 0usize;
+                while b0 < n {
+                    let b1 = (b0 + super::FOLD_BLOCK).min(n);
+                    let blk = &mut acc[b0..b1];
+                    strategy.decode_packed(&packed[base], ctx, b0..b1, blk);
+                    let seg = &mut unpack[..b1 - b0];
+                    if opts.kahan {
+                        let comp = &mut comp[..blk.len()];
+                        comp.fill(0.0);
+                        for r in 1..group_size {
+                            strategy.decode_packed(&packed[base + r], ctx, b0..b1, seg);
+                            for i in 0..blk.len() {
+                                fold_step(
+                                    &mut blk[i],
+                                    &mut comp[i],
+                                    seg[i],
+                                    opts.fmt,
+                                    opts.mode,
+                                    true,
+                                );
+                            }
+                        }
+                    } else {
+                        let mut dummy = 0.0f32;
+                        for r in 1..group_size {
+                            strategy.decode_packed(&packed[base + r], ctx, b0..b1, seg);
+                            for i in 0..blk.len() {
+                                fold_step(
+                                    &mut blk[i],
+                                    &mut dummy,
+                                    seg[i],
+                                    opts.fmt,
+                                    opts.mode,
+                                    false,
+                                );
+                            }
+                        }
+                    }
+                    b0 = b1;
+                }
+            }
+        },
+    );
+
+    // Phase 2: ring all-reduce across the dense master partials — the
+    // same code path the single-threaded and simulated wires take.
+    let ring_stats = if num_groups > 1 {
+        ring::all_reduce_into(&scratch.partials, out, opts)
+    } else {
+        // apslint: allow(panic_in_hot_path) -- num_groups >= 1 is guaranteed by the divisibility assert above, so partials[0] exists
+        out.copy_from_slice(&scratch.partials[0]);
+        ReduceStats::default()
+    };
+
     let elt_bytes = ring::wire_bytes(opts) as u64;
     let master_bytes =
         2 * (group_size as u64 - 1) * n as u64 * elt_bytes + ring_stats.bytes_per_worker;

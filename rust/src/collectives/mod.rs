@@ -204,7 +204,18 @@ impl Collective for RingCollective {
             strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
             return ReduceStats::default();
         }
-        ring::all_reduce_packed_into(packed, strategy, ctx, out, *opts, &mut scratch.chunk)
+        // Codecs with a Sync-safe decoder take the parallel fold (which
+        // itself degrades to the single-threaded one at one thread);
+        // everything else keeps the single-threaded path. Bit-identical
+        // either way — rust/tests/packed_parallel.rs pins it.
+        match strategy.parallel_decoder() {
+            Some(sync_strategy) => {
+                ring::all_reduce_packed_into_par(packed, sync_strategy, ctx, out, *opts, scratch)
+            }
+            None => {
+                ring::all_reduce_packed_into(packed, strategy, ctx, out, *opts, &mut scratch.chunk)
+            }
+        }
     }
 }
 
@@ -281,16 +292,30 @@ impl Collective for HierarchicalCollective {
             strategy.decode_packed(&packed[0], ctx, 0..out.len(), out);
             return ReduceStats::default();
         }
-        hierarchical::all_reduce_packed_with_scratch(
-            packed,
-            self.group_size,
-            strategy,
-            ctx,
-            out,
-            *opts,
-            &mut self.scratch.borrow_mut(),
-            &mut scratch.chunk,
-        )
+        // Same dispatch as the ring: Sync-safe decoders take the
+        // parallel phase-1 fold, others the single-threaded one.
+        match strategy.parallel_decoder() {
+            Some(sync_strategy) => hierarchical::all_reduce_packed_with_scratch_par(
+                packed,
+                self.group_size,
+                sync_strategy,
+                ctx,
+                out,
+                *opts,
+                &mut self.scratch.borrow_mut(),
+                scratch,
+            ),
+            None => hierarchical::all_reduce_packed_with_scratch(
+                packed,
+                self.group_size,
+                strategy,
+                ctx,
+                out,
+                *opts,
+                &mut self.scratch.borrow_mut(),
+                &mut scratch.chunk,
+            ),
+        }
     }
 }
 

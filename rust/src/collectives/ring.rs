@@ -14,7 +14,7 @@
 //! moves finished chunks without further arithmetic.
 
 use super::{fold_step, ReduceOptions, ReduceStats};
-use crate::sync::wire::PackedWire;
+use crate::sync::wire::{PackScratch, PackedWire};
 use crate::sync::{LayerCtx, SyncStrategy};
 use crate::util::par;
 
@@ -148,9 +148,11 @@ pub fn all_reduce_into(
 /// [`crate::sync::PackScratch::chunk`]); it grows to `FOLD_BLOCK`
 /// elements once and stays.
 ///
-/// Runs single-threaded: the packed fold is bandwidth-bound by design
-/// (that is the point), and `decode_packed` takes `&dyn` without a
-/// `Sync` bound. Parallelizing it is a ROADMAP item.
+/// Runs single-threaded; codecs whose `decode_packed` is `Sync`-safe
+/// opt into [`all_reduce_packed_into_par`] via
+/// [`SyncStrategy::parallel_decoder`], which splits the same fold over
+/// chunk boundaries (bit-identical results — each chunk's fold chain is
+/// untouched).
 pub fn all_reduce_packed_into(
     packed: &[PackedWire],
     strategy: &dyn SyncStrategy,
@@ -206,6 +208,127 @@ pub fn all_reduce_packed_into(
     // stay bit-identical across wire modes (payload_bytes deliberately
     // keeps the dense simulation figure; the packed figure is
     // `SyncReport::wire` / `SyncSession::wire_moved`).
+    let elt_bytes = wire_bytes(opts);
+    let moved = 2 * (p as u64 - 1) * (n as u64) / p as u64;
+    ReduceStats { bytes_per_worker: moved * elt_bytes as u64, steps: 2 * (p - 1) }
+}
+
+/// Parallel twin of [`all_reduce_packed_into`] for `Sync`-safe decoders
+/// (obtained through [`SyncStrategy::parallel_decoder`]): the `p` ring
+/// chunks are distributed over worker threads as contiguous index runs
+/// by the fixed-split schedule of
+/// [`par::par_chunks_mut_with_scratch`], each thread folding its chunks
+/// with a private unpack block ([`PackScratch::chunks`], session-owned,
+/// so the zero-steady-state-allocation pin holds). Chunk boundaries only
+/// partition the iteration space — every element's fold chain (start
+/// worker, order, operand precision, Kahan compensation) is exactly that
+/// of the single-threaded fold, so results are bit-identical for any
+/// thread count; `rust/tests/packed_parallel.rs` pins this at 1/2/4/8
+/// threads for every shipped codec.
+///
+/// Thread count: `scratch.max_threads` (`0` = auto by tensor size and
+/// host parallelism; explicit values are honored exactly — the test
+/// hook). One thread delegates to the single-threaded fold.
+pub fn all_reduce_packed_into_par(
+    packed: &[PackedWire],
+    strategy: &(dyn SyncStrategy + Sync),
+    ctx: &LayerCtx,
+    out: &mut [f32],
+    opts: ReduceOptions,
+    scratch: &mut PackScratch,
+) -> ReduceStats {
+    let p = packed.len();
+    let n = out.len();
+    debug_assert!(p >= 2, "single-worker reduces are handled by the caller");
+    let threads = match scratch.max_threads {
+        0 if n * p < par::PAR_THRESHOLD => 1,
+        // apslint: allow(nondeterminism) -- thread count only selects how ring chunks are grouped onto threads; each chunk's fold chain is fixed, so results are bit-identical for any count (pinned by the rust/tests/packed_parallel.rs schedule-permutation suite)
+        0 => par::num_threads().min(p).max(1),
+        k => k.min(p),
+    };
+    if threads == 1 {
+        return all_reduce_packed_into(packed, strategy, ctx, out, opts, &mut scratch.chunk);
+    }
+
+    // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping, not element storage; within the steady-state budget pinned by rust/tests/session_alloc.rs
+    let bounds: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
+    // apslint: allow(alloc_in_hot_path) -- O(p) pointer bookkeeping, not element storage; within the steady-state budget pinned by rust/tests/session_alloc.rs
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(p);
+    let mut rest = out;
+    for c in 0..p {
+        let (head, tail) = rest.split_at_mut(bounds[c + 1] - bounds[c]);
+        slices.push(head);
+        rest = tail;
+    }
+    if scratch.chunks.len() < threads {
+        // apslint: allow(alloc_in_hot_path) -- per-thread unpack blocks grow on the first parallel fold only; steady state reuses them, as pinned by rust/tests/session_alloc.rs
+        scratch.chunks.resize_with(threads, Vec::new);
+    }
+
+    par::par_chunks_mut_with_scratch(
+        &mut slices,
+        &mut scratch.chunks[..threads],
+        1,
+        threads,
+        |c0, chunks, unpack| {
+            unpack.clear();
+            // apslint: allow(alloc_in_hot_path) -- grows each thread's unpack block to FOLD_BLOCK on the first parallel fold; steady state reuses it, as pinned by rust/tests/session_alloc.rs
+            unpack.resize(super::FOLD_BLOCK, 0.0);
+            let mut comp = [0.0f32; super::FOLD_BLOCK];
+            for (k, chunk) in chunks.iter_mut().enumerate() {
+                let c = c0 + k;
+                let lo = bounds[c];
+                if chunk.is_empty() {
+                    continue;
+                }
+                // Exactly the single-threaded chunk fold.
+                let start = (c + 1) % p;
+                let mut b0 = 0usize;
+                while b0 < chunk.len() {
+                    let b1 = (b0 + super::FOLD_BLOCK).min(chunk.len());
+                    let blk = &mut chunk[b0..b1];
+                    strategy.decode_packed(&packed[start], ctx, lo + b0..lo + b1, blk);
+                    let seg = &mut unpack[..b1 - b0];
+                    if opts.kahan {
+                        let comp = &mut comp[..blk.len()];
+                        comp.fill(0.0);
+                        for s in 1..p {
+                            let w = (start + s) % p;
+                            strategy.decode_packed(&packed[w], ctx, lo + b0..lo + b1, seg);
+                            for i in 0..blk.len() {
+                                fold_step(
+                                    &mut blk[i],
+                                    &mut comp[i],
+                                    seg[i],
+                                    opts.fmt,
+                                    opts.mode,
+                                    true,
+                                );
+                            }
+                        }
+                    } else {
+                        let mut dummy = 0.0f32;
+                        for s in 1..p {
+                            let w = (start + s) % p;
+                            strategy.decode_packed(&packed[w], ctx, lo + b0..lo + b1, seg);
+                            for i in 0..blk.len() {
+                                fold_step(
+                                    &mut blk[i],
+                                    &mut dummy,
+                                    seg[i],
+                                    opts.fmt,
+                                    opts.mode,
+                                    false,
+                                );
+                            }
+                        }
+                    }
+                    b0 = b1;
+                }
+            }
+        },
+    );
+
     let elt_bytes = wire_bytes(opts);
     let moved = 2 * (p as u64 - 1) * (n as u64) / p as u64;
     ReduceStats { bytes_per_worker: moved * elt_bytes as u64, steps: 2 * (p - 1) }

@@ -166,11 +166,16 @@ impl Config {
                     "sync/wire.rs",
                     &[
                         "put",
+                        "put_many",
                         "finish",
                         "at",
                         "read",
+                        "read_many",
                         "read_bits_at",
+                        "read_bits_at_many",
+                        "unpack_bits_into",
                         "low_byte",
+                        "low_word",
                         "byte_index",
                         "bit_rem",
                         "pack_format_bits",
@@ -183,11 +188,23 @@ impl Config {
                         "push_meta_f32",
                     ],
                 ),
-                // Collective fold kernels.
-                hot("collectives/ring.rs", &["all_reduce_into", "all_reduce_packed_into"]),
+                // Collective fold kernels (single-threaded and parallel
+                // packed entry points alike).
+                hot(
+                    "collectives/ring.rs",
+                    &[
+                        "all_reduce_into",
+                        "all_reduce_packed_into",
+                        "all_reduce_packed_into_par",
+                    ],
+                ),
                 hot(
                     "collectives/hierarchical.rs",
-                    &["all_reduce_with_scratch", "all_reduce_packed_with_scratch"],
+                    &[
+                        "all_reduce_with_scratch",
+                        "all_reduce_packed_with_scratch",
+                        "all_reduce_packed_with_scratch_par",
+                    ],
                 ),
                 hot(
                     "collectives/mod.rs",

@@ -201,6 +201,13 @@ impl<S: SyncStrategy> SyncStrategy for ErrorFeedback<S> {
     ) {
         self.inner.decode_packed(packed, ctx, range, out)
     }
+    /// Forward the inner codec's opt-in: this wrapper's `decode_packed`
+    /// is a pure forward to the inner one, so parallel decode is safe
+    /// exactly when the inner codec says it is. (The inner reference is
+    /// returned directly — residual state never participates in decode.)
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        self.inner.parallel_decoder()
+    }
 }
 
 #[cfg(test)]

@@ -73,7 +73,7 @@ pub use strategies::{
     ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, QsgdStrategy, TernaryStrategy,
     TopKStrategy,
 };
-pub use wire::{BitReader, BitWriter, PackScratch, PackedWire, WireMode};
+pub use wire::{unpack_bits_into, BitReader, BitWriter, PackScratch, PackedWire, WireMode};
 
 use crate::aps::SyncMethod;
 use crate::collectives::{Collective, ReduceStats};
@@ -342,6 +342,21 @@ pub trait SyncStrategy {
         let _ = ctx;
         packed.unpack_raw_f32(range, out);
     }
+
+    /// Opt into the parallel packed fold: return `Some(self)` when this
+    /// strategy's [`SyncStrategy::decode_packed`] may be called from
+    /// multiple threads concurrently (it is `&self`-pure and the type is
+    /// `Sync`). The collectives then split the fold across chunk
+    /// boundaries — fold order within each element's chain is unchanged,
+    /// so results stay bit-identical to the single-threaded path
+    /// (`rust/tests/packed_parallel.rs` pins this at 1/2/4/8 threads).
+    ///
+    /// The default is `None`: third-party codecs keep the
+    /// single-threaded fold unless they explicitly opt in. All built-in
+    /// strategies opt in.
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        None
+    }
 }
 
 /// Forwarding impl so boxed strategies compose (e.g.
@@ -382,6 +397,9 @@ impl SyncStrategy for Box<dyn SyncStrategy> {
         out: &mut [f32],
     ) {
         (**self).decode_packed(packed, ctx, range, out)
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        (**self).parallel_decoder()
     }
 }
 

@@ -48,6 +48,7 @@ pub struct SyncSessionBuilder {
     fused: bool,
     error_feedback: bool,
     wire: WireMode,
+    fold_threads: usize,
 }
 
 impl SyncSessionBuilder {
@@ -68,6 +69,7 @@ impl SyncSessionBuilder {
             fused: false,
             error_feedback: false,
             wire: WireMode::default(),
+            fold_threads: 0,
         }
     }
 
@@ -151,6 +153,18 @@ impl SyncSessionBuilder {
         self
     }
 
+    /// Cap the packed-fold thread count: `0` (default) sizes the pool
+    /// automatically (single-threaded below the parallel threshold), any
+    /// explicit `k` is honored exactly — `1` forces the single-threaded
+    /// fold, `k > 1` forces a `k`-way split even on small layers. Results
+    /// are bit-identical for every value (the split only regroups whole
+    /// ring chunks / hierarchical groups onto threads; each element's fold
+    /// chain is unchanged — pinned by `rust/tests/packed_parallel.rs`).
+    pub fn with_fold_threads(mut self, k: usize) -> Self {
+        self.fold_threads = k;
+        self
+    }
+
     pub fn build(self) -> SyncSession {
         let world = self.world;
         let collective =
@@ -180,7 +194,7 @@ impl SyncSessionBuilder {
             wire: Vec::new(),
             stage: Vec::new(),
             packed: Vec::new(),
-            pack_scratch: PackScratch::default(),
+            pack_scratch: PackScratch { max_threads: self.fold_threads, ..PackScratch::default() },
             moved: None,
             reduced: Vec::new(),
             report: SyncReport::default(),

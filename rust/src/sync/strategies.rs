@@ -68,6 +68,9 @@ impl SyncStrategy for Fp32Strategy {
     ) {
         wire::unpack_cast_range(packed, ctx, range, out);
     }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
+    }
 }
 
 /// Cast to the low-precision wire format with no scaling (the paper's
@@ -107,6 +110,9 @@ impl SyncStrategy for NaiveStrategy {
         out: &mut [f32],
     ) {
         wire::unpack_cast_range(packed, ctx, range, out);
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 
@@ -157,6 +163,9 @@ impl SyncStrategy for LossScalingStrategy {
         out: &mut [f32],
     ) {
         wire::unpack_cast_range(packed, ctx, range, out);
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 
@@ -227,6 +236,9 @@ impl SyncStrategy for ApsStrategy {
         out: &mut [f32],
     ) {
         wire::unpack_cast_range(packed, ctx, range, out);
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 
@@ -382,14 +394,26 @@ impl SyncStrategy for TernaryStrategy {
         debug_assert_eq!(packed.tag(), wire::TAG_TERNARY);
         // The same scale expression encode used — bit-identical symbols.
         let s = crate::aps::ldexp_f32(1.0, ctx.factor_exp);
-        let mut r = BitReader::at(packed.bytes(), range.start as u64 * 2);
-        for o in out.iter_mut() {
-            *o = match r.read(2) {
-                0 => 0.0,
-                1 => s,
-                _ => -s,
-            };
+        // Bulk multi-word extraction of the 2-bit symbols in
+        // stack-resident batches (no allocation) — bit-identical to the
+        // scalar BitReader loop this replaced.
+        let mut codes = [0u32; 128];
+        let mut off = range.start as u64 * 2;
+        for blk in out.chunks_mut(codes.len()) {
+            let codes = &mut codes[..blk.len()];
+            packed.read_bits_at_many(off, 2, codes);
+            for (o, &code) in blk.iter_mut().zip(codes.iter()) {
+                *o = match code {
+                    0 => 0.0,
+                    1 => s,
+                    _ => -s,
+                };
+            }
+            off += blk.len() as u64 * 2;
         }
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 
@@ -525,6 +549,9 @@ impl SyncStrategy for TopKStrategy {
             }
             out[idx - range.start] = f32::from_bits(packed.read_bits_at(vbase + j * 32, 32));
         }
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 
@@ -727,6 +754,9 @@ impl SyncStrategy for QsgdStrategy {
             let v = (code & lvl_mask) as f32 * unit_scale;
             *o = if code >> (bits - 1) == 1 { -v } else { v };
         }
+    }
+    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+        Some(self)
     }
 }
 

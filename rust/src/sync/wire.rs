@@ -110,6 +110,58 @@ fn bit_rem(bit_offset: u64) -> u32 {
     (bit_offset % 8) as u32
 }
 
+/// Low 32 bits of the bit accumulator — [`low_byte`]'s word-at-a-time
+/// sibling for the bulk flush in [`BitWriter::put_many`].
+#[inline]
+fn low_word(acc: u64) -> u32 {
+    // apslint: allow(lossy_cast) -- explicit low-word extraction: exactly the 32 bits being flushed
+    (acc & 0xFFFF_FFFF) as u32
+}
+
+/// Bulk ranged unpack: extract `out.len()` consecutive `width`-bit codes
+/// starting at `bit_offset` of `bytes`. Bit-identical to a
+/// [`BitReader::at`] + [`BitReader::read`] loop over the same buffer
+/// (reads past the end yield zero bits), but refills the accumulator
+/// four bytes at a time (`u32::from_le_bytes`), so the inner loop is one
+/// word load + shift/mask per element for widths ≤ 32 — the
+/// SIMD-friendly shape the 2-bit ternary and `FpFormat`-width decodes
+/// want. Pinned against the scalar loop by the bit-kernel property
+/// tests in `rust/tests/packed_parallel.rs`.
+pub fn unpack_bits_into(bytes: &[u8], bit_offset: u64, width: u32, out: &mut [u32]) {
+    debug_assert!((1..=32).contains(&width));
+    let mut pos = byte_index(bit_offset);
+    let mut acc: u64 = 0;
+    let mut avail: u32 = 0;
+    let rem = bit_rem(bit_offset);
+    if rem > 0 && pos < bytes.len() {
+        acc = (bytes[pos] as u64) >> rem;
+        avail = 8 - rem;
+        pos += 1;
+    }
+    let mask = (1u64 << width) - 1;
+    for o in out.iter_mut() {
+        // Refill: `avail < width ≤ 32` implies the word gulp always
+        // fits the 64-bit accumulator; the byte path only runs within
+        // four bytes of the buffer's end.
+        while avail < width && pos < bytes.len() {
+            if pos + 4 <= bytes.len() {
+                // apslint: allow(panic_in_hot_path) -- try_into on a 4-byte slice is infallible; bounds checked one line up
+                let w = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+                acc |= (w as u64) << avail;
+                pos += 4;
+                avail += 32;
+            } else {
+                acc |= (bytes[pos] as u64) << avail;
+                pos += 1;
+                avail += 8;
+            }
+        }
+        *o = (acc & mask) as u32;
+        acc >>= width;
+        avail = avail.saturating_sub(width);
+    }
+}
+
 /// Append-only bit packer over a byte buffer (LSB-first within bytes).
 pub struct BitWriter<'a> {
     buf: &'a mut Vec<u8>,
@@ -132,6 +184,35 @@ impl<'a> BitWriter<'a> {
         self.acc |= (value as u64) << self.pending;
         self.pending += width;
         self.bits += width as u64;
+        while self.pending >= 8 {
+            self.buf.push(low_byte(self.acc));
+            self.acc >>= 8;
+            self.pending -= 8;
+        }
+    }
+
+    /// Append the low `width` bits of each value (width in 1..=32),
+    /// flushing the accumulator a 32-bit word at a time. Produces the
+    /// exact byte stream of a [`Self::put`] loop — flush granularity
+    /// never changes the LSB-first bit stream — and leaves the writer in
+    /// a `put`/[`Self::finish`]-compatible state (< 8 pending bits), so
+    /// bulk and scalar appends mix freely.
+    pub fn put_many(&mut self, values: &[u32], width: u32) {
+        debug_assert!((1..=32).contains(&width));
+        for &v in values {
+            debug_assert!(width == 32 || v >> width == 0, "value wider than {width} bits");
+            // `pending < 32` on entry to each iteration (the word flush
+            // below restores it), so the shifted value fits the u64
+            // accumulator exactly.
+            self.acc |= (v as u64) << self.pending;
+            self.pending += width;
+            self.bits += width as u64;
+            while self.pending >= 32 {
+                self.buf.extend_from_slice(&low_word(self.acc).to_le_bytes());
+                self.acc >>= 32;
+                self.pending -= 32;
+            }
+        }
         while self.pending >= 8 {
             self.buf.push(low_byte(self.acc));
             self.acc >>= 8;
@@ -199,6 +280,30 @@ impl<'a> BitReader<'a> {
         self.acc >>= width;
         self.avail = self.avail.saturating_sub(width);
         v
+    }
+
+    /// Bulk read of `out.len()` consecutive `width`-bit codes — the
+    /// multi-word counterpart of a [`Self::read`] loop, bit-identical to
+    /// it, delegating to [`unpack_bits_into`]. Afterwards the reader is
+    /// positioned exactly past the codes read, so scalar and bulk reads
+    /// mix freely.
+    #[inline]
+    pub fn read_many(&mut self, width: u32, out: &mut [u32]) {
+        debug_assert!((1..=32).contains(&width));
+        // The accumulator's `avail` bits are the stream bits immediately
+        // preceding byte `pos`, so the logical cursor is:
+        let start = self.pos as u64 * 8 - self.avail as u64;
+        unpack_bits_into(self.bytes, start, width, out);
+        let next = start + out.len() as u64 * width as u64;
+        self.pos = byte_index(next).min(self.bytes.len());
+        self.acc = 0;
+        self.avail = 0;
+        let rem = bit_rem(next);
+        if rem > 0 && self.pos < self.bytes.len() {
+            self.acc = (self.bytes[self.pos] as u64) >> rem;
+            self.avail = 8 - rem;
+            self.pos += 1;
+        }
     }
 }
 
@@ -302,6 +407,13 @@ impl PackedWire {
         ((acc >> sh) & ((1u64 << width) - 1)) as u32
     }
 
+    /// Bulk ranged unpack: `out.len()` consecutive `width`-bit codes
+    /// starting at `bit_offset` — bit-identical to a [`Self::read_bits_at`]
+    /// stride loop, via the multi-word [`unpack_bits_into`] kernel.
+    pub fn read_bits_at_many(&self, bit_offset: u64, width: u32, out: &mut [u32]) {
+        unpack_bits_into(&self.bytes, bit_offset, width, out);
+    }
+
     // ---- built-in representations -----------------------------------
 
     /// The universal fallback: raw little-endian f32 lanes. Exact for
@@ -342,21 +454,28 @@ impl PackedWire {
         encode_bits_slice_into(encoded, fmt, mode, &mut codes);
         let width = fmt.total_bits();
         let mut w = BitWriter::new(&mut self.bytes);
-        for &c in &codes {
-            w.put(c, width);
-        }
+        w.put_many(&codes, width);
         self.value_bits = w.finish();
         self.codes = codes;
     }
 
-    /// Unpack `range` of a [`Self::pack_format_bits`] buffer.
+    /// Unpack `range` of a [`Self::pack_format_bits`] buffer. Codes are
+    /// extracted through the multi-word [`unpack_bits_into`] kernel in
+    /// stack-resident batches (no allocation), then decoded — the exact
+    /// values a scalar [`BitReader`] loop would produce.
     pub fn unpack_format_bits(&self, fmt: FpFormat, range: Range<usize>, out: &mut [f32]) {
         debug_assert_eq!(self.tag, TAG_FMT_BITS);
         debug_assert_eq!(out.len(), range.len());
         let width = fmt.total_bits();
-        let mut r = BitReader::at(&self.bytes, range.start as u64 * width as u64);
-        for o in out.iter_mut() {
-            *o = decode_bits(r.read(width), fmt);
+        let mut codes = [0u32; 64];
+        let mut off = range.start as u64 * width as u64;
+        for blk in out.chunks_mut(codes.len()) {
+            let codes = &mut codes[..blk.len()];
+            unpack_bits_into(&self.bytes, off, width, codes);
+            for (o, &c) in blk.iter_mut().zip(codes.iter()) {
+                *o = decode_bits(c, fmt);
+            }
+            off += blk.len() as u64 * width as u64;
         }
     }
 }
@@ -395,6 +514,20 @@ pub(crate) fn unpack_cast_range(
 pub struct PackScratch {
     /// One unpack block (`collectives::FOLD_BLOCK` elements once warm).
     pub chunk: Vec<f32>,
+    /// Per-thread unpack blocks for the parallel packed fold, one slot
+    /// per worker thread. Session-owned (grown on first parallel fold,
+    /// reused every step after) so the zero-steady-state-allocation pin
+    /// extends to the parallel path.
+    pub chunks: Vec<Vec<f32>>,
+    /// Thread-count cap for the parallel packed fold. `0` (the default)
+    /// auto-selects: [`crate::util::par::num_threads`] capped by the
+    /// tensor size against [`crate::util::par::PAR_THRESHOLD`]. Any
+    /// explicit value is honored exactly — `1` forces the
+    /// single-threaded fold, `k > 1` forces a `k`-way split regardless
+    /// of size, which is the determinism test hook
+    /// (`rust/tests/packed_parallel.rs` permutes it and asserts
+    /// bit-identical results).
+    pub max_threads: usize,
     /// Dense per-worker staging for collectives without a packed fold.
     pub dense: Vec<Vec<f32>>,
 }
@@ -511,6 +644,66 @@ mod tests {
             for (k, o) in seg.iter().enumerate() {
                 assert_eq!(o.to_bits(), q[13 + k].to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn put_many_matches_put_loop_and_mixes_with_scalar() {
+        for width in 1..=32u32 {
+            let mut rng = Rng::new(4000 + width as u64);
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let vals: Vec<u32> = (0..133).map(|_| rng.next_u64() as u32 & mask).collect();
+            let mut scalar = Vec::new();
+            let mut w = BitWriter::new(&mut scalar);
+            for &v in &vals {
+                w.put(v, width);
+            }
+            let scalar_bits = w.finish();
+            let mut bulk = Vec::new();
+            let mut w = BitWriter::new(&mut bulk);
+            // Mix scalar and bulk appends: prefix scalar, middle bulk,
+            // suffix scalar — the byte stream must not care.
+            w.put(vals[0], width);
+            w.put_many(&vals[1..vals.len() - 1], width);
+            w.put(vals[vals.len() - 1], width);
+            assert_eq!(w.finish(), scalar_bits, "width {width}");
+            assert_eq!(bulk, scalar, "width {width}");
+        }
+    }
+
+    #[test]
+    fn bulk_unpack_matches_scalar_readers() {
+        // Fixed-width streams at every width, read back four ways.
+        for width in 1..=32u32 {
+            let mut rng = Rng::new(9000 + width as u64);
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let vals: Vec<u32> = (0..157).map(|_| rng.next_u64() as u32 & mask).collect();
+            let mut buf = Vec::new();
+            let mut w = BitWriter::new(&mut buf);
+            w.put_many(&vals, width);
+            w.finish();
+            // Bulk from offset 0, from a mid offset, and past the end.
+            for start in [0usize, 1, 57, 150, 157] {
+                let off = start as u64 * width as u64;
+                let mut bulk = vec![0u32; vals.len() + 8 - start];
+                unpack_bits_into(&buf, off, width, &mut bulk);
+                let mut r = BitReader::at(&buf, off);
+                for (k, &b) in bulk.iter().enumerate() {
+                    assert_eq!(b, r.read(width), "width {width} start {start} elem {k}");
+                    if start + k < vals.len() {
+                        assert_eq!(b, vals[start + k]);
+                    } else {
+                        assert_eq!(b, 0, "past-end reads must yield zeros");
+                    }
+                }
+            }
+            // read_many interleaved with scalar reads stays in sync.
+            let mut r = BitReader::new(&buf);
+            let mut out = vec![0u32; 40];
+            assert_eq!(r.read(width), vals[0]);
+            r.read_many(width, &mut out);
+            assert_eq!(out, vals[1..41], "width {width}");
+            assert_eq!(r.read(width), vals[41], "width {width}");
         }
     }
 

@@ -64,6 +64,61 @@ where
     });
 }
 
+/// [`par_chunks_mut_with`] plus a per-thread scratch slot: the k-th
+/// spawned chunk runs with exclusive access to `scratch[k]`. The data
+/// split (thread count, chunk size, chunk order) is computed with
+/// exactly the same arithmetic as [`par_chunks_mut_with`], so the two
+/// share one schedule and the same schedule-obliviousness contract:
+/// `f` may use its scratch slot as workspace, but what it writes into
+/// `data` must depend only on the chunk's contents and absolute start
+/// index. `scratch` must hold at least `max_threads.max(1)` slots
+/// (callers size it once and reuse it; this function never allocates).
+pub fn par_chunks_mut_with_scratch<T: Send, S: Send, F>(
+    data: &mut [T],
+    scratch: &mut [S],
+    min_chunk: usize,
+    max_threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = max_threads.min(n.div_ceil(min_chunk.max(1))).max(1);
+    assert!(
+        scratch.len() >= threads,
+        "par_chunks_mut_with_scratch: {} scratch slots for {} threads",
+        scratch.len(),
+        threads
+    );
+    if threads == 1 {
+        f(0, data, &mut scratch[0]);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut slots = scratch;
+        let mut start = 0usize;
+        for _ in 0..threads {
+            if rest.is_empty() {
+                break;
+            }
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let (slot, slot_tail) = slots.split_at_mut(1);
+            let slot = &mut slot[0];
+            let fref = &f;
+            s.spawn(move || fref(start, head, slot));
+            start += take;
+            rest = tail;
+            slots = slot_tail;
+        }
+    });
+}
+
 /// Parallel map over an index range, collecting results in order.
 pub fn par_map<T: Send, F>(count: usize, f: F) -> Vec<T>
 where
@@ -108,6 +163,50 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn scratch_variant_matches_plain_split() {
+        // Same input, same (min_chunk, max_threads) → the scratch
+        // variant must see exactly the chunks the plain variant sees.
+        for &(n, min_chunk, max_threads) in
+            &[(100_000usize, 1024usize, 8usize), (10, 1024, 8), (7, 1, 3), (8, 1, 3), (0, 4, 4)]
+        {
+            let mut plain: Vec<(usize, usize)> = Vec::new();
+            let mut v = vec![0u8; n];
+            {
+                let log = std::sync::Mutex::new(&mut plain);
+                par_chunks_mut_with(&mut v, min_chunk, max_threads, |start, c| {
+                    log.lock().unwrap().push((start, c.len()));
+                });
+            }
+            let mut with_scratch: Vec<(usize, usize, usize)> = Vec::new();
+            let mut scratch: Vec<usize> = (0..max_threads).collect();
+            {
+                let log = std::sync::Mutex::new(&mut with_scratch);
+                par_chunks_mut_with_scratch(
+                    &mut v,
+                    &mut scratch,
+                    min_chunk,
+                    max_threads,
+                    |start, c, slot| {
+                        log.lock().unwrap().push((start, c.len(), *slot));
+                    },
+                );
+            }
+            plain.sort_unstable();
+            with_scratch.sort_unstable();
+            assert_eq!(plain.len(), with_scratch.len(), "n={n}");
+            let mut slots_seen = Vec::new();
+            for (p, w) in plain.iter().zip(&with_scratch) {
+                assert_eq!((p.0, p.1), (w.0, w.1), "n={n}");
+                slots_seen.push(w.2);
+            }
+            // Each spawned chunk got a distinct scratch slot.
+            slots_seen.sort_unstable();
+            slots_seen.dedup();
+            assert_eq!(slots_seen.len(), with_scratch.len(), "n={n}: scratch slot reused");
+        }
     }
 
     #[test]

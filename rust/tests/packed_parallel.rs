@@ -1,0 +1,296 @@
+//! The parallel packed-fold suite: parallelism may repartition the
+//! iteration space, never the arithmetic.
+//!
+//! * **schedule independence** — for every conformance codec (the same
+//!   11 the codec contract covers), sessions running the packed fold at
+//!   1/2/4/8 fold threads (and the auto setting) produce bit-identical
+//!   reduced gradients, `SyncReport`s and measured wire traffic to the
+//!   single-threaded packed path and the simulated path, on hostile
+//!   `nasty_f32` inputs, across worlds 1/2/4/8 and both collectives.
+//!   Explicit `with_fold_threads(k > 1)` forces a k-way split even on
+//!   layers below the parallel threshold, so the permutation coverage is
+//!   real on every layer shape here, including 9-element tails.
+//! * **multi-word bit kernels** — deterministic property/fuzz tests
+//!   (SplitMix64-seeded `data::Rng` width sequences over 1..=32, offsets
+//!   straddling word boundaries) pinning `BitWriter::put_many`,
+//!   `BitReader::read_many`, `PackedWire::read_bits_at_many` and the
+//!   free `unpack_bits_into` kernel to their scalar `put`/`read`/
+//!   `read_bits_at` equivalents, byte-for-byte and bit-for-bit —
+//!   including reads past the end of the stream, which yield zeros
+//!   exactly like the scalar reader.
+//!
+//! The `nondeterminism` waivers on the auto thread-count arms in
+//! `collectives/ring.rs` and `collectives/hierarchical.rs` cite this
+//! suite as their evidence.
+
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{
+    unpack_bits_into, BitReader, BitWriter, PackedWire, StrategySpec, SyncSessionBuilder,
+    WireMode,
+};
+use aps_cpd::util::ptest::generators;
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+/// The same 11-codec family the conformance contract pins.
+fn specs() -> Vec<(&'static str, StrategySpec)> {
+    vec![
+        ("fp32", StrategySpec::Fp32),
+        ("naive/e5m2", StrategySpec::Naive { fmt: FpFormat::E5M2 }),
+        (
+            "loss_scaling/e5m2",
+            StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        ),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ternary", StrategySpec::Ternary { seed: 9 }),
+        ("topk@0.25", StrategySpec::TopK { frac: 0.25 }),
+        ("qsgd b4/32", StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 }),
+        ("ef:ternary", ef(StrategySpec::Ternary { seed: 9 })),
+        ("ef:topk", ef(StrategySpec::TopK { frac: 0.25 })),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 })),
+    ]
+}
+
+/// Hostile per-worker gradients from the shared `nasty_f32` stream.
+fn nasty_grads(rng: &mut Rng, world: usize, layers: &[usize]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|_| {
+            layers
+                .iter()
+                .map(|&n| (0..n).map(|_| generators::nasty_f32(rng)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// One (world, topology) cell of the schedule-permutation matrix: run
+/// the single-threaded packed session, the simulated session, and one
+/// packed session per fold-thread setting in lockstep, asserting every
+/// step's reduced gradients, reports and measured traffic agree
+/// bit-for-bit.
+fn check_schedule_cell(label: &str, spec: &StrategySpec, world: usize, topo: Topology) {
+    // One layer large enough that every world size splits it across
+    // multiple ring chunks per thread, plus small and odd tails.
+    let layers = [33usize, 4096, 9];
+    let mut rng = Rng::new(0x9A11E1 ^ world as u64 ^ label.len() as u64);
+    let build = |threads: Option<usize>, wire: WireMode| {
+        let mut b = SyncSessionBuilder::new(world).spec(spec.clone()).with_topology(topo);
+        if let Some(k) = threads {
+            b = b.with_fold_threads(k);
+        }
+        b.with_wire(wire).build()
+    };
+    let mut base = build(Some(1), WireMode::Packed);
+    let mut sim = build(None, WireMode::Simulated);
+    // 0 = auto sizing; 2/4/8 = forced splits (distinct schedules even on
+    // the 9-element layer).
+    let fold_threads = [0usize, 2, 4, 8];
+    let mut par: Vec<_> =
+        fold_threads.iter().map(|&k| build(Some(k), WireMode::Packed)).collect();
+    for step in 0..2 {
+        let grads = nasty_grads(&mut rng, world, &layers);
+        let (bo, br) = base.step(&grads);
+        let bo = bo.to_vec();
+        let br = br.clone();
+        let bm = base.wire_moved();
+        let (so, sr) = sim.step(&grads);
+        for (l, (a, b)) in bo.iter().zip(so.iter()).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                     packed(1 thread) {x:e} vs simulated {y:e}"
+                );
+            }
+        }
+        assert_eq!(&br, sr, "{label}/{topo:?} w{world} step {step}: packed vs simulated report");
+        for (session, &k) in par.iter_mut().zip(fold_threads.iter()) {
+            let (po, pr) = session.step(&grads);
+            let po = po.to_vec();
+            let pr = pr.clone();
+            for (l, (a, b)) in po.iter().zip(bo.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                         {k} fold threads {x:e} vs single-threaded {y:e}"
+                    );
+                }
+            }
+            assert_eq!(
+                pr, br,
+                "{label}/{topo:?} w{world} step {step}: report diverged at {k} fold threads"
+            );
+            assert_eq!(
+                session.wire_moved(),
+                bm,
+                "{label}/{topo:?} w{world} step {step}: moved traffic diverged at {k} fold threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_ring_fold_is_schedule_independent_for_every_strategy() {
+    for (label, spec) in &specs() {
+        for world in [1usize, 2, 4, 8] {
+            check_schedule_cell(label, spec, world, Topology::Ring);
+        }
+    }
+}
+
+#[test]
+fn parallel_hierarchical_fold_is_schedule_independent_for_every_strategy() {
+    for (label, spec) in &specs() {
+        for (world, group_size) in [(2usize, 2usize), (4, 2), (8, 4), (8, 2)] {
+            check_schedule_cell(label, spec, world, Topology::Hierarchical { group_size });
+        }
+    }
+}
+
+/// Random (width, values) blocks for the bit-kernel fuzz tests.
+fn random_blocks(rng: &mut Rng, blocks: usize, max_len: usize) -> Vec<(u32, Vec<u32>)> {
+    (0..blocks)
+        .map(|_| {
+            let width = 1 + rng.below(32) as u32;
+            let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+            let len = rng.below(max_len + 1);
+            let vals = (0..len).map(|_| rng.next_u64() as u32 & mask).collect();
+            (width, vals)
+        })
+        .collect()
+}
+
+#[test]
+fn put_many_is_bytewise_identical_to_scalar_put_on_random_width_sequences() {
+    let mut rng = Rng::new(0x5EED_B175);
+    for case in 0..40 {
+        let blocks = random_blocks(&mut rng, 12, 67);
+        // Reference stream: every value written with scalar `put`.
+        let mut scalar_buf = Vec::new();
+        let mut w = BitWriter::new(&mut scalar_buf);
+        for (width, vals) in &blocks {
+            for &v in vals {
+                w.put(v, *width);
+            }
+        }
+        let scalar_bits = w.finish();
+        // Bulk stream: each block split at a random point — scalar
+        // prefix, `put_many` suffix — so bulk writes start at arbitrary
+        // pending-bit phases, straddling word boundaries.
+        let mut bulk_buf = Vec::new();
+        let mut w = BitWriter::new(&mut bulk_buf);
+        for (width, vals) in &blocks {
+            let split = rng.below(vals.len() + 1);
+            for &v in &vals[..split] {
+                w.put(v, *width);
+            }
+            w.put_many(&vals[split..], *width);
+        }
+        let bulk_bits = w.finish();
+        assert_eq!(bulk_bits, scalar_bits, "case {case}: bit counts diverged");
+        assert_eq!(bulk_buf, scalar_buf, "case {case}: byte streams diverged");
+
+        // Read the stream back with `read_many`, each block again split
+        // between scalar reads and one bulk read, staying in sync with
+        // the scalar cursor.
+        let mut r = BitReader::new(&bulk_buf);
+        for (bi, (width, vals)) in blocks.iter().enumerate() {
+            let split = rng.below(vals.len() + 1);
+            for (i, &v) in vals[..split].iter().enumerate() {
+                assert_eq!(r.read(*width), v, "case {case} block {bi} scalar elem {i}");
+            }
+            let mut out = vec![0u32; vals.len() - split];
+            r.read_many(*width, &mut out);
+            assert_eq!(out[..], vals[split..], "case {case} block {bi} bulk tail");
+        }
+    }
+}
+
+#[test]
+fn unpack_bits_into_matches_scalar_reads_at_word_straddling_offsets() {
+    let mut rng = Rng::new(0x0FF_5E75);
+    for width in 1..=32u32 {
+        let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let vals: Vec<u32> = (0..157).map(|_| rng.next_u64() as u32 & mask).collect();
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        for &v in &vals {
+            w.put(v, width);
+        }
+        let total_bits = w.finish();
+        // Bit offsets chosen to straddle byte and 32-bit word boundaries,
+        // plus element-aligned starts including one fully past the end.
+        let raw_offsets = [0u64, 1, 7, 8, 15, 31, 32, 33, 63, 64, 65, 127, 129];
+        let elem_offsets =
+            [0u64, 1, 57, 150, 157].map(|e| e * width as u64);
+        for &off in raw_offsets.iter().chain(elem_offsets.iter()) {
+            if off > total_bits + 64 {
+                continue;
+            }
+            for take in [0usize, 1, 40, 157] {
+                let mut bulk = vec![0xDEAD_BEEFu32; take];
+                unpack_bits_into(&buf, off, width, &mut bulk);
+                let mut r = BitReader::at(&buf, off);
+                for (i, &b) in bulk.iter().enumerate() {
+                    let s = r.read(width);
+                    assert_eq!(
+                        b, s,
+                        "width {width} offset {off} elem {i}: bulk {b:#x} vs scalar {s:#x}"
+                    );
+                }
+            }
+        }
+        // Fully past the end: the kernel reads zeros, like the scalar
+        // reader.
+        let mut past = vec![u32::MAX; 8];
+        unpack_bits_into(&buf, total_bits, width, &mut past);
+        let tail_bits = (buf.len() as u64 * 8).saturating_sub(total_bits);
+        let mut r = BitReader::at(&buf, total_bits);
+        for (i, &b) in past.iter().enumerate() {
+            assert_eq!(b, r.read(width), "width {width} past-end elem {i}");
+            if i as u64 * width as u64 >= tail_bits {
+                assert_eq!(b, 0, "width {width} past-end elem {i} must be zero");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_wire_bulk_ranged_unpack_matches_scalar_read_bits_at() {
+    let mut rng = Rng::new(0xCAB1E);
+    for width in [2u32, 3, 5, 8, 13, 19, 32] {
+        let mask = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+        let vals: Vec<u32> = (0..311).map(|_| rng.next_u64() as u32 & mask).collect();
+        let mut pw = PackedWire::default();
+        pw.reset(16, vals.len());
+        {
+            let mut w = BitWriter::new(pw.bytes_mut());
+            for &v in &vals {
+                w.put(v, width);
+            }
+            w.finish();
+        }
+        for start in [0usize, 1, 17, 128, 310, 311] {
+            let take = (vals.len() - start).min(97);
+            let off = start as u64 * width as u64;
+            let mut bulk = vec![0u32; take];
+            pw.read_bits_at_many(off, width, &mut bulk);
+            for (i, &b) in bulk.iter().enumerate() {
+                let s = pw.read_bits_at(off + i as u64 * width as u64, width);
+                assert_eq!(
+                    b, s,
+                    "width {width} start {start} elem {i}: bulk {b:#x} vs read_bits_at {s:#x}"
+                );
+                assert_eq!(b, vals[start + i], "width {width} start {start} elem {i} roundtrip");
+            }
+        }
+    }
+}

@@ -16,9 +16,14 @@
 //! one gradient tensor.
 //!
 //! Everything runs inside a single `#[test]` so no concurrently-running
-//! test can pollute the counter. Tensor sizes are kept below the
-//! parallelism threshold so the collectives stay single-threaded (thread
-//! spawns would otherwise dominate the counter).
+//! test can pollute the counter. The single-threaded cases keep tensor
+//! sizes below the parallelism threshold so the collectives spawn no
+//! threads; the parallel packed-fold cases at the end run
+//! `with_fold_threads(4)` on a larger model under a budget that admits
+//! per-step thread-spawn bookkeeping (`std::thread` allocates a few
+//! hundred bytes per spawn) but stays far below one element buffer —
+//! pinning that the per-thread unpack chunks are session-owned, not
+//! re-allocated per step.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -170,5 +175,36 @@ fn steady_state_steps_allocate_no_element_storage() {
             .build(),
         &layers,
         budget,
+    );
+
+    // Parallel packed fold, both collectives: with `with_fold_threads(4)`
+    // every layer takes the parallel entry points, so the measured window
+    // covers the per-thread unpack chunks and (hierarchical) per-group
+    // partials. Those are session-owned and warm after the warmup steps;
+    // the only per-step allocation left is thread-spawn bookkeeping
+    // (~12 spawns/step here) plus the waived O(world) slice vectors. The
+    // budget sits above that but far below the 80 KB head layer — a
+    // per-step re-allocation of the 4 KiB-per-thread unpack chunks alone
+    // (4 threads x 3 layers x 4 steps) would blow it several times over.
+    let par_layers = [20_000usize, 512, 96];
+    let par_budget = 48 * 1024;
+    assert_steady_state(
+        "ring/aps parallel-fold",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_fold_threads(4)
+            .build(),
+        &par_layers,
+        par_budget,
+    );
+    assert_steady_state(
+        "hierarchical/ternary parallel-fold",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 5 })
+            .with_fold_threads(4)
+            .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &par_layers,
+        par_budget,
     );
 }
