@@ -1,12 +1,19 @@
 //! Fig 11 — gradient-synchronization time: FP16 all-reduce vs APS 8-bit
 //! (two-phase), per layer and lazily fused, on 32 workers.
 //!
-//! Two complementary measurements:
+//! Three complementary measurements:
 //! 1. the α–β analytic model calibrated to the paper's V100/NCCL testbed
 //!    (reproduces the figure's absolute scale and the 1.33× fused win);
 //! 2. measured wall-clock of this repository's actual simulated pipeline
 //!    (quantize + emulated all-reduce) for the same tensors, to show the
-//!    emulation cost structure.
+//!    emulation cost structure;
+//! 3. the bucketed overlapped pipeline (`step_overlapped`): α–β predicted
+//!    time for the honest bytes each bucket ships vs measured wall-clock,
+//!    per codec × transport × bucket size. The emulation pays compute
+//!    where a real wire pays bandwidth, so the two columns are printed
+//!    side by side as evidence, not gated against each other; what *is*
+//!    asserted is that honest bytes and reduced bits are invariant to the
+//!    transport and the bucketing.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -14,6 +21,7 @@ mod support;
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
 use aps_cpd::perfmodel::{fig11_layers, fig11_table, NetworkModel};
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, TransportSpec};
 use aps_cpd::util::bench::Bench;
 use aps_cpd::util::table::Table;
 
@@ -93,4 +101,115 @@ fn main() {
     }
     t.print();
     println!("\n(the emulated low-precision reduction pays the per-element cast —\n a real wire would pay bandwidth instead; see perfmodel for that side)");
+
+    // ---- (3) overlapped pipeline: predicted vs measured ---------------
+    println!("\noverlapped sync (step_overlapped): α–β predicted vs measured wall-clock");
+    println!("(4 sim workers, fig11 layers at 1/64 scale; predicted prices each");
+    println!(" bucket's honest bytes on the v100 ring — side-by-side evidence,");
+    println!(" not a gated ratio, since the emulation pays compute not bandwidth):\n");
+
+    let world = 4usize;
+    let layers: Vec<usize> =
+        fig11_layers().iter().map(|l| (l.elements / 64) as usize).collect();
+    let grads: Vec<Vec<Vec<f32>>> = (0..world)
+        .map(|w| {
+            layers
+                .iter()
+                .enumerate()
+                .map(|(l, &n)| {
+                    (0..n)
+                        .map(|i| ((w * 131 + l * 31 + i) % 19) as f32 * 0.25 - 2.0)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    // Backprop completion order: last layer's gradient lands first.
+    let ready_order: Vec<usize> = (0..layers.len()).rev().collect();
+    let codecs: [(&str, StrategySpec); 2] = [
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("ternary", StrategySpec::Ternary { seed: 42 }),
+    ];
+    let transports =
+        [TransportSpec::InProcess, TransportSpec::SharedMem, TransportSpec::Tcp];
+    let bucket_cfgs: [(&str, usize); 3] =
+        [("per-layer", 1), ("auto", 0), ("whole-model", 1 << 30)];
+    let model = NetworkModel::v100_nccl();
+    let ob = Bench { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+
+    let mut t = Table::new(&[
+        "codec",
+        "transport",
+        "bucketing",
+        "buckets",
+        "honest KB/wkr",
+        "α–β pred ms",
+        "measured ms",
+    ]);
+    for (cname, spec) in &codecs {
+        // Synchronous reference: the bits and honest bytes every
+        // overlapped configuration must reproduce exactly.
+        let mut sync = SyncSessionBuilder::new(world).spec(spec.clone()).build();
+        let (ref_out, ref_report) = sync.step(&grads);
+        let ref_bits: Vec<Vec<u32>> =
+            ref_out.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect();
+        let ref_honest = ref_report.honest_bytes();
+
+        for &transport in &transports {
+            for &(bname, bucket_bytes) in &bucket_cfgs {
+                let mut s = SyncSessionBuilder::new(world)
+                    .spec(spec.clone())
+                    .with_transport(transport)
+                    .with_bucket_bytes(bucket_bytes)
+                    .build();
+                let (out, report) =
+                    s.step_overlapped(&grads, &ready_order).expect("overlapped step");
+                for (l, (rl, ol)) in ref_bits.iter().zip(out.iter()).enumerate() {
+                    for (i, (&rb, &o)) in rl.iter().zip(ol.iter()).enumerate() {
+                        assert_eq!(
+                            rb,
+                            o.to_bits(),
+                            "{cname}@{}/{bname} layer {l} elem {i}: overlapped bits diverge",
+                            transport.name()
+                        );
+                    }
+                }
+                assert_eq!(
+                    report.honest_bytes(),
+                    ref_honest,
+                    "{cname}@{}/{bname}: honest bytes must not depend on transport or bucketing",
+                    transport.name()
+                );
+                let covered: usize = report.buckets.iter().map(|b| b.layers).sum();
+                assert_eq!(covered, layers.len(), "{cname}: every layer in exactly one bucket");
+                // Price each bucket's per-worker share of its honest
+                // octets on the calibrated ring; buckets are summed (the
+                // α terms are what fusing amortizes away).
+                let predicted_ms: f64 = report
+                    .buckets
+                    .iter()
+                    .map(|b| {
+                        model.allreduce_time(Topology::Ring, world, b.bytes / world as u64)
+                    })
+                    .sum::<f64>()
+                    * 1e3;
+                let n_buckets = report.buckets.len();
+                let honest_kb = report.honest_bytes() as f64 / 1024.0;
+                let m = ob.run("overlap", || {
+                    s.step_overlapped(&grads, &ready_order).expect("overlapped step");
+                });
+                t.row(&[
+                    cname.to_string(),
+                    transport.name().to_string(),
+                    bname.to_string(),
+                    format!("{n_buckets}"),
+                    format!("{honest_kb:.1}"),
+                    format!("{predicted_ms:.3}"),
+                    format!("{:.3}", m.median() * 1e3),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\n(honest bytes and reduced bits verified invariant across all\n transport × bucket-size configurations ✔)");
 }

@@ -18,7 +18,7 @@ mod support;
 use aps_cpd::aps::{SyncMethod, SyncOptions};
 use aps_cpd::collectives::{ReduceOptions, SimCluster, Topology};
 use aps_cpd::cpd::{quantize_shifted_slice, FpFormat, Rounding};
-use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, WireMode};
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, TransportSpec, WireMode};
 use aps_cpd::util::bench::Bench;
 use aps_cpd::util::json::Json;
 use std::collections::BTreeMap;
@@ -214,6 +214,141 @@ fn main() {
             "packed ternary must sustain ≥ dense fp32 elems/sec \
              (ternary {ternary_rate:.0} vs dense {dense_elems_per_sec:.0})"
         );
+    }
+
+    // ---- overlapped bucket pipeline vs the synchronous packed path ----
+    // A 16-layer model with every layer below the parallel-fold
+    // threshold: the synchronous path folds each layer single-threaded,
+    // so shipping ready buckets to the overlap pool (encode of bucket
+    // k+1 overlapping transit+fold of bucket k) is where wall-clock is
+    // genuinely won. Outputs stay bit-identical to `step()` — pinned by
+    // rust/tests/transport_overlap.rs and cross-checked below.
+    println!("\noverlapped step (bucketed async all-reduce, ternary, 16 layers):");
+    let ol_layers = 16usize;
+    let ol_n = if smoke { 8192 } else { 1 << 16 };
+    let ol_grads: Vec<Vec<Vec<f32>>> = (0..world)
+        .map(|w| {
+            (0..ol_layers)
+                .map(|l| {
+                    (0..ol_n)
+                        .map(|i| ((w * 131 + l * 31 + i) % 17) as f32 * 0.125 - 1.0)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let ready_order: Vec<usize> = (0..ol_layers).rev().collect();
+    let total_elems = (ol_layers * ol_n) as u64;
+    // Medians over several samples: the overlap gate compares two timed
+    // rows, so single-iteration noise would gate on luck.
+    let ob = Bench { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+
+    let mut sync_sess =
+        SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 42 }).build();
+    let m = ob.run("sync packed ternary 16-layer (8w)", || {
+        let (r, rep) = sync_sess.step(&ol_grads);
+        (r[0][0], rep.payload_bytes)
+    });
+    let sync_rate = total_elems as f64 / m.median();
+    println!("{}  [{:.1} Melem/s]", m.report(), sync_rate / 1e6);
+
+    let mut overlap_rate_in_process = 0.0f64;
+    for (tname, tspec) in [
+        ("in_process", TransportSpec::InProcess),
+        ("shared_mem", TransportSpec::SharedMem),
+        ("tcp", TransportSpec::Tcp),
+    ] {
+        // bucket_bytes stays 0 = auto (the gated configuration).
+        let mut os = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 42 })
+            .with_transport(tspec)
+            .build();
+        let m = ob.run(&format!("overlap ternary@{tname} bb=auto (8w)"), || {
+            let (r, rep) =
+                os.step_overlapped(&ol_grads, &ready_order).expect("overlapped step");
+            (r[0][0], rep.payload_bytes)
+        });
+        let rate = total_elems as f64 / m.median();
+        let report = os.report().clone();
+        let moved =
+            os.wire_moved().expect("overlapped sessions measure moved traffic");
+        assert_eq!(
+            moved, report.wire,
+            "overlap@{tname}: bytes moved diverge from the claimed wire cost"
+        );
+        let measured_total = moved.total_bytes() + report.exponent_bytes;
+        println!(
+            "{}  [{} buckets, moved {} KiB/worker, {:.1} Melem/s]",
+            m.report(),
+            report.buckets.len(),
+            measured_total / 1024,
+            rate / 1e6
+        );
+        if let Some(traffic) = os.transport_traffic() {
+            assert_eq!(
+                traffic.octets, traffic.claimed_octets,
+                "overlap@{tname}: transport octets diverge from the encode-side claim"
+            );
+        }
+        if tname == "in_process" {
+            overlap_rate_in_process = rate;
+        }
+        // Transport/bucket columns + per-bucket stats for the
+        // perf-trajectory record.
+        let buckets: Vec<Json> = report
+            .buckets
+            .iter()
+            .map(|b| {
+                let mut o = BTreeMap::new();
+                o.insert("bucket".to_string(), Json::Num(b.bucket as f64));
+                o.insert("layers".to_string(), Json::Num(b.layers as f64));
+                o.insert("elements".to_string(), Json::Num(b.elements as f64));
+                o.insert("bytes".to_string(), Json::Num(b.bytes as f64));
+                o.insert("encode_ns".to_string(), Json::Num(b.encode_ns as f64));
+                o.insert("transit_ns".to_string(), Json::Num(b.transit_ns as f64));
+                o.insert("fold_ns".to_string(), Json::Num(b.fold_ns as f64));
+                o.insert("wait_ns".to_string(), Json::Num(b.wait_ns as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut row = BTreeMap::new();
+        row.insert("bytes_moved".to_string(), Json::Num(measured_total as f64));
+        row.insert("elems_per_sec".to_string(), Json::Num(rate));
+        row.insert("transport".to_string(), Json::Str(tname.to_string()));
+        row.insert("bucket_bytes".to_string(), Json::Str("auto".to_string()));
+        row.insert("buckets".to_string(), Json::Arr(buckets));
+        rows.insert(format!("overlap_ternary@{tname}"), Json::Obj(row));
+    }
+    println!(
+        "overlapped (in_process) {:.1} Melem/s vs synchronous packed {:.1} Melem/s ({:.2}x)",
+        overlap_rate_in_process / 1e6,
+        sync_rate / 1e6,
+        overlap_rate_in_process / sync_rate
+    );
+    if smoke {
+        // The overlap-efficiency gate: at bucket_bytes=auto the
+        // overlapped path must at least match the synchronous packed
+        // path (same machine, same workload, medians of 5).
+        assert!(
+            overlap_rate_in_process >= sync_rate,
+            "step_overlapped must sustain >= the synchronous packed path \
+             (overlapped {overlap_rate_in_process:.0} vs sync {sync_rate:.0} elems/s)"
+        );
+        // Bit-identity cross-check on fresh sessions (same step counter).
+        let mut a =
+            SyncSessionBuilder::new(world).spec(StrategySpec::Ternary { seed: 42 }).build();
+        let mut b = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Ternary { seed: 42 })
+            .with_transport(TransportSpec::SharedMem)
+            .build();
+        let (ao, _) = a.step(&ol_grads);
+        let ao: Vec<Vec<f32>> = ao.to_vec();
+        let (bo, _) = b.step_overlapped(&ol_grads, &ready_order).expect("overlapped step");
+        for (al, bl) in ao.iter().zip(bo.iter()) {
+            for (x, y) in al.iter().zip(bl.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "overlapped/synchronous divergence");
+            }
+        }
     }
 
     if smoke {

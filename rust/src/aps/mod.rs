@@ -137,8 +137,34 @@ pub struct LayerReport {
     pub elements: usize,
 }
 
-/// Aggregate result of one synchronization call.
+/// Per-bucket timing and traffic from one overlapped synchronization
+/// (`SyncSession::step_overlapped`). Timing fields are wall-clock
+/// observability only — report equality deliberately ignores them (see
+/// the manual [`PartialEq`] on [`SyncReport`]); the reduced gradients
+/// stay bit-identical to the synchronous path regardless of schedule.
 #[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketStats {
+    /// Bucket index in launch (ready) order.
+    pub bucket: usize,
+    /// Number of layers fused into this bucket.
+    pub layers: usize,
+    /// Total elements across the bucket's layers.
+    pub elements: usize,
+    /// Honest octets this bucket ships per worker pair-exchange
+    /// (`moved_cost().total_bytes()` summed over workers and layers).
+    pub bytes: u64,
+    /// Main-thread encode→pack time for the bucket.
+    pub encode_ns: u64,
+    /// Transport exchange time on the pool thread.
+    pub transit_ns: u64,
+    /// Packed fold (reduce) time on the pool thread.
+    pub fold_ns: u64,
+    /// Queue wait between launch and the pool thread picking it up.
+    pub wait_ns: u64,
+}
+
+/// Aggregate result of one synchronization call.
+#[derive(Clone, Debug, Default)]
 pub struct SyncReport {
     pub layers: Vec<LayerReport>,
     /// Wire bytes per worker for the gradient payload phase, as the
@@ -157,6 +183,25 @@ pub struct SyncReport {
     pub steps: usize,
     /// Number of distinct messages (layers, or 1 when fused).
     pub messages: usize,
+    /// Per-bucket timing from the overlapped path (empty for
+    /// [`crate::sync::SyncSession::step`]). Excluded from equality.
+    pub buckets: Vec<BucketStats>,
+}
+
+/// Timing-free equality: every accounting field must match, but
+/// `buckets` carries wall-clock measurements that legitimately differ
+/// between the synchronous and overlapped paths (and between runs), so
+/// the packed/simulated/overlapped bit-identity suites can compare
+/// whole reports with `assert_eq!`.
+impl PartialEq for SyncReport {
+    fn eq(&self, other: &Self) -> bool {
+        self.layers == other.layers
+            && self.payload_bytes == other.payload_bytes
+            && self.exponent_bytes == other.exponent_bytes
+            && self.wire == other.wire
+            && self.steps == other.steps
+            && self.messages == other.messages
+    }
 }
 
 impl SyncReport {

@@ -1,0 +1,92 @@
+//! `benchdiff` — the bench-trajectory regression gate.
+//!
+//! ```text
+//! benchdiff <baseline.json> <current.json> [--refresh] [--write-missing]
+//! ```
+//!
+//! Compares a freshly measured `BENCH_packed.json` against the committed
+//! baseline (see `util::benchdiff` for the rules: bytes-moved exact,
+//! throughput gated at 0.8x of the dense-normalized baseline ratio).
+//! Exit 0 on pass, 1 on regression, 2 on usage/IO/parse errors.
+//!
+//! `--refresh` rewrites the baseline with the current record after a
+//! passing comparison (how an intentional perf/traffic change lands).
+//! `--write-missing` seeds the baseline from the current record when the
+//! baseline file does not exist yet (bootstrap).
+
+use aps_cpd::util::benchdiff::compare;
+use aps_cpd::util::json::Json;
+use std::process::ExitCode;
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut refresh = false;
+    let mut write_missing = false;
+    for a in &args {
+        match a.as_str() {
+            "--refresh" => refresh = true,
+            "--write-missing" => write_missing = true,
+            _ => paths.push(a.clone()),
+        }
+    }
+    let [baseline_path, current_path] = paths.as_slice() else {
+        eprintln!("usage: benchdiff <baseline.json> <current.json> [--refresh] [--write-missing]");
+        return ExitCode::from(2);
+    };
+
+    let current = match load(current_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if !std::path::Path::new(baseline_path).exists() {
+        if write_missing {
+            if let Err(e) = std::fs::write(baseline_path, current.to_string()) {
+                eprintln!("benchdiff: seed {baseline_path}: {e}");
+                return ExitCode::from(2);
+            }
+            println!("benchdiff: baseline {baseline_path} seeded from {current_path}");
+            return ExitCode::SUCCESS;
+        }
+        eprintln!("benchdiff: baseline {baseline_path} missing (pass --write-missing to seed)");
+        return ExitCode::from(2);
+    }
+
+    let baseline = match load(baseline_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match compare(&baseline, &current) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.render());
+    if !report.ok() {
+        return ExitCode::FAILURE;
+    }
+    if refresh {
+        if let Err(e) = std::fs::write(baseline_path, current.to_string()) {
+            eprintln!("benchdiff: refresh {baseline_path}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("benchdiff: baseline {baseline_path} refreshed");
+    }
+    ExitCode::SUCCESS
+}

@@ -10,7 +10,7 @@ use crate::aps::{HybridSchedule, SyncMethod};
 use crate::collectives::Topology;
 use crate::cpd::FpFormat;
 use crate::optim::{LrSchedule, OptimizerKind};
-use crate::sync::{StrategySpec, WireMode};
+use crate::sync::{StrategySpec, TransportSpec, WireMode};
 use crate::util::toml::TomlDoc;
 use crate::Result;
 use anyhow::{anyhow, Context};
@@ -37,6 +37,14 @@ pub struct ExperimentConfig {
     /// `packed | simulated`; packed — the default — moves bit-packed
     /// `WireCost` bytes through the simulated collectives).
     pub wire: WireMode,
+    /// Which transport the overlapped path exchanges packed segments
+    /// over (`sync.transport`: `in_process | shared_mem | tcp`; only
+    /// meaningful with `wire = "packed"`).
+    pub transport: TransportSpec,
+    /// Bucket fusion threshold for `step_overlapped`, in honest wire
+    /// bytes (`sync.bucket_bytes`; 0 — the default — picks an automatic
+    /// size from the model's total traffic and the pool width).
+    pub bucket_bytes: usize,
     pub kahan: bool,
     pub fp32_last_layer: bool,
     pub hybrid: Option<HybridSchedule>,
@@ -179,6 +187,19 @@ impl ExperimentConfig {
             "simulated" => WireMode::Simulated,
             other => return Err(anyhow!("unknown sync.wire {other:?} (packed|simulated)")),
         };
+        let transport_name = doc
+            .opt("sync", "transport")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "in_process".to_string());
+        let transport = TransportSpec::parse(&transport_name).ok_or_else(|| {
+            anyhow!("unknown sync.transport {transport_name:?} (in_process|shared_mem|tcp)")
+        })?;
+        let bucket_bytes = doc
+            .opt("sync", "bucket_bytes")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0);
         let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let fp32_last_layer = doc
             .opt("sync", "fp32_last_layer")
@@ -267,6 +288,8 @@ impl ExperimentConfig {
             topology,
             strategy,
             wire,
+            transport,
+            bucket_bytes,
             kahan,
             fp32_last_layer,
             hybrid,
@@ -425,6 +448,29 @@ steps_per_epoch = 2
         let cfg = ExperimentConfig::from_toml_str(&explicit).unwrap();
         assert_eq!(cfg.wire, WireMode::Packed);
         let bad = SAMPLE.replace("kahan = true", "kahan = true\nwire = \"telepathy\"");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_parses_and_defaults_to_in_process() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.transport, TransportSpec::InProcess, "in-process is the default");
+        assert_eq!(cfg.bucket_bytes, 0, "bucket size defaults to auto");
+        for (name, want) in [
+            ("in_process", TransportSpec::InProcess),
+            ("shm", TransportSpec::SharedMem),
+            ("shared_mem", TransportSpec::SharedMem),
+            ("tcp", TransportSpec::Tcp),
+        ] {
+            let t = SAMPLE
+                .replace("kahan = true", &format!("kahan = true\ntransport = \"{name}\""));
+            let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+            assert_eq!(cfg.transport, want, "{name}");
+        }
+        let bb = SAMPLE.replace("kahan = true", "kahan = true\nbucket_bytes = 65536");
+        let cfg = ExperimentConfig::from_toml_str(&bb).unwrap();
+        assert_eq!(cfg.bucket_bytes, 65536);
+        let bad = SAMPLE.replace("kahan = true", "kahan = true\ntransport = \"carrier_pigeon\"");
         assert!(ExperimentConfig::from_toml_str(&bad).is_err());
     }
 

@@ -7,9 +7,9 @@ use crate::data::shard_range;
 use crate::metrics::{top1_accuracy, SegmentationMetrics, Series};
 use crate::optim::{LrSchedule, Optimizer, OptimizerKind};
 use crate::runtime::Model;
-use crate::sync::{StrategySpec, SyncSession, SyncSessionBuilder, WireMode};
+use crate::sync::{StrategySpec, SyncSession, SyncSessionBuilder, TransportSpec, WireMode};
 use crate::Result;
-use anyhow::ensure;
+use anyhow::{anyhow, ensure};
 use std::time::Instant;
 
 /// Everything needed to construct a [`Trainer`] besides the model.
@@ -27,6 +27,14 @@ pub struct TrainerSetup {
     /// How the session materializes wire traffic (packed bit-buffers by
     /// default; results are bit-identical either way).
     pub wire: WireMode,
+    /// Transport for the overlapped sync path. Anything other than the
+    /// default `InProcess` (or a non-zero `bucket_bytes`) routes every
+    /// step through `SyncSession::step_overlapped` in backprop order —
+    /// results stay bit-identical to the synchronous path.
+    pub transport: TransportSpec,
+    /// Bucket fusion threshold (honest wire bytes) for the overlapped
+    /// path; 0 picks an automatic size.
+    pub bucket_bytes: usize,
     pub optimizer: OptimizerKind,
     pub schedule: LrSchedule,
     pub epochs: usize,
@@ -48,6 +56,8 @@ impl TrainerSetup {
             strategy: None,
             hybrid: None,
             wire: WireMode::default(),
+            transport: TransportSpec::default(),
+            bucket_bytes: 0,
             optimizer: OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false },
             schedule: LrSchedule::Constant { lr: 0.05 },
             epochs: 2,
@@ -140,6 +150,8 @@ impl<'m> Trainer<'m> {
         let session = SyncSessionBuilder::from_sync_options(setup.world_size, &setup.sync)
             .spec(current_spec.clone())
             .with_wire(setup.wire)
+            .with_transport(setup.transport)
+            .with_bucket_bytes(setup.bucket_bytes)
             .build();
         Ok(Trainer { model, setup, workload, session, low_spec, current_spec, params, optimizer })
     }
@@ -240,7 +252,22 @@ impl<'m> Trainer<'m> {
             self.session.set_strategy(desired.build());
             self.current_spec = desired;
         }
-        let (reduced, report) = self.session.step(&worker_grads);
+        let overlapped = self.setup.transport != TransportSpec::InProcess
+            || self.setup.bucket_bytes != 0;
+        let (reduced, report) = if overlapped {
+            // Backprop completion order: the last layer's gradient is
+            // ready first, so its bucket ships while earlier layers are
+            // still "computing". (After a hybrid strategy swap the
+            // session falls back to the synchronous path internally;
+            // results are bit-identical either way.)
+            let layers = worker_grads.first().map_or(0, |g| g.len());
+            let order: Vec<usize> = (0..layers).rev().collect();
+            self.session
+                .step_overlapped(&worker_grads, &order)
+                .map_err(|e| anyhow!("gradient sync failed: {e}"))?
+        } else {
+            self.session.step(&worker_grads)
+        };
 
         if self.setup.track_roundoff {
             let exact = aps::reduce_exact(&worker_grads, self.setup.sync.average);

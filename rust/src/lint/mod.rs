@@ -158,8 +158,18 @@ impl Config {
         Config {
             hot: vec![
                 // The per-step session path (static complement to the
-                // counting-allocator test).
-                hot("sync/session.rs", &["step"]),
+                // counting-allocator test), including the overlapped
+                // bucket pipeline's per-bucket encode/fold entry points.
+                hot(
+                    "sync/session.rs",
+                    &["step", "step_overlapped", "encode_bucket_layers", "overlap_worker"],
+                ),
+                // Transport frame path: runs once per layer per worker
+                // per step on the serializing transports.
+                hot(
+                    "sync/transport.rs",
+                    &["exchange", "serialize_frame_into", "deserialize_frame"],
+                ),
                 // Bit-packing kernels: every BitWriter/BitReader method
                 // and every pack_*/unpack_* transcoder.
                 hot(
@@ -186,6 +196,8 @@ impl Config {
                         "unpack_cast_range",
                         "meta_f32",
                         "push_meta_f32",
+                        "meta_bytes",
+                        "assign_parts",
                     ],
                 ),
                 // Collective fold kernels (single-threaded and parallel

@@ -72,6 +72,8 @@ fn train(args: &Args) -> Result<()> {
     let mut setup = TrainerSetup::new(cfg.world_size, sync);
     setup.strategy = Some(cfg.strategy.clone());
     setup.wire = cfg.wire;
+    setup.transport = cfg.transport;
+    setup.bucket_bytes = cfg.bucket_bytes;
     setup.hybrid = cfg.hybrid;
     setup.optimizer = cfg.optimizer;
     setup.schedule = cfg.schedule.clone();

@@ -64,11 +64,15 @@
 pub mod feedback;
 pub mod session;
 pub mod strategies;
+pub mod transport;
 pub mod wire;
 
-pub use crate::aps::{LayerReport, SyncReport};
+pub use crate::aps::{BucketStats, LayerReport, SyncReport};
 pub use feedback::ErrorFeedback;
 pub use session::{SyncSession, SyncSessionBuilder};
+pub use transport::{
+    BucketPlan, Transport, TransportError, TransportSpec, TransportTraffic,
+};
 pub use strategies::{
     ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, QsgdStrategy, TernaryStrategy,
     TopKStrategy,

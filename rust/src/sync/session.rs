@@ -28,11 +28,16 @@
 //! session-owned storage; reusing a session yields bit-identical results
 //! to fresh calls (pinned by `rust/tests/strategy_layer.rs`).
 
+use super::transport::{
+    auto_bucket_bytes, BucketPlan, TransportError, TransportSpec, TransportTraffic,
+};
 use super::wire::{PackScratch, PackedWire, WireMode};
 use super::{ErrorFeedback, Factors, GradView, LayerCtx, StrategySpec, SyncStrategy, WireCost};
-use crate::aps::{LayerReport, SyncOptions, SyncReport};
-use crate::collectives::{Collective, ReduceOptions, Topology};
+use crate::aps::{BucketStats, LayerReport, SyncOptions, SyncReport};
+use crate::collectives::{Collective, ReduceOptions, ReduceStats, Topology};
 use crate::cpd::{FpFormat, Rounding};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 /// Builder for [`SyncSession`] (the `SyncOptions` knobs carried over,
 /// plus the strategy/collective plug points).
@@ -49,6 +54,15 @@ pub struct SyncSessionBuilder {
     error_feedback: bool,
     wire: WireMode,
     fold_threads: usize,
+    transport: TransportSpec,
+    bucket_bytes: usize,
+    /// The spec behind `strategy`, kept when the strategy came from
+    /// [`Self::spec`] — the overlap pool builds per-thread decode twins
+    /// from it. A custom [`Self::strategy`] clears it (no overlap).
+    retained_spec: Option<StrategySpec>,
+    /// False once a custom [`Self::collective`] replaces the topology —
+    /// the pool cannot replicate an arbitrary collective per thread.
+    retained_topology: bool,
 }
 
 impl SyncSessionBuilder {
@@ -70,6 +84,10 @@ impl SyncSessionBuilder {
             error_feedback: false,
             wire: WireMode::default(),
             fold_threads: 0,
+            transport: TransportSpec::InProcess,
+            bucket_bytes: 0,
+            retained_spec: None,
+            retained_topology: true,
         }
     }
 
@@ -86,15 +104,21 @@ impl SyncSessionBuilder {
             .with_fused(opts.fused)
     }
 
-    /// Plug in any strategy — the open extension point.
+    /// Plug in any strategy — the open extension point. A custom boxed
+    /// strategy cannot be replicated onto the overlap pool's decode
+    /// twins, so [`SyncSession::step_overlapped`] falls back to the
+    /// synchronous path for it (results identical either way).
     pub fn strategy(mut self, strategy: Box<dyn SyncStrategy>) -> Self {
         self.strategy = Some(strategy);
+        self.retained_spec = None;
         self
     }
 
     /// Use a built-in strategy described by `spec`.
     pub fn spec(self, spec: StrategySpec) -> Self {
-        self.strategy(spec.build())
+        let mut b = self.strategy(spec.build());
+        b.retained_spec = Some(spec);
+        b
     }
 
     /// Wrap the chosen strategy in [`ErrorFeedback`] (residual memory).
@@ -106,9 +130,12 @@ impl SyncSessionBuilder {
         self
     }
 
-    /// Plug in any collective (overrides [`Self::with_topology`]).
+    /// Plug in any collective (overrides [`Self::with_topology`]). Like
+    /// a custom strategy, a custom collective disables the overlapped
+    /// path (the pool builds per-thread collectives from the topology).
     pub fn collective(mut self, collective: Box<dyn Collective>) -> Self {
         self.collective = Some(collective);
+        self.retained_topology = false;
         self
     }
 
@@ -165,6 +192,26 @@ impl SyncSessionBuilder {
         self
     }
 
+    /// Choose the [`Transport`](super::transport::Transport) the
+    /// overlapped path moves packed bytes through (default:
+    /// [`TransportSpec::InProcess`]). Only
+    /// [`SyncSession::step_overlapped`] uses it; [`SyncSession::step`]
+    /// is transport-free.
+    pub fn with_transport(mut self, spec: TransportSpec) -> Self {
+        self.transport = spec;
+        self
+    }
+
+    /// Bucket fusion size for [`SyncSession::step_overlapped`] in dense
+    /// f32 bytes: `0` (default) auto-sizes from the model footprint and
+    /// pool width, `1` degenerates to one bucket per layer, a huge value
+    /// fuses the whole model into one bucket. Reduced gradients are
+    /// bit-identical for every value.
+    pub fn with_bucket_bytes(mut self, bytes: usize) -> Self {
+        self.bucket_bytes = bytes;
+        self
+    }
+
     pub fn build(self) -> SyncSession {
         let world = self.world;
         let collective =
@@ -181,6 +228,20 @@ impl SyncSessionBuilder {
         if self.error_feedback && !already_wrapped {
             strategy = Box::new(ErrorFeedback::new(strategy));
         }
+        // The overlapped path needs per-thread decode twins (spec) and
+        // per-thread collectives (topology), and only the packed wire
+        // moves bytes a transport can ship. Anything else falls back to
+        // the synchronous path. Error feedback needs no special casing:
+        // `decode_packed` forwards purely to the inner codec, so a
+        // plain-spec twin decodes EF frames bit-identically.
+        let overlap_cfg = match (&self.retained_spec, self.retained_topology, self.wire) {
+            (Some(spec), true, WireMode::Packed) => Some(OverlapCfg {
+                spec: spec.clone(),
+                topology: self.topology,
+                transport: self.transport,
+            }),
+            _ => None,
+        };
         SyncSession {
             strategy,
             collective,
@@ -199,6 +260,9 @@ impl SyncSessionBuilder {
             reduced: Vec::new(),
             report: SyncReport::default(),
             steps_done: 0,
+            bucket_bytes: self.bucket_bytes,
+            overlap_cfg,
+            overlap: None,
         }
     }
 }
@@ -241,6 +305,105 @@ pub struct SyncSession {
     reduced: Vec<Vec<f32>>,
     report: SyncReport,
     steps_done: u64,
+    /// Bucket fusion size for the overlapped path (0 = auto).
+    bucket_bytes: usize,
+    /// What the overlap pool needs to replicate per thread; `None` when
+    /// the session cannot overlap (custom strategy/collective or
+    /// simulated wire) and `step_overlapped` falls back to `step`.
+    overlap_cfg: Option<OverlapCfg>,
+    /// The lazily spawned worker pool (first `step_overlapped` call).
+    overlap: Option<OverlapState>,
+}
+
+/// Everything a pool thread rebuilds for itself: the decode twin, the
+/// collective, and the transport. All plain data, so spawning moves
+/// only values into the thread.
+#[derive(Clone)]
+struct OverlapCfg {
+    spec: StrategySpec,
+    topology: Topology,
+    transport: TransportSpec,
+}
+
+/// One layer's fold job, shipped to a pool thread by value and shipped
+/// back with the reduced output. Buffer ownership round-trips through
+/// the channels, so the steady state allocates nothing.
+struct LayerWork {
+    layer: usize,
+    /// The fold-time ctx, `worker == world - 1` exactly as `step()`
+    /// leaves it after the encode loop.
+    ctx: LayerCtx,
+    ropts: ReduceOptions,
+    /// Per-worker packed contributions for this layer.
+    packed: Vec<PackedWire>,
+    /// The reduced output (taken from `reduced[layer]`, returned at
+    /// drain).
+    out: Vec<f32>,
+    stats: ReduceStats,
+}
+
+/// One bucket in flight: its layers' work plus per-bucket timing filled
+/// in by the pool thread. Exactly one `BucketMsg` comes back per bucket
+/// launched, error or not.
+struct BucketMsg {
+    bucket: usize,
+    work: Vec<LayerWork>,
+    sent: Instant,
+    transit_ns: u64,
+    fold_ns: u64,
+    wait_ns: u64,
+    octets: u64,
+    err: Option<TransportError>,
+}
+
+enum WorkerMsg {
+    Bucket(BucketMsg),
+    /// Forward a fault injection to the thread's transport.
+    Kill(usize),
+}
+
+/// The session side of the persistent worker pool.
+struct OverlapState {
+    threads: usize,
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    results: mpsc::Receiver<BucketMsg>,
+    plan: BucketPlan,
+    /// Recycled per-layer packed-contribution sets.
+    packed_pool: Vec<Vec<PackedWire>>,
+    /// Recycled bucket work containers.
+    work_pool: Vec<Vec<LayerWork>>,
+    /// Drain staging: finished work parked per layer so decode runs in
+    /// ascending layer order regardless of completion order.
+    slots: Vec<Option<LayerWork>>,
+    traffic: TransportTraffic,
+    /// Whether the transport serializes (claimed octets only counted
+    /// then, so measured == claimed holds for `InProcess` too: 0 == 0).
+    count_claimed: bool,
+}
+
+/// Per-step constants threaded into the per-bucket encode (mirrors the
+/// loop-invariant part of `step()`).
+#[derive(Clone, Copy)]
+struct StepParams {
+    world: usize,
+    num_layers: usize,
+    base_fmt: FpFormat,
+    fp32_last_layer: bool,
+    rounding: Rounding,
+    kahan: bool,
+    average: bool,
+    step: u64,
+}
+
+/// Per-bucket encode-side accounting, merged into the step totals after
+/// each bucket launch.
+#[derive(Default)]
+struct EncodeAccum {
+    wire_cost: WireCost,
+    moved: WireCost,
+    claimed_octets: u64,
+    elements: usize,
+    bytes: u64,
 }
 
 impl SyncSession {
@@ -386,6 +549,314 @@ impl SyncSession {
         (&self.reduced, &self.report)
     }
 
+    /// Bucketed asynchronous all-reduce: fuse layers into ~N-byte
+    /// buckets in `ready_order` (backprop order — last layer first) and
+    /// launch each bucket's encode→pack→exchange→fold onto the
+    /// session-owned worker pool as soon as it is encoded, overlapping
+    /// the pool's transit+fold with the main thread's encode of later
+    /// buckets. The drain decodes in ascending layer order with the
+    /// stored per-layer ctx, so reduced gradients, reports and
+    /// [`Self::wire_moved`] are **bit-identical** to [`Self::step`] for
+    /// every codec, transport and bucket size
+    /// (`rust/tests/transport_overlap.rs` pins all of it): per-element
+    /// fold chains stay on one thread (`max_threads == 1` twins), sums
+    /// over integer accounting are order-independent, and every codec's
+    /// encode state is keyed by `(step, layer, worker)` rather than call
+    /// order.
+    ///
+    /// Falls back to [`Self::step`] (same results, no overlap) when the
+    /// session cannot replicate its strategy or collective onto the
+    /// pool — custom [`SyncSessionBuilder::strategy`]/
+    /// [`SyncSessionBuilder::collective`], [`WireMode::Simulated`], or
+    /// after [`Self::set_strategy`].
+    ///
+    /// On a transport failure the step yields `Err`: no partial fold is
+    /// applied ([`Self::reduced`] is emptied, the report cleared,
+    /// [`Self::steps_done`] unchanged so a retry replays the same
+    /// stochastic draws — note error-feedback residuals *have* advanced,
+    /// so EF codecs are not retry-safe).
+    pub fn step_overlapped(
+        &mut self,
+        grads: &[Vec<Vec<f32>>],
+        ready_order: &[usize],
+    ) -> Result<(&[Vec<f32>], &SyncReport), TransportError> {
+        if !self.ensure_overlap() {
+            validate_ready_order(grads, ready_order);
+            return Ok(self.step(grads));
+        }
+        let view = GradView::new(grads);
+        let world = self.collective.world_size();
+        assert_eq!(view.world(), world, "one gradient set per worker");
+        let num_layers = view.num_layers();
+
+        // Mirror step(): reset the report in place.
+        self.report.layers.clear();
+        self.report.layers.resize(num_layers, LayerReport::default());
+        self.report.payload_bytes = 0;
+        self.report.exponent_bytes = 0;
+        self.report.steps = 0;
+        self.report.messages = if self.fused { 1 } else { num_layers };
+        self.report.buckets.clear();
+        let mut wire_cost = WireCost::default();
+        let mut moved = WireCost::default();
+        let mut claimed_octets = 0u64;
+
+        // Phase 1 runs on the main thread, exactly as in step().
+        self.factors.reset(num_layers);
+        let pstats =
+            self.strategy.prepare(&view, self.collective.as_ref(), &mut self.factors);
+        self.report.exponent_bytes = pstats.bytes_per_worker;
+        self.report.steps += pstats.steps;
+
+        // apslint: allow(alloc_in_hot_path) -- grows only when the model gains layers; steady state reuses the buffers, pinned by rust/tests/session_alloc.rs
+        self.reduced.resize(num_layers, Vec::new());
+
+        let params = StepParams {
+            world,
+            num_layers,
+            base_fmt: self.strategy.wire_format(),
+            fp32_last_layer: self.fp32_last_layer,
+            rounding: self.rounding,
+            kahan: self.kahan,
+            average: self.average,
+            step: self.steps_done,
+        };
+
+        let Some(ov) = self.overlap.as_mut() else {
+            // ensure_overlap() returned true, so this is unreachable;
+            // degrade to the synchronous path rather than panic.
+            return Ok(self.step(grads));
+        };
+        let bucket_bytes = if self.bucket_bytes == 0 {
+            let mut total = 0u64;
+            for l in 0..num_layers {
+                total += view.layer_len(l) as u64 * 4;
+            }
+            auto_bucket_bytes(total, ov.threads)
+        } else {
+            self.bucket_bytes as u64
+        };
+        ov.plan.rebuild(&view, ready_order, bucket_bytes);
+        let num_buckets = ov.plan.num_buckets();
+        self.report.buckets.resize(num_buckets, BucketStats::default());
+        ov.slots.clear();
+        ov.slots.resize_with(num_layers, || None);
+
+        // ---- Launch: encode each bucket, hand it to the pool. ----------
+        let mut first_err: Option<TransportError> = None;
+        let mut sent = 0usize;
+        for b in 0..num_buckets {
+            let mut work = ov.work_pool.pop().unwrap_or_default();
+            work.clear();
+            let mut acc = EncodeAccum::default();
+            // apslint: allow(nondeterminism) -- wall-clock feeds BucketStats observability only; results are pinned bit-identical by rust/tests/transport_overlap.rs
+            let t0 = Instant::now();
+            encode_bucket_layers(
+                self.strategy.as_mut(),
+                &mut self.stage,
+                &view,
+                ov.plan.bucket(b),
+                &self.factors,
+                &params,
+                &mut self.report,
+                &mut self.reduced,
+                &mut ov.packed_pool,
+                &mut work,
+                &mut acc,
+            );
+            wire_cost += acc.wire_cost;
+            moved += acc.moved;
+            claimed_octets += acc.claimed_octets;
+            self.report.buckets[b] = BucketStats {
+                bucket: b,
+                layers: ov.plan.bucket(b).len(),
+                elements: acc.elements,
+                bytes: acc.bytes,
+                encode_ns: t0.elapsed().as_nanos() as u64,
+                transit_ns: 0,
+                fold_ns: 0,
+                wait_ns: 0,
+            };
+            let msg = BucketMsg {
+                bucket: b,
+                work,
+                // apslint: allow(nondeterminism) -- wall-clock feeds BucketStats observability only; results are pinned bit-identical by rust/tests/transport_overlap.rs
+                sent: Instant::now(),
+                transit_ns: 0,
+                fold_ns: 0,
+                wait_ns: 0,
+                octets: 0,
+                err: None,
+            };
+            if ov.senders[b % ov.threads].send(WorkerMsg::Bucket(msg)).is_err() {
+                first_err = Some(TransportError {
+                    transport: "pool",
+                    worker: b % ov.threads,
+                    detail: "overlap worker thread exited".into(),
+                });
+                break;
+            }
+            sent += 1;
+        }
+
+        // ---- Drain barrier: exactly one message per launched bucket. ---
+        let mut poison = false;
+        for _ in 0..sent {
+            match ov.results.recv_timeout(Duration::from_secs(60)) {
+                Ok(mut msg) => {
+                    let bs = &mut self.report.buckets[msg.bucket];
+                    bs.transit_ns = msg.transit_ns;
+                    bs.fold_ns = msg.fold_ns;
+                    bs.wait_ns = msg.wait_ns;
+                    ov.traffic.octets += msg.octets;
+                    if let Some(e) = msg.err.take() {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    for lw in msg.work.drain(..) {
+                        ov.slots[lw.layer] = Some(lw);
+                    }
+                    ov.work_pool.push(msg.work);
+                }
+                Err(_) => {
+                    first_err = Some(TransportError {
+                        transport: "pool",
+                        worker: usize::MAX,
+                        detail: "overlap worker result timed out or disconnected".into(),
+                    });
+                    // In-flight replies may still land in the channel;
+                    // poison the pool so the next step starts fresh
+                    // instead of draining a stale step's messages.
+                    poison = true;
+                    break;
+                }
+            }
+        }
+
+        if let Some(err) = first_err {
+            // Clean failure: recycle the buffers, surface *no* partial
+            // fold (reduced emptied, report zeroed, steps_done
+            // unchanged).
+            for slot in ov.slots.iter_mut() {
+                if let Some(mut lw) = slot.take() {
+                    ov.packed_pool.push(core::mem::take(&mut lw.packed));
+                    self.reduced[lw.layer] = lw.out;
+                }
+            }
+            for v in &mut self.reduced {
+                v.clear();
+            }
+            self.report.layers.clear();
+            self.report.buckets.clear();
+            self.report.payload_bytes = 0;
+            self.report.exponent_bytes = 0;
+            self.report.steps = 0;
+            self.report.messages = 0;
+            self.report.wire = WireCost::default();
+            self.moved = None;
+            if poison {
+                self.overlap = None;
+            }
+            return Err(err);
+        }
+
+        // ---- Finalize: decode in ascending layer order (as step()
+        // decodes l after fold l — every decode is ctx-pure, so only the
+        // per-layer ctx matters, and it rides in LayerWork).
+        for l in 0..num_layers {
+            let slot = ov.slots[l].take();
+            assert!(slot.is_some(), "bucket plan must cover layer {l}");
+            if let Some(mut lw) = slot {
+                self.strategy.decode(&mut lw.out, &lw.ctx);
+                self.report.payload_bytes += lw.stats.bytes_per_worker;
+                if !self.fused {
+                    self.report.steps += lw.stats.steps;
+                }
+                ov.packed_pool.push(core::mem::take(&mut lw.packed));
+                self.reduced[l] = lw.out;
+            }
+        }
+        if self.fused {
+            self.report.steps += self.collective.steps_per_message();
+        }
+        self.report.wire = wire_cost.per_worker(world);
+        self.moved = Some(moved.per_worker(world));
+        if ov.count_claimed {
+            ov.traffic.claimed_octets += claimed_octets;
+        }
+        self.steps_done += 1;
+        Ok((&self.reduced, &self.report))
+    }
+
+    /// Spawn the overlap pool if this session can overlap and it is not
+    /// up yet. Cold: once per session. Returns whether the overlapped
+    /// path is available.
+    fn ensure_overlap(&mut self) -> bool {
+        if self.overlap.is_some() {
+            return true;
+        }
+        let Some(cfg) = self.overlap_cfg.clone() else {
+            return false;
+        };
+        let world = self.collective.world_size();
+        let threads = overlap_pool_threads();
+        let (result_tx, results) = mpsc::channel();
+        let mut senders = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::channel();
+            let spec = cfg.spec.clone();
+            let topology = cfg.topology;
+            let transport = cfg.transport;
+            let out = result_tx.clone();
+            std::thread::spawn(move || overlap_worker(spec, topology, transport, world, rx, out));
+            senders.push(tx);
+        }
+        self.overlap = Some(OverlapState {
+            threads,
+            senders,
+            results,
+            plan: BucketPlan::default(),
+            packed_pool: Vec::new(),
+            work_pool: Vec::new(),
+            slots: Vec::new(),
+            traffic: TransportTraffic::default(),
+            count_claimed: cfg.transport != TransportSpec::InProcess,
+        });
+        true
+    }
+
+    /// Inject a peer failure into every pool thread's transport (fault
+    /// testing; only meaningful for transports with real channels, i.e.
+    /// [`TransportSpec::Tcp`]). Returns false when the session cannot
+    /// overlap at all.
+    pub fn kill_transport_peer(&mut self, worker: usize) -> bool {
+        if !self.ensure_overlap() {
+            return false;
+        }
+        let Some(ov) = self.overlap.as_ref() else {
+            return false;
+        };
+        for s in &ov.senders {
+            let _ = s.send(WorkerMsg::Kill(worker));
+        }
+        true
+    }
+
+    /// Cumulative serialized-octet accounting across every overlapped
+    /// step so far (`None` before the pool exists). For serializing
+    /// transports, `octets == claimed_octets` pins transport-level wire
+    /// honesty; for [`TransportSpec::InProcess`] both stay 0.
+    pub fn transport_traffic(&self) -> Option<TransportTraffic> {
+        self.overlap.as_ref().map(|ov| ov.traffic)
+    }
+
+    /// The transport the overlapped path would use (`None` when the
+    /// session cannot overlap).
+    pub fn overlap_transport(&self) -> Option<TransportSpec> {
+        self.overlap_cfg.as_ref().map(|c| c.transport)
+    }
+
     /// The packed wire traffic the last step *actually moved* through the
     /// reduction, per worker (payload bits + metadata, measured from the
     /// [`PackedWire`] buffers) — `None` before the first step and in
@@ -402,9 +873,15 @@ impl SyncSession {
     }
 
     /// Swap the strategy, keeping the collective and all scratch (the
-    /// hybrid-precision schedule's epoch switch).
+    /// hybrid-precision schedule's epoch switch). The pool's decode
+    /// twins no longer match an arbitrary replacement, so the overlap
+    /// pool is dropped (its threads exit when the senders drop) and
+    /// [`Self::step_overlapped`] falls back to the synchronous path
+    /// afterwards — results are identical either way.
     pub fn set_strategy(&mut self, strategy: Box<dyn SyncStrategy>) {
         self.strategy = strategy;
+        self.overlap_cfg = None;
+        self.overlap = None;
     }
 
     /// The last step's report (empty before the first step).
@@ -437,6 +914,195 @@ impl SyncSession {
     /// Steps synchronized so far.
     pub fn steps_done(&self) -> u64 {
         self.steps_done
+    }
+}
+
+/// Encode→pack one bucket's layers on the main thread, bit-for-bit the
+/// inner loop of [`SyncSession::step`]: per layer, per worker, `encode`
+/// into the shared stage then `encode_packed` into that worker's packed
+/// buffer, with the same wire-cost/underflow/overflow accounting. A free
+/// function (not a method) so it can run while the overlap state is
+/// mutably borrowed — every piece of session state it needs comes in as
+/// a disjoint field borrow.
+#[allow(clippy::too_many_arguments)]
+fn encode_bucket_layers(
+    strategy: &mut dyn SyncStrategy,
+    stage: &mut Vec<f32>,
+    view: &GradView,
+    layers: &[usize],
+    factors: &Factors,
+    params: &StepParams,
+    report: &mut SyncReport,
+    reduced: &mut [Vec<f32>],
+    packed_pool: &mut Vec<Vec<PackedWire>>,
+    work: &mut Vec<LayerWork>,
+    acc: &mut EncodeAccum,
+) {
+    for &l in layers {
+        let n = view.layer_len(l);
+        let fp32_passthrough = params.fp32_last_layer && l == params.num_layers - 1;
+        let layer_fmt = if fp32_passthrough { FpFormat::FP32 } else { params.base_fmt };
+        let fe = if layer_fmt.is_fp32() { 0 } else { factors.exp(l) };
+        let mut ctx = LayerCtx {
+            layer: l,
+            num_layers: params.num_layers,
+            worker: 0,
+            world: params.world,
+            factor_exp: fe,
+            fmt: layer_fmt,
+            fp32_passthrough,
+            rounding: params.rounding,
+            average: params.average,
+            step: params.step,
+        };
+
+        let mut packed = packed_pool.pop().unwrap_or_default();
+        packed.resize_with(params.world, PackedWire::default);
+        let mut nonzero_in = 0usize;
+        let mut zero_out = 0usize;
+        let mut inf_out = 0usize;
+        for w in 0..params.world {
+            ctx.worker = w;
+            let src = view.layer_of(w, l);
+            stage.resize(n, 0.0);
+            strategy.encode(src, &ctx, stage);
+            acc.wire_cost += strategy.wire_cost(stage, &ctx);
+            for (&x, &q) in src.iter().zip(stage.iter()) {
+                if x != 0.0 {
+                    nonzero_in += 1;
+                    if q == 0.0 {
+                        zero_out += 1;
+                    }
+                }
+                if q.is_infinite() {
+                    inf_out += 1;
+                }
+            }
+            strategy.encode_packed(stage, &ctx, &mut packed[w]);
+            let cost = packed[w].moved_cost();
+            acc.moved += cost;
+            acc.claimed_octets += cost.total_bytes();
+            acc.bytes += cost.total_bytes();
+        }
+        // ctx.worker is now world - 1, exactly the fold-time ctx step()
+        // passes to the packed reduction and to decode.
+        report.layers[l] = LayerReport {
+            factor_exp: fe,
+            underflow_frac: if nonzero_in == 0 {
+                0.0
+            } else {
+                zero_out as f64 / nonzero_in as f64
+            },
+            overflow_frac: inf_out as f64 / (n * params.world).max(1) as f64,
+            elements: n,
+        };
+        acc.elements += n;
+
+        let mut out = core::mem::take(&mut reduced[l]);
+        out.resize(n, 0.0);
+        let ropts =
+            ReduceOptions { fmt: layer_fmt, mode: params.rounding, kahan: params.kahan };
+        work.push(LayerWork {
+            layer: l,
+            ctx,
+            ropts,
+            packed,
+            out,
+            stats: ReduceStats::default(),
+        });
+    }
+}
+
+/// The persistent pool thread: owns its own decode twin (spec-built —
+/// `decode_packed` is `&self`-pure and config-pure for every built-in
+/// codec, so a twin decodes bit-identically to the session's strategy),
+/// its own collective (the hierarchical one carries `RefCell` scratch,
+/// so instances cannot be shared), its own transport, and a
+/// single-threaded fold scratch (`max_threads == 1` keeps every
+/// per-element fold chain on this one thread — the PR 7
+/// schedule-independence discipline). Exactly one [`BucketMsg`] goes
+/// back per bucket received, error or not; the thread exits when the
+/// session drops its sender.
+fn overlap_worker(
+    spec: StrategySpec,
+    topology: Topology,
+    transport_spec: TransportSpec,
+    world: usize,
+    jobs: mpsc::Receiver<WorkerMsg>,
+    results: mpsc::Sender<BucketMsg>,
+) {
+    let twin: Box<dyn SyncStrategy> = spec.build();
+    let collective = topology.collective(world);
+    let mut transport = transport_spec.build(world);
+    let mut scratch = PackScratch { max_threads: 1, ..PackScratch::default() };
+    while let Ok(msg) = jobs.recv() {
+        let mut m = match msg {
+            WorkerMsg::Kill(w) => {
+                transport.kill_peer(w);
+                continue;
+            }
+            WorkerMsg::Bucket(m) => m,
+        };
+        m.wait_ns = m.sent.elapsed().as_nanos() as u64;
+        transport.reset_moved();
+        for lw in &mut m.work {
+            if m.err.is_some() {
+                // No partial fold past a failed exchange: the remaining
+                // layers ship back untouched and the session discards
+                // everything.
+                break;
+            }
+            // apslint: allow(nondeterminism) -- wall-clock feeds BucketStats observability only; results are pinned bit-identical by rust/tests/transport_overlap.rs
+            let t0 = Instant::now();
+            match transport.exchange(&lw.packed) {
+                Ok(delivered) => {
+                    // apslint: allow(nondeterminism) -- wall-clock feeds BucketStats observability only; results are pinned bit-identical by rust/tests/transport_overlap.rs
+                    let t1 = Instant::now();
+                    lw.stats = collective.all_reduce_packed_sum_into(
+                        delivered,
+                        twin.as_ref(),
+                        &lw.ctx,
+                        &mut lw.out,
+                        &lw.ropts,
+                        &mut scratch,
+                    );
+                    m.transit_ns += t1.duration_since(t0).as_nanos() as u64;
+                    m.fold_ns += t1.elapsed().as_nanos() as u64;
+                }
+                Err(e) => {
+                    m.err = Some(e);
+                }
+            }
+        }
+        m.octets = transport.octets_moved();
+        if results.send(m).is_err() {
+            return;
+        }
+    }
+}
+
+/// Pool width for the overlapped path. Cold (called once per session);
+/// only bucket *boundaries* depend on it — reduced gradients are
+/// schedule-independent, so the machine-dependent width never reaches
+/// the numerics.
+fn overlap_pool_threads() -> usize {
+    crate::util::par::num_threads().clamp(2, 8)
+}
+
+/// The fallback path skips plan building, but `ready_order` must be
+/// held to the same contract either way.
+fn validate_ready_order(grads: &[Vec<Vec<f32>>], ready_order: &[usize]) {
+    let num_layers = grads.first().map_or(0, |g| g.len());
+    assert_eq!(
+        ready_order.len(),
+        num_layers,
+        "ready_order must list every layer exactly once"
+    );
+    let mut seen = vec![false; num_layers];
+    for &l in ready_order {
+        assert!(l < num_layers, "ready_order layer {l} out of range");
+        assert!(!seen[l], "ready_order lists layer {l} twice");
+        seen[l] = true;
     }
 }
 
@@ -596,6 +1262,62 @@ mod tests {
         // bare error_feedback() wraps the FP32 default
         let d = SyncSessionBuilder::new(2).error_feedback().build();
         assert_eq!(d.strategy_name(), "ef:fp32");
+    }
+
+    #[test]
+    fn step_overlapped_matches_step_bit_for_bit() {
+        let g = grads(4, &[96, 33, 7]);
+        let order = [2usize, 1, 0];
+        for spec in [
+            StrategySpec::Aps { fmt: FpFormat::E5M2 },
+            StrategySpec::Ternary { seed: 7 },
+        ] {
+            let mut sync = SyncSessionBuilder::new(4).spec(spec.clone()).build();
+            let mut over = SyncSessionBuilder::new(4).spec(spec.clone()).build();
+            for step in 0..2 {
+                let (so, sr) = sync.step(&g);
+                let so = so.to_vec();
+                let sr = sr.clone();
+                let (oo, or) = over.step_overlapped(&g, &order).expect("in-process overlap");
+                for (l, (a, b)) in so.iter().zip(oo.iter()).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{spec:?} step {step} layer {l} elem {i}"
+                        );
+                    }
+                }
+                assert_eq!(&sr, or, "{spec:?} step {step} report");
+                assert!(!or.buckets.is_empty(), "overlapped path reports buckets");
+                assert_eq!(sync.wire_moved(), over.wire_moved());
+            }
+        }
+    }
+
+    #[test]
+    fn custom_strategy_falls_back_to_synchronous_path() {
+        let g = grads(2, &[16]);
+        let mut s = SyncSessionBuilder::new(2)
+            .strategy(StrategySpec::Fp32.build())
+            .build();
+        assert_eq!(s.overlap_transport(), None, "custom strategy cannot overlap");
+        let (out, report) = s.step_overlapped(&g, &[0]).expect("fallback cannot fail");
+        assert_eq!(out.len(), 1);
+        assert!(report.buckets.is_empty(), "fallback is the synchronous path");
+        assert_eq!(s.transport_traffic(), None);
+    }
+
+    #[test]
+    fn set_strategy_drops_the_overlap_pool() {
+        let g = grads(2, &[16]);
+        let mut s = SyncSessionBuilder::new(2).spec(StrategySpec::Fp32).build();
+        assert_eq!(s.overlap_transport(), Some(super::TransportSpec::InProcess));
+        let _ = s.step_overlapped(&g, &[0]).unwrap();
+        s.set_strategy(StrategySpec::from(SyncMethod::Fp32).build());
+        assert_eq!(s.overlap_transport(), None);
+        let (_, report) = s.step_overlapped(&g, &[0]).expect("fallback after swap");
+        assert!(report.buckets.is_empty());
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! The byte seam under the collectives: a [`Transport`] ships each
+//! worker's [`PackedWire`] contribution as real octets and hands back
+//! what arrived, so the packed reduction can run over genuinely moved
+//! bytes instead of in-process slices.
+//!
+//! Three implementations, one contract:
+//!
+//! * [`InProcess`] — the historical behavior: the caller's slices are
+//!   "delivered" zero-copy. No serialization, no octets on any wire
+//!   ([`Transport::octets_moved`] stays 0).
+//! * [`SharedMem`] — per-worker ring of preallocated byte slabs. Each
+//!   exchange serializes every worker's frame into its slab and
+//!   deserializes it back out, modeling the memcpy cost (and honest
+//!   octet count) of a shared-memory transport.
+//! * [`Tcp`] — loopback sockets, one pair per worker, with
+//!   connect-with-retry at construction and a pump thread owning the
+//!   write ends so large frames cannot deadlock a same-thread
+//!   write/read cycle. The octets counted are exactly the serialized
+//!   payload+metadata bytes written to the sockets.
+//!
+//! **Wire honesty across the seam.** The frame format ships the packed
+//! payload verbatim: for every built-in codec the payload length equals
+//! `WireCost::total_bytes()` of the same buffer (payload bytes are the
+//! byte-rounded value+index bits, metadata rides as-is), so the octets a
+//! serializing transport measures equal the octets the codec claims.
+//! `rust/tests/transport_overlap.rs` pins measured == claimed for every
+//! codec on both serializing transports.
+//!
+//! [`BucketPlan`] lives here too: the Horovod-style fusion of layers
+//! (walked in backprop-ready order) into ~N-byte buckets that
+//! [`super::SyncSession::step_overlapped`] launches onto its worker
+//! pool. The plan is pure bookkeeping — every layer lands in exactly one
+//! bucket, bucket order is the caller's ready order, and rebuilding with
+//! the same inputs yields the same plan (pinned by the property test in
+//! `rust/tests/transport_overlap.rs`).
+
+use super::wire::PackedWire;
+use super::{GradView, WireCost};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Serialized frame header: `[tag u8][elems u64][value_bits u64]`
+/// `[index_bits u64][payload_len u64][meta_len u64]`, all little-endian.
+/// All-u64 lengths so no field can silently truncate on any target.
+pub const FRAME_HEADER_LEN: usize = 41;
+
+/// A transport-level failure: which transport, which worker's channel,
+/// and what went wrong. Cloneable so the session can both surface it to
+/// the caller and keep a copy in its drain bookkeeping.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportError {
+    /// [`Transport::name`] of the failing transport.
+    pub transport: &'static str,
+    /// Worker index whose channel failed (`usize::MAX` when the failure
+    /// is not attributable to a single worker, e.g. a dead worker pool).
+    pub worker: usize,
+    /// Human-readable detail (the underlying I/O error, usually).
+    pub detail: String,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} transport: worker {} channel failed: {}",
+            self.transport, self.worker, self.detail
+        )
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Byte-oriented exchange of one layer's per-worker packed
+/// contributions. `Send` because each overlap pool thread owns its own
+/// transport instance outright.
+///
+/// The contract: `exchange` takes all `world` contributions, moves them
+/// (however the implementation defines "move"), and returns the
+/// delivered slice — same length, same decoded meaning, and for every
+/// built-in codec the same bytes. Accounting accumulates across
+/// exchanges until [`Transport::reset_moved`].
+pub trait Transport: Send {
+    /// Short label for benches, reports and errors.
+    fn name(&self) -> &'static str;
+
+    /// Ship every worker's packed contribution and return what arrived.
+    /// The delivered slice borrows from `self` (or from `packed` for a
+    /// zero-copy transport) and is valid until the next call.
+    fn exchange<'a>(
+        &'a mut self,
+        packed: &'a [PackedWire],
+    ) -> Result<&'a [PackedWire], TransportError>;
+
+    /// Accumulated [`WireCost`] of everything delivered since the last
+    /// [`Transport::reset_moved`] — the transport-side counterpart of
+    /// the encode-side `PackedWire::moved_cost` sum.
+    fn moved(&self) -> WireCost;
+
+    /// Real serialized octets (payload + metadata, headers excluded)
+    /// put on this transport's wire since the last reset. Zero for
+    /// [`InProcess`], which serializes nothing.
+    fn octets_moved(&self) -> u64;
+
+    /// Zero the [`Transport::moved`]/[`Transport::octets_moved`] counters.
+    fn reset_moved(&mut self);
+
+    /// Simulate a peer failure for `worker` (fault-injection hook; the
+    /// next `exchange` touching that worker's channel must fail cleanly).
+    /// Default: no-op — only transports with real channels can drop one.
+    fn kill_peer(&mut self, _worker: usize) {}
+}
+
+/// Which [`Transport`] a session (or config) asks for. The closed-enum
+/// companion of the open trait, mirroring `StrategySpec` / `Topology`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// Zero-copy in-process delivery (the historical path).
+    #[default]
+    InProcess,
+    /// Serialize through per-worker shared-memory slabs.
+    SharedMem,
+    /// Serialize through loopback TCP sockets.
+    Tcp,
+}
+
+impl TransportSpec {
+    /// Parse a config name (`sync.transport`).
+    pub fn parse(s: &str) -> Option<TransportSpec> {
+        match s {
+            "in_process" | "inprocess" => Some(TransportSpec::InProcess),
+            "shared_mem" | "shm" => Some(TransportSpec::SharedMem),
+            "tcp" => Some(TransportSpec::Tcp),
+            _ => None,
+        }
+    }
+
+    /// The config/bench label (inverse of [`TransportSpec::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportSpec::InProcess => "in_process",
+            TransportSpec::SharedMem => "shared_mem",
+            TransportSpec::Tcp => "tcp",
+        }
+    }
+
+    /// Construct the transport for `world` workers. Cold: called once
+    /// per overlap pool thread; `Tcp` binds its loopback sockets here.
+    pub fn build(self, world: usize) -> Box<dyn Transport> {
+        match self {
+            TransportSpec::InProcess => Box::new(InProcess::new(world)),
+            TransportSpec::SharedMem => Box::new(SharedMem::new(world)),
+            TransportSpec::Tcp => {
+                Box::new(Tcp::new(world).expect("bind loopback sockets for the Tcp transport"))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame serialization
+// ---------------------------------------------------------------------
+
+/// Serialize one packed contribution into `out` (cleared first):
+/// 41-byte header, then the payload bytes, then the metadata bytes.
+/// The payload ships verbatim, so for every built-in codec the body
+/// length equals `packed.moved_cost().total_bytes()`.
+pub fn serialize_frame_into(packed: &PackedWire, out: &mut Vec<u8>) {
+    out.clear();
+    out.push(packed.tag());
+    out.extend_from_slice(&(packed.elems() as u64).to_le_bytes());
+    out.extend_from_slice(&packed.value_bits().to_le_bytes());
+    out.extend_from_slice(&packed.index_bits().to_le_bytes());
+    out.extend_from_slice(&(packed.bytes().len() as u64).to_le_bytes());
+    out.extend_from_slice(&(packed.meta_bytes().len() as u64).to_le_bytes());
+    out.extend_from_slice(packed.bytes());
+    out.extend_from_slice(packed.meta_bytes());
+}
+
+/// Parse one frame from `buf` into `out` (buffer capacity reused).
+/// Returns the total frame length consumed, or a static description of
+/// the truncation.
+pub fn deserialize_frame(buf: &[u8], out: &mut PackedWire) -> Result<usize, &'static str> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return Err("frame header truncated");
+    }
+    let (tag, elems, value_bits, index_bits, payload_len, meta_len) = parse_header(buf);
+    let total = FRAME_HEADER_LEN + payload_len + meta_len;
+    if buf.len() < total {
+        return Err("frame body truncated");
+    }
+    let payload = &buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + payload_len];
+    let meta = &buf[FRAME_HEADER_LEN + payload_len..total];
+    out.assign_parts(tag, elems, value_bits, index_bits, payload, meta);
+    Ok(total)
+}
+
+/// Decode the fixed header fields (caller guarantees
+/// `h.len() >= FRAME_HEADER_LEN`).
+fn parse_header(h: &[u8]) -> (u8, usize, u64, u64, usize, usize) {
+    let tag = h[0];
+    let elems = frame_len(read_u64(h, 1));
+    let value_bits = read_u64(h, 9);
+    let index_bits = read_u64(h, 17);
+    let payload_len = frame_len(read_u64(h, 25));
+    let meta_len = frame_len(read_u64(h, 33));
+    (tag, elems, value_bits, index_bits, payload_len, meta_len)
+}
+
+/// Narrow a wire-side u64 length to usize, failing loudly rather than
+/// truncating on 32-bit targets.
+fn frame_len(v: u64) -> usize {
+    usize::try_from(v).expect("frame length exceeds the address space")
+}
+
+fn read_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("8-byte header field"))
+}
+
+// ---------------------------------------------------------------------
+// InProcess
+// ---------------------------------------------------------------------
+
+/// Zero-copy delivery: the caller's slices *are* the delivered slices.
+/// The accounting still runs (`moved` sums the delivered costs) but no
+/// octet ever exists, so [`Transport::octets_moved`] stays 0.
+pub struct InProcess {
+    world: usize,
+    moved: WireCost,
+}
+
+impl InProcess {
+    pub fn new(world: usize) -> InProcess {
+        InProcess { world, moved: WireCost::default() }
+    }
+}
+
+impl Transport for InProcess {
+    fn name(&self) -> &'static str {
+        "in_process"
+    }
+    fn exchange<'a>(
+        &'a mut self,
+        packed: &'a [PackedWire],
+    ) -> Result<&'a [PackedWire], TransportError> {
+        assert_eq!(packed.len(), self.world, "one contribution per worker");
+        for pw in packed {
+            self.moved += pw.moved_cost();
+        }
+        Ok(packed)
+    }
+    fn moved(&self) -> WireCost {
+        self.moved
+    }
+    fn octets_moved(&self) -> u64 {
+        0
+    }
+    fn reset_moved(&mut self) {
+        self.moved = WireCost::default();
+    }
+}
+
+// ---------------------------------------------------------------------
+// SharedMem
+// ---------------------------------------------------------------------
+
+/// Per-worker ring of preallocated byte slabs: every exchange
+/// serializes each worker's frame into that worker's current slab,
+/// deserializes it back into an owned delivery buffer, and advances the
+/// ring cursor — two explicit copies per frame, exactly what a
+/// shared-memory transport pays.
+pub struct SharedMem {
+    world: usize,
+    /// Two slabs per worker; `cursor` alternates between them so a
+    /// frame is never serialized over the bytes it was just read from.
+    slabs: Vec<[Vec<u8>; 2]>,
+    cursor: usize,
+    delivered: Vec<PackedWire>,
+    moved: WireCost,
+    octets: u64,
+}
+
+impl SharedMem {
+    pub fn new(world: usize) -> SharedMem {
+        let slabs =
+            (0..world).map(|_| [Vec::with_capacity(4096), Vec::with_capacity(4096)]).collect();
+        SharedMem {
+            world,
+            slabs,
+            cursor: 0,
+            delivered: Vec::new(),
+            moved: WireCost::default(),
+            octets: 0,
+        }
+    }
+}
+
+impl Transport for SharedMem {
+    fn name(&self) -> &'static str {
+        "shared_mem"
+    }
+    fn exchange<'a>(
+        &'a mut self,
+        packed: &'a [PackedWire],
+    ) -> Result<&'a [PackedWire], TransportError> {
+        assert_eq!(packed.len(), self.world, "one contribution per worker");
+        while self.delivered.len() < self.world {
+            self.delivered.push(PackedWire::default());
+        }
+        for (w, pw) in packed.iter().enumerate() {
+            let slab = &mut self.slabs[w][self.cursor];
+            serialize_frame_into(pw, slab);
+            self.octets += (slab.len() - FRAME_HEADER_LEN) as u64;
+        }
+        for w in 0..self.world {
+            deserialize_frame(&self.slabs[w][self.cursor], &mut self.delivered[w]).map_err(
+                |detail| TransportError {
+                    transport: "shared_mem",
+                    worker: w,
+                    detail: detail.into(),
+                },
+            )?;
+            self.moved += self.delivered[w].moved_cost();
+        }
+        self.cursor ^= 1;
+        Ok(&self.delivered)
+    }
+    fn moved(&self) -> WireCost {
+        self.moved
+    }
+    fn octets_moved(&self) -> u64 {
+        self.octets
+    }
+    fn reset_moved(&mut self) {
+        self.moved = WireCost::default();
+        self.octets = 0;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tcp
+// ---------------------------------------------------------------------
+
+/// Loopback TCP: one socket pair per worker. Frames are written by a
+/// pump thread that owns the client ends (so a large frame can never
+/// deadlock a same-thread write/read cycle) and read back here with
+/// `read_exact`. [`Transport::kill_peer`] shuts down a retained clone
+/// of the worker's client socket: the server side sees EOF and the next
+/// exchange fails cleanly with that worker's index.
+pub struct Tcp {
+    world: usize,
+    servers: Vec<TcpStream>,
+    /// `try_clone`d client write ends, kept only for fault injection.
+    kill_handles: Vec<TcpStream>,
+    pump_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    recycle_rx: mpsc::Receiver<Vec<u8>>,
+    delivered: Vec<PackedWire>,
+    recv_buf: Vec<u8>,
+    moved: WireCost,
+    octets: u64,
+}
+
+impl Tcp {
+    /// Bind a loopback listener and establish `world` socket pairs,
+    /// retrying connects briefly (cold: once per pool thread).
+    pub fn new(world: usize) -> std::io::Result<Tcp> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let mut clients = Vec::with_capacity(world);
+        let mut servers = Vec::with_capacity(world);
+        for _ in 0..world {
+            let client = connect_with_retry(addr)?;
+            client.set_nodelay(true)?;
+            let (server, _) = listener.accept()?;
+            server.set_nodelay(true)?;
+            // Hang guard: a dropped peer must surface as an error, not
+            // a stuck CI job.
+            server.set_read_timeout(Some(Duration::from_secs(5)))?;
+            clients.push(client);
+            servers.push(server);
+        }
+        let kill_handles =
+            clients.iter().map(|c| c.try_clone()).collect::<std::io::Result<Vec<_>>>()?;
+        let (pump_tx, pump_rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
+        // Seed the frame-buffer pool so steady-state exchanges recycle
+        // instead of allocating.
+        for _ in 0..world + 2 {
+            let _ = recycle_tx.send(Vec::with_capacity(4096));
+        }
+        std::thread::spawn(move || {
+            let mut clients = clients;
+            while let Ok((w, buf)) = pump_rx.recv() {
+                // A failed write (killed peer) is detected by the read
+                // side as EOF; the pump stays alive for other workers.
+                let _ = clients[w].write_all(&buf);
+                let _ = recycle_tx.send(buf);
+            }
+        });
+        Ok(Tcp {
+            world,
+            servers,
+            kill_handles,
+            pump_tx,
+            recycle_rx,
+            delivered: Vec::new(),
+            recv_buf: Vec::new(),
+            moved: WireCost::default(),
+            octets: 0,
+        })
+    }
+}
+
+/// Read one frame off a socket into `out` (scratch reused across calls).
+fn read_frame(
+    stream: &mut TcpStream,
+    scratch: &mut Vec<u8>,
+    out: &mut PackedWire,
+) -> std::io::Result<()> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    stream.read_exact(&mut header)?;
+    let (tag, elems, value_bits, index_bits, payload_len, meta_len) = parse_header(&header);
+    scratch.clear();
+    scratch.resize(payload_len + meta_len, 0);
+    stream.read_exact(scratch)?;
+    out.assign_parts(
+        tag,
+        elems,
+        value_bits,
+        index_bits,
+        &scratch[..payload_len],
+        &scratch[payload_len..],
+    );
+    Ok(())
+}
+
+/// Loopback connect with a short retry loop (the listener is already
+/// bound, but a loaded machine can still transiently refuse).
+fn connect_with_retry(addr: SocketAddr) -> std::io::Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..100 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    Err(last.unwrap_or_else(|| std::io::Error::other("connect retry loop exhausted")))
+}
+
+impl Transport for Tcp {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+    fn exchange<'a>(
+        &'a mut self,
+        packed: &'a [PackedWire],
+    ) -> Result<&'a [PackedWire], TransportError> {
+        assert_eq!(packed.len(), self.world, "one contribution per worker");
+        while self.delivered.len() < self.world {
+            self.delivered.push(PackedWire::default());
+        }
+        for (w, pw) in packed.iter().enumerate() {
+            let mut buf = match self.recycle_rx.try_recv() {
+                Ok(b) => b,
+                // apslint: allow(alloc_in_hot_path) -- buffer-pool miss refill only; the pool is seeded at construction and every buffer returns via the pump's recycle channel, so the steady state recycles
+                Err(_) => Vec::new(),
+            };
+            serialize_frame_into(pw, &mut buf);
+            self.octets += (buf.len() - FRAME_HEADER_LEN) as u64;
+            if self.pump_tx.send((w, buf)).is_err() {
+                return Err(TransportError {
+                    transport: "tcp",
+                    worker: w,
+                    detail: "socket pump thread exited".into(),
+                });
+            }
+        }
+        for w in 0..self.world {
+            read_frame(&mut self.servers[w], &mut self.recv_buf, &mut self.delivered[w])
+                .map_err(|e| TransportError {
+                    transport: "tcp",
+                    worker: w,
+                    detail: e.to_string(),
+                })?;
+            self.moved += self.delivered[w].moved_cost();
+        }
+        Ok(&self.delivered)
+    }
+    fn moved(&self) -> WireCost {
+        self.moved
+    }
+    fn octets_moved(&self) -> u64 {
+        self.octets
+    }
+    fn reset_moved(&mut self) {
+        self.moved = WireCost::default();
+        self.octets = 0;
+    }
+    fn kill_peer(&mut self, worker: usize) {
+        if let Some(h) = self.kill_handles.get(worker) {
+            let _ = h.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// BucketPlan
+// ---------------------------------------------------------------------
+
+/// Fusion of layers (in the caller's backprop-ready order) into ~N-byte
+/// buckets. Flat storage: bucket `b` is
+/// `layers[starts[b]..starts[b + 1]]`. Rebuilt in place every step with
+/// no steady-state reallocation.
+#[derive(Clone, Debug, Default)]
+pub struct BucketPlan {
+    layers: Vec<usize>,
+    starts: Vec<usize>,
+    /// Permutation-check scratch, reused across rebuilds.
+    seen: Vec<bool>,
+}
+
+impl BucketPlan {
+    /// Rebuild the plan: walk `ready_order`, accumulate each layer's
+    /// dense f32 footprint (`4 * elems` — a codec-independent yardstick,
+    /// so the plan does not depend on data-dependent sparse sizes), and
+    /// close a bucket once it reaches `bucket_bytes`. Every bucket holds
+    /// at least one layer. Panics unless `ready_order` is a permutation
+    /// of `0..num_layers`.
+    pub fn rebuild(&mut self, view: &GradView, ready_order: &[usize], bucket_bytes: u64) {
+        let num_layers = view.num_layers();
+        assert_eq!(
+            ready_order.len(),
+            num_layers,
+            "ready_order must list every layer exactly once"
+        );
+        self.seen.clear();
+        self.seen.resize(num_layers, false);
+        for &l in ready_order {
+            assert!(l < num_layers, "ready_order layer {l} out of range");
+            assert!(!self.seen[l], "ready_order lists layer {l} twice");
+            self.seen[l] = true;
+        }
+        self.layers.clear();
+        self.starts.clear();
+        self.starts.push(0);
+        let mut acc = 0u64;
+        for &l in ready_order {
+            self.layers.push(l);
+            acc += view.layer_len(l) as u64 * 4;
+            if acc >= bucket_bytes {
+                self.starts.push(self.layers.len());
+                acc = 0;
+            }
+        }
+        if *self.starts.last().unwrap_or(&0) != self.layers.len() {
+            self.starts.push(self.layers.len());
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.starts.len().saturating_sub(1)
+    }
+
+    /// The layer indices of bucket `b`, in ready order.
+    pub fn bucket(&self, b: usize) -> &[usize] {
+        &self.layers[self.starts[b]..self.starts[b + 1]]
+    }
+}
+
+/// The auto bucket size (`bucket_bytes == 0`): half the model spread
+/// over the pool, floored at 16 KiB so tiny models still fuse.
+pub fn auto_bucket_bytes(total_dense_bytes: u64, threads: usize) -> u64 {
+    (total_dense_bytes / (2 * threads.max(1)) as u64).max(16 * 1024)
+}
+
+/// Octets a session's overlapped steps actually pushed through a
+/// serializing transport vs. what the codecs' `WireCost` accounting
+/// claimed for the same frames. Equal for every built-in codec; both
+/// zero for [`InProcess`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportTraffic {
+    /// Measured serialized payload+metadata octets.
+    pub octets: u64,
+    /// The encode-side claim (`moved_cost().total_bytes()` summed over
+    /// the same frames).
+    pub claimed_octets: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_packed(seed: u32) -> PackedWire {
+        let vals: Vec<f32> =
+            (0..17).map(|i| ((seed + i) as f32 * 0.37).sin()).collect();
+        let mut pw = PackedWire::default();
+        pw.pack_raw_f32(&vals);
+        pw.push_meta_f32(1.5 + seed as f32);
+        pw
+    }
+
+    fn assert_same(a: &PackedWire, b: &PackedWire) {
+        assert_eq!(a.tag(), b.tag());
+        assert_eq!(a.elems(), b.elems());
+        assert_eq!(a.value_bits(), b.value_bits());
+        assert_eq!(a.index_bits(), b.index_bits());
+        assert_eq!(a.bytes(), b.bytes());
+        assert_eq!(a.meta_bytes(), b.meta_bytes());
+    }
+
+    #[test]
+    fn frame_roundtrip_preserves_every_field() {
+        let pw = sample_packed(3);
+        let mut buf = Vec::new();
+        serialize_frame_into(&pw, &mut buf);
+        assert_eq!(
+            buf.len() - FRAME_HEADER_LEN,
+            pw.moved_cost().total_bytes() as usize,
+            "frame body must be exactly the claimed octets"
+        );
+        let mut out = PackedWire::default();
+        let consumed = deserialize_frame(&buf, &mut out).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_same(&pw, &out);
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        let pw = sample_packed(1);
+        let mut buf = Vec::new();
+        serialize_frame_into(&pw, &mut buf);
+        let mut out = PackedWire::default();
+        assert!(deserialize_frame(&buf[..10], &mut out).is_err());
+        assert!(deserialize_frame(&buf[..buf.len() - 1], &mut out).is_err());
+    }
+
+    fn exercise(t: &mut dyn Transport, world: usize) {
+        let packed: Vec<PackedWire> = (0..world as u32).map(sample_packed).collect();
+        let mut claimed = WireCost::default();
+        let mut claimed_octets = 0u64;
+        for pw in &packed {
+            claimed += pw.moved_cost();
+            claimed_octets += pw.moved_cost().total_bytes();
+        }
+        let delivered = t.exchange(&packed).unwrap();
+        assert_eq!(delivered.len(), world);
+        for (a, b) in packed.iter().zip(delivered.iter()) {
+            assert_same(a, b);
+        }
+        assert_eq!(t.moved(), claimed, "delivered accounting == encode-side claim");
+        if t.octets_moved() > 0 {
+            assert_eq!(t.octets_moved(), claimed_octets, "measured octets == claimed");
+        }
+        t.reset_moved();
+        assert_eq!(t.moved(), WireCost::default());
+        assert_eq!(t.octets_moved(), 0);
+    }
+
+    #[test]
+    fn in_process_delivers_zero_copy() {
+        let mut t = InProcess::new(3);
+        exercise(&mut t, 3);
+        assert_eq!(t.octets_moved(), 0);
+    }
+
+    #[test]
+    fn shared_mem_roundtrips_and_counts_octets() {
+        let mut t = SharedMem::new(3);
+        exercise(&mut t, 3);
+        // Second exchange uses the other slab of the ring.
+        exercise(&mut t, 3);
+    }
+
+    #[test]
+    fn tcp_roundtrips_and_counts_octets() {
+        let mut t = Tcp::new(3).unwrap();
+        exercise(&mut t, 3);
+        exercise(&mut t, 3);
+    }
+
+    #[test]
+    fn tcp_kill_peer_fails_cleanly_with_worker_index() {
+        let mut t = Tcp::new(3).unwrap();
+        exercise(&mut t, 3);
+        t.kill_peer(1);
+        let packed: Vec<PackedWire> = (0..3).map(sample_packed).collect();
+        let err = t.exchange(&packed).unwrap_err();
+        assert_eq!(err.transport, "tcp");
+        assert_eq!(err.worker, 1, "failure must name the dropped peer");
+    }
+
+    #[test]
+    fn bucket_plan_covers_every_layer_once_in_ready_order() {
+        let grads: Vec<Vec<Vec<f32>>> =
+            vec![vec![vec![0.0; 33], vec![0.0; 64], vec![0.0; 128], vec![0.0; 7]]];
+        let view = GradView::new(&grads);
+        let order = [3usize, 2, 1, 0];
+        for bytes in [1u64, 300, 1 << 30] {
+            let mut plan = BucketPlan::default();
+            plan.rebuild(&view, &order, bytes);
+            let flat: Vec<usize> =
+                (0..plan.num_buckets()).flat_map(|b| plan.bucket(b).to_vec()).collect();
+            assert_eq!(flat, order, "buckets must cover ready_order exactly (bytes={bytes})");
+            // Order-stable: same inputs, same plan.
+            let mut again = BucketPlan::default();
+            again.rebuild(&view, &order, bytes);
+            let flat2: Vec<usize> =
+                (0..again.num_buckets()).flat_map(|b| again.bucket(b).to_vec()).collect();
+            assert_eq!(flat, flat2);
+            assert_eq!(plan.num_buckets(), again.num_buckets());
+        }
+        // bytes=1: every layer in its own bucket; huge: one bucket.
+        let mut plan = BucketPlan::default();
+        plan.rebuild(&view, &order, 1);
+        assert_eq!(plan.num_buckets(), 4);
+        plan.rebuild(&view, &order, 1 << 30);
+        assert_eq!(plan.num_buckets(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "twice")]
+    fn bucket_plan_rejects_duplicate_layers() {
+        let grads: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; 4], vec![0.0; 4]]];
+        let view = GradView::new(&grads);
+        BucketPlan::default().rebuild(&view, &[0, 0], 1);
+    }
+
+    #[test]
+    fn auto_bucket_bytes_floors_and_splits() {
+        assert_eq!(auto_bucket_bytes(1 << 20, 4), (1 << 20) / 8);
+        assert_eq!(auto_bucket_bytes(1024, 4), 16 * 1024, "floored for tiny models");
+    }
+}

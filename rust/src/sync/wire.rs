@@ -393,6 +393,37 @@ impl PackedWire {
         // apslint: allow(panic_in_hot_path) -- try_into on a 4-byte slice is infallible; the slicing itself is the documented out-of-range panic
         f32::from_le_bytes(self.meta[b..b + 4].try_into().unwrap())
     }
+    /// The raw metadata side channel (transport serialization reads it
+    /// verbatim; decoding stays with [`Self::meta_f32`]).
+    pub fn meta_bytes(&self) -> &[u8] {
+        &self.meta
+    }
+
+    /// Reassemble a buffer from deserialized frame parts (the transport
+    /// seam's counterpart of [`Self::reset`] + writer calls). Keeps all
+    /// buffer capacity, including the `codes` transcode scratch.
+    pub fn assign_parts(
+        &mut self,
+        tag: u8,
+        elems: usize,
+        value_bits: u64,
+        index_bits: u64,
+        payload: &[u8],
+        meta: &[u8],
+    ) {
+        self.tag = tag;
+        self.elems = elems;
+        self.bytes.clear();
+        self.bytes.extend_from_slice(payload);
+        self.meta.clear();
+        self.meta.extend_from_slice(meta);
+        self.value_bits = value_bits;
+        self.index_bits = index_bits;
+        debug_assert!(
+            (value_bits + index_bits).div_ceil(8) <= self.bytes.len() as u64,
+            "deserialized bits exceed the packed payload"
+        );
+    }
 
     /// Random-access read of `width` bits at `bit_offset` in the payload
     /// (used by sparse binary search; reads past the end yield zeros).

@@ -1,0 +1,292 @@
+//! Bench-trajectory regression comparison for `BENCH_packed.json`.
+//!
+//! CI reruns the hotpath smoke bench on every push and diffs the fresh
+//! record against the committed baseline
+//! (`benches/BENCH_baseline.json`). Two very different kinds of columns,
+//! two very different tolerances:
+//!
+//! * **`bytes_moved` is exact.** Wire traffic is deterministic honest
+//!   accounting — a single byte of drift means a codec, transport, or
+//!   the accounting itself changed, and that is a correctness event, not
+//!   noise.
+//! * **`elems_per_sec` is gated at −20 %, machine-normalized.** Raw
+//!   rates are incomparable across machines, so each strategy's rate is
+//!   first divided by the *same file's* `dense_fp32@sim` rate (every
+//!   record carries that dense baseline row). The normalized ratio must
+//!   stay ≥ 0.8 × the baseline's ratio; speedups and noise upward pass
+//!   freely.
+//!
+//! Keys present only in the current record are reported as additions
+//! (new codecs/transports appear legitimately); keys that *vanish* are
+//! regressions — losing a row silently is how coverage rots. A baseline
+//! with an empty `strategies` map (the bootstrap state, stamped with a
+//! `note`) accepts any current record; `--refresh` then commits the
+//! measured record as the new baseline.
+
+use super::json::Json;
+
+/// The dense baseline row every record must carry for rate normalization.
+pub const NORM_KEY: &str = "dense_fp32@sim";
+
+/// Allowed fractional loss in machine-normalized throughput.
+pub const RATE_FLOOR: f64 = 0.8;
+
+/// One comparison's outcome. `regressions` non-empty ⇒ the gate fails.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DiffReport {
+    /// Keys compared in both records.
+    pub compared: usize,
+    /// Keys only in the current record (new coverage; informational).
+    pub added: Vec<String>,
+    /// Human-readable regression lines (empty ⇒ pass).
+    pub regressions: Vec<String>,
+    /// Non-fatal observations (e.g. empty bootstrap baseline).
+    pub notes: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "benchdiff: {} keys compared, {} added, {} regressions\n",
+            self.compared,
+            self.added.len(),
+            self.regressions.len()
+        ));
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        for a in &self.added {
+            out.push_str(&format!("  added: {a}\n"));
+        }
+        for r in &self.regressions {
+            out.push_str(&format!("  REGRESSION: {r}\n"));
+        }
+        out
+    }
+}
+
+fn strategies(doc: &Json) -> Result<&std::collections::BTreeMap<String, Json>, String> {
+    doc.get("strategies")
+        .and_then(|s| s.as_obj())
+        .map_err(|e| format!("record has no strategies map: {e}"))
+}
+
+fn row_f64(rows: &std::collections::BTreeMap<String, Json>, key: &str, field: &str) -> Option<f64> {
+    rows.get(key)?.opt(field)?.as_f64().ok()
+}
+
+/// The machine-normalizing denominator: the record's own dense fp32 rate.
+fn norm_rate(rows: &std::collections::BTreeMap<String, Json>) -> Option<f64> {
+    row_f64(rows, NORM_KEY, "elems_per_sec").filter(|r| *r > 0.0)
+}
+
+/// Compare a freshly measured record against the committed baseline.
+/// Returns `Err` only for malformed documents; measured regressions come
+/// back inside the report.
+pub fn compare(baseline: &Json, current: &Json) -> Result<DiffReport, String> {
+    let base = strategies(baseline)?;
+    let cur = strategies(current)?;
+    let mut report = DiffReport::default();
+
+    if base.is_empty() {
+        report.notes.push(
+            "baseline has no strategy rows (bootstrap); any current record passes — \
+             refresh the baseline to arm the gate"
+                .to_string(),
+        );
+        if let Ok(note) = baseline.get("note").and_then(|n| n.as_str()) {
+            report.notes.push(format!("baseline note: {note}"));
+        }
+    }
+
+    let base_norm = norm_rate(base);
+    let cur_norm = norm_rate(cur);
+    if !base.is_empty() && base_norm.is_none() {
+        report
+            .notes
+            .push(format!("baseline lacks a positive {NORM_KEY} rate; rate gate skipped"));
+    }
+    if !cur.is_empty() && cur_norm.is_none() {
+        report
+            .regressions
+            .push(format!("current record lacks the {NORM_KEY} normalization row"));
+    }
+
+    for (key, base_row) in base {
+        let Some(cur_row) = cur.get(key) else {
+            report.regressions.push(format!(
+                "{key}: present in baseline but missing from the current record \
+                 (bench coverage lost)"
+            ));
+            continue;
+        };
+        report.compared += 1;
+
+        match (
+            base_row.opt("bytes_moved").and_then(|v| v.as_f64().ok()),
+            cur_row.opt("bytes_moved").and_then(|v| v.as_f64().ok()),
+        ) {
+            (Some(b), Some(c)) => {
+                if b != c {
+                    report.regressions.push(format!(
+                        "{key}: bytes_moved changed {b} -> {c} (wire traffic is exact; \
+                         any drift is a codec/accounting change)"
+                    ));
+                }
+            }
+            _ => report
+                .regressions
+                .push(format!("{key}: bytes_moved column missing")),
+        }
+
+        if key == NORM_KEY {
+            continue; // The denominator is not gated against itself.
+        }
+        if let (Some(bn), Some(cn)) = (base_norm, cur_norm) {
+            match (
+                base_row.opt("elems_per_sec").and_then(|v| v.as_f64().ok()),
+                cur_row.opt("elems_per_sec").and_then(|v| v.as_f64().ok()),
+            ) {
+                (Some(b), Some(c)) => {
+                    let base_ratio = b / bn;
+                    let cur_ratio = c / cn;
+                    if cur_ratio < RATE_FLOOR * base_ratio {
+                        report.regressions.push(format!(
+                            "{key}: normalized throughput fell below the {RATE_FLOOR}x floor \
+                             (baseline {base_ratio:.3}x of dense, current {cur_ratio:.3}x)"
+                        ));
+                    }
+                }
+                _ => report
+                    .regressions
+                    .push(format!("{key}: elems_per_sec column missing")),
+            }
+        }
+    }
+
+    for key in cur.keys() {
+        if !base.contains_key(key) {
+            report.added.push(key.clone());
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(rows: &[(&str, f64, f64)]) -> Json {
+        let mut s = std::collections::BTreeMap::new();
+        for (k, bytes, rate) in rows {
+            let mut row = std::collections::BTreeMap::new();
+            row.insert("bytes_moved".to_string(), Json::Num(*bytes));
+            row.insert("elems_per_sec".to_string(), Json::Num(*rate));
+            s.insert(k.to_string(), Json::Obj(row));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("hotpath-packed".to_string()));
+        doc.insert("strategies".to_string(), Json::Obj(s));
+        Json::Obj(doc)
+    }
+
+    #[test]
+    fn identical_records_pass() {
+        let rows =
+            [(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7), ("fp32@ring", 4096.0, 8e7)];
+        let r = compare(&record(&rows), &record(&rows)).expect("well-formed");
+        assert!(r.ok(), "{}", r.render());
+        assert_eq!(r.compared, 3);
+        assert!(r.added.is_empty());
+    }
+
+    #[test]
+    fn bytes_drift_is_a_regression() {
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 257.0, 9e7)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(!r.ok());
+        assert!(r.regressions[0].contains("bytes_moved"), "{}", r.render());
+    }
+
+    #[test]
+    fn machine_speed_changes_cancel_out() {
+        // Current machine is 10x slower across the board: every raw rate
+        // drops, but the dense-normalized ratios are unchanged — pass.
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e7), ("ternary@ring", 256.0, 9e6)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(r.ok(), "{}", r.render());
+    }
+
+    #[test]
+    fn normalized_slowdown_past_floor_fails() {
+        // Dense rate unchanged, ternary alone fell to 0.5x its baseline
+        // ratio — a genuine per-codec regression.
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 4.5e7)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(!r.ok());
+        assert!(r.regressions[0].contains("floor"), "{}", r.render());
+    }
+
+    #[test]
+    fn small_noise_within_floor_passes() {
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 7.5e7)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(r.ok(), "0.83x of baseline ratio is within the 0.8 floor: {}", r.render());
+    }
+
+    #[test]
+    fn vanished_key_is_a_regression_and_new_key_is_an_addition() {
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[
+            (NORM_KEY, 4096.0, 1e8),
+            ("overlap_ternary@tcp", 256.0, 8e7),
+        ]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(!r.ok());
+        assert!(r.regressions[0].contains("coverage lost"));
+        assert_eq!(r.added, ["overlap_ternary@tcp"]);
+    }
+
+    #[test]
+    fn empty_bootstrap_baseline_accepts_anything() {
+        let base = record(&[]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(r.ok(), "{}", r.render());
+        assert_eq!(r.compared, 0);
+        assert_eq!(r.added.len(), 2);
+        assert!(r.notes.iter().any(|n| n.contains("bootstrap")), "{}", r.render());
+    }
+
+    #[test]
+    fn parses_real_record_shape() {
+        let text = r#"{
+            "bench": "hotpath-packed",
+            "world": 8,
+            "elements": 16384,
+            "strategies": {
+                "dense_fp32@sim": {"bytes_moved": 65536, "elems_per_sec": 1.0e8},
+                "ternary@ring": {"bytes_moved": 4112, "elems_per_sec": 1.1e8}
+            }
+        }"#;
+        let doc = Json::parse(text).expect("parse");
+        let r = compare(&doc, &doc).expect("well-formed");
+        assert!(r.ok(), "{}", r.render());
+        assert_eq!(r.compared, 2);
+    }
+
+    #[test]
+    fn missing_strategies_map_is_an_error() {
+        let doc = Json::parse(r#"{"bench": "x"}"#).expect("parse");
+        assert!(compare(&doc, &doc).is_err());
+    }
+}

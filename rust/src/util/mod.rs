@@ -13,6 +13,9 @@
 //! * [`cli`] — declarative-ish `--flag value` argument parsing.
 //! * [`bench`] — a micro-benchmark harness (median-of-runs timing) used
 //!   by `benches/*` in place of criterion.
+//! * [`benchdiff`] — the bench-trajectory regression gate (diffs
+//!   `BENCH_packed.json` against the committed baseline; exact on
+//!   bytes-moved, −20 % floor on machine-normalized throughput).
 //! * [`par`] — scoped-thread parallel helpers for the element-wise hot
 //!   loops (quantize, reduction folds).
 //! * [`ptest`] — a miniature property-testing harness (random cases +
@@ -20,6 +23,7 @@
 //! * [`table`] — fixed-width ASCII table rendering for bench reports.
 
 pub mod bench;
+pub mod benchdiff;
 pub mod cli;
 pub mod json;
 pub mod par;

@@ -243,6 +243,61 @@ fn nondeterminism_waivable() {
     assert!(!diags[0].is_fatal());
 }
 
+// ---- overlap hot set --------------------------------------------------
+//
+// The bucketed-overlap PR widened the repo hot set: the per-bucket
+// encode/fold/drain entry points (`step_overlapped`,
+// `encode_bucket_layers`, `overlap_worker` in sync/session.rs) and the
+// transport frame path (`exchange`, `serialize_frame_into`,
+// `deserialize_frame` in sync/transport.rs). Pin that the *default*
+// config covers them — a fixture violation in a matching file must
+// fire — and that cold transport setup stays out of the hot set.
+
+#[test]
+fn repo_default_covers_overlap_session_entry_points() {
+    for name in ["step_overlapped", "encode_bucket_layers", "overlap_worker"] {
+        let src = format!("fn {name}() {{ let v: Vec<u8> = Vec::new(); drop(v); }}\n");
+        assert_eq!(
+            fatal_rules("rust/src/sync/session.rs", &src, &Config::repo_default()),
+            ["alloc_in_hot_path"],
+            "{name} must be in the repo-default hot set"
+        );
+    }
+}
+
+#[test]
+fn repo_default_covers_transport_frame_path() {
+    for name in ["exchange", "serialize_frame_into", "deserialize_frame"] {
+        let src = format!("fn {name}(x: Option<u8>) -> u8 {{ x.unwrap() }}\n");
+        assert_eq!(
+            fatal_rules("rust/src/sync/transport.rs", &src, &Config::repo_default()),
+            ["panic_in_hot_path"],
+            "{name} must be in the repo-default hot set"
+        );
+    }
+}
+
+#[test]
+fn repo_default_covers_frame_assign_on_wire() {
+    let src = "fn assign_parts() { let v: Vec<u8> = vec![0u8]; drop(v); }\n";
+    assert_eq!(
+        fatal_rules("rust/src/sync/wire.rs", src, &Config::repo_default()),
+        ["alloc_in_hot_path"],
+        "assign_parts must be in the repo-default hot set"
+    );
+}
+
+#[test]
+fn transport_setup_is_cold() {
+    // Connection setup allocates by design (socket vectors, slab rings,
+    // channel seeding); `new` is not hot-listed, so no waiver needed.
+    let src = "fn new(world: usize) -> Tcp { let v: Vec<u8> = Vec::with_capacity(world); todo!() }\n";
+    assert!(
+        fatal_rules("rust/src/sync/transport.rs", src, &Config::repo_default()).is_empty(),
+        "transport construction must stay out of the hot set"
+    );
+}
+
 // ---- waiver syntax ----------------------------------------------------
 
 #[test]

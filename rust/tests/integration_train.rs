@@ -12,7 +12,7 @@ use aps_cpd::coordinator::{Trainer, TrainerSetup};
 use aps_cpd::cpd::FpFormat;
 use aps_cpd::optim::LrSchedule;
 use aps_cpd::runtime::{Engine, Model};
-use aps_cpd::sync::StrategySpec;
+use aps_cpd::sync::{StrategySpec, TransportSpec};
 
 fn have_artifacts() -> bool {
     std::path::Path::new("artifacts/mlp.json").exists()
@@ -80,6 +80,45 @@ fn aps_8bit_tracks_fp32_and_naive_4bit_does_not() {
     assert!(aps.comm_payload_bytes * 3 < fp32.comm_payload_bytes);
     // Its exponent phase is a rounding error of the payload.
     assert!(aps.comm_exponent_bytes * 50 < aps.comm_payload_bytes);
+}
+
+/// Routing the trainer through the overlapped path (shared-memory
+/// transport, bucketed backprop-order sync) must leave the final
+/// parameters bit-identical to the synchronous in-process run — the
+/// transport and the bucketing change *when* and *where* bytes move,
+/// never the arithmetic.
+#[test]
+fn overlapped_transport_training_matches_synchronous() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = load(&engine, "mlp");
+
+    let mut base = quick_setup(4, SyncMethod::Aps { fmt: FpFormat::E5M2 });
+    base.epochs = 1;
+    base.steps_per_epoch = 6;
+    let mut over = base.clone();
+    over.transport = TransportSpec::SharedMem;
+
+    let mut t_sync = Trainer::new(&model, base).unwrap();
+    let sync_out = t_sync.train("it-sync").unwrap();
+    let mut t_over = Trainer::new(&model, over).unwrap();
+    let over_out = t_over.train("it-overlap").unwrap();
+
+    assert!(!over_out.diverged);
+    assert_eq!(sync_out.comm_honest_bytes, over_out.comm_honest_bytes);
+    assert_eq!(sync_out.steps_run, over_out.steps_run);
+    for (l, (a, b)) in t_sync.params.iter().zip(t_over.params.iter()).enumerate() {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "param tensor {l} elem {i}: overlapped training diverged"
+            );
+        }
+    }
 }
 
 #[test]

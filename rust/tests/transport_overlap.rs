@@ -1,0 +1,285 @@
+//! The overlapped-path equivalence suite: `SyncSession::step_overlapped`
+//! must be **bit-identical** to the synchronous packed `step()` — reduced
+//! gradients, reports, and measured `wire_moved` — for every shipped
+//! codec, over every `Transport`, at every bucket size. The overlap only
+//! reorders *which thread* encodes/folds a bucket and *when*; it never
+//! changes any per-element fold chain (PR 7's schedule-independence
+//! discipline), so equality here is exact, not approximate.
+//!
+//! Also pinned:
+//! * **transport-level wire honesty** — for serializing transports
+//!   (shared-mem, TCP) the octets measured on the channel equal the
+//!   encode-side claimed bytes exactly, step after step; the in-process
+//!   transport moves references, so both sides stay 0;
+//! * **fault semantics** — a killed TCP peer turns the step into a clean
+//!   `Err` naming the peer, with no partial fold applied: the reduced
+//!   buffers come back empty, the report zeroed, `steps_done` unchanged;
+//! * **bucket-plan laws** — every layer lands in exactly one bucket, in
+//!   `ready_order`, for any bucket size.
+
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::sync::{StrategySpec, SyncSession, SyncSessionBuilder, TransportSpec};
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+/// The same 11-codec roster the conformance suite pins.
+fn codecs() -> Vec<(&'static str, StrategySpec)> {
+    vec![
+        ("fp32", StrategySpec::Fp32),
+        ("naive/e5m2", StrategySpec::Naive { fmt: FpFormat::E5M2 }),
+        (
+            "loss_scaling/e5m2",
+            StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        ),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ternary", StrategySpec::Ternary { seed: 42 }),
+        ("topk@0.25", StrategySpec::TopK { frac: 0.25 }),
+        ("qsgd b4/32", StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 }),
+        ("ef:ternary", ef(StrategySpec::Ternary { seed: 42 })),
+        ("ef:topk", ef(StrategySpec::TopK { frac: 0.25 })),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 })),
+    ]
+}
+
+const WORLD: usize = 4;
+const LAYERS: [usize; 5] = [33, 64, 128, 7, 256];
+
+/// Deterministic mixed-scale gradients: signs, zeros, subnormal-ish and
+/// large magnitudes, different per worker and per step.
+fn grads(step: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..WORLD)
+        .map(|w| {
+            LAYERS
+                .iter()
+                .enumerate()
+                .map(|(l, &n)| {
+                    (0..n)
+                        .map(|i| {
+                            let h = (w * 131 + l * 31 + i * 7 + step * 977) % 23;
+                            let mag = match h % 4 {
+                                0 => 1e-6,
+                                1 => 0.125,
+                                2 => 3.5,
+                                _ => 96.0,
+                            };
+                            let sign = if h % 3 == 0 { -1.0 } else { 1.0 };
+                            if h == 11 {
+                                0.0
+                            } else {
+                                sign * mag * (1.0 + (h as f32) / 23.0)
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn sync_session(spec: &StrategySpec) -> SyncSession {
+    SyncSessionBuilder::new(WORLD).spec(spec.clone()).build()
+}
+
+fn overlap_session(
+    spec: &StrategySpec,
+    transport: TransportSpec,
+    bucket_bytes: usize,
+) -> SyncSession {
+    SyncSessionBuilder::new(WORLD)
+        .spec(spec.clone())
+        .with_transport(transport)
+        .with_bucket_bytes(bucket_bytes)
+        .build()
+}
+
+/// Backprop order: last layer's gradient is ready first.
+fn backprop_order() -> Vec<usize> {
+    (0..LAYERS.len()).rev().collect()
+}
+
+fn assert_bit_identical(label: &str, transport: TransportSpec, bucket_bytes: usize) {
+    for (name, spec) in codecs() {
+        let mut sync = sync_session(&spec);
+        let mut over = overlap_session(&spec, transport, bucket_bytes);
+        let order = backprop_order();
+        for step in 0..2 {
+            let g = grads(step);
+            let (s_out, s_report) = sync.step(&g);
+            let s_out: Vec<Vec<u32>> =
+                s_out.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect();
+            let s_report = s_report.clone();
+            let s_moved = sync.wire_moved();
+
+            let (o_out, o_report) = over
+                .step_overlapped(&g, &order)
+                .unwrap_or_else(|e| panic!("{label}/{name} step {step}: {e}"));
+            assert_eq!(o_out.len(), s_out.len(), "{label}/{name} step {step}: layer count");
+            for (l, (sl, ol)) in s_out.iter().zip(o_out.iter()).enumerate() {
+                assert_eq!(sl.len(), ol.len(), "{label}/{name} step {step} layer {l}: len");
+                for (i, (&sb, &o)) in sl.iter().zip(ol.iter()).enumerate() {
+                    assert_eq!(
+                        sb,
+                        o.to_bits(),
+                        "{label}/{name} step {step} layer {l} elem {i}: bits diverge"
+                    );
+                }
+            }
+            assert_eq!(&s_report, o_report, "{label}/{name} step {step}: report");
+            let covered: usize = o_report.buckets.iter().map(|b| b.layers).sum();
+            assert_eq!(covered, LAYERS.len(), "{label}/{name} step {step}: bucket coverage");
+            assert_eq!(
+                s_moved,
+                over.wire_moved(),
+                "{label}/{name} step {step}: measured wire"
+            );
+        }
+        // Transport-level wire honesty, cumulative over both steps:
+        // measured channel octets equal the encode-side claim exactly.
+        let traffic = over
+            .transport_traffic()
+            .unwrap_or_else(|| panic!("{label}/{name}: overlap pool never spawned"));
+        assert_eq!(
+            traffic.octets, traffic.claimed_octets,
+            "{label}/{name}: transport moved octets != claimed octets"
+        );
+        if transport == TransportSpec::InProcess {
+            assert_eq!(traffic.octets, 0, "{label}/{name}: in-process moves references");
+        } else {
+            assert!(traffic.octets > 0, "{label}/{name}: serializing transport moved nothing");
+        }
+    }
+}
+
+#[test]
+fn in_process_bit_identical_per_layer_buckets() {
+    assert_bit_identical("in_process/bb=1", TransportSpec::InProcess, 1);
+}
+
+#[test]
+fn in_process_bit_identical_auto_buckets() {
+    assert_bit_identical("in_process/bb=auto", TransportSpec::InProcess, 0);
+}
+
+#[test]
+fn in_process_bit_identical_whole_model_bucket() {
+    assert_bit_identical("in_process/bb=max", TransportSpec::InProcess, 1 << 30);
+}
+
+#[test]
+fn shared_mem_bit_identical_per_layer_buckets() {
+    assert_bit_identical("shared_mem/bb=1", TransportSpec::SharedMem, 1);
+}
+
+#[test]
+fn shared_mem_bit_identical_auto_buckets() {
+    assert_bit_identical("shared_mem/bb=auto", TransportSpec::SharedMem, 0);
+}
+
+#[test]
+fn shared_mem_bit_identical_whole_model_bucket() {
+    assert_bit_identical("shared_mem/bb=max", TransportSpec::SharedMem, 1 << 30);
+}
+
+#[test]
+fn tcp_bit_identical_per_layer_buckets() {
+    assert_bit_identical("tcp/bb=1", TransportSpec::Tcp, 1);
+}
+
+#[test]
+fn tcp_bit_identical_auto_buckets() {
+    assert_bit_identical("tcp/bb=auto", TransportSpec::Tcp, 0);
+}
+
+#[test]
+fn tcp_bit_identical_whole_model_bucket() {
+    assert_bit_identical("tcp/bb=max", TransportSpec::Tcp, 1 << 30);
+}
+
+/// `ready_order` is the caller's claim about backprop completion order;
+/// any permutation must give the same bits (the drain decodes in
+/// ascending layer order regardless).
+#[test]
+fn ready_order_permutations_are_equivalent() {
+    let spec = StrategySpec::Aps { fmt: FpFormat::E5M2 };
+    let natural: Vec<usize> = (0..LAYERS.len()).collect();
+    let twisted = [2usize, 0, 4, 1, 3];
+    let g = grads(0);
+
+    let mut a = overlap_session(&spec, TransportSpec::SharedMem, 96);
+    let mut b = overlap_session(&spec, TransportSpec::SharedMem, 96);
+    let (ao, ar) = a.step_overlapped(&g, &natural).expect("natural order");
+    let ao: Vec<Vec<u32>> =
+        ao.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect();
+    let ar = ar.clone();
+    let (bo, br) = b.step_overlapped(&g, &twisted).expect("twisted order");
+    for (l, (al, bl)) in ao.iter().zip(bo.iter()).enumerate() {
+        for (i, (&x, &y)) in al.iter().zip(bl.iter()).enumerate() {
+            assert_eq!(x, y.to_bits(), "layer {l} elem {i}");
+        }
+    }
+    assert_eq!(&ar, br);
+}
+
+#[test]
+#[should_panic(expected = "ready_order")]
+fn duplicate_ready_order_layer_panics() {
+    let spec = StrategySpec::Fp32;
+    let mut s = overlap_session(&spec, TransportSpec::InProcess, 0);
+    let g = grads(0);
+    let _ = s.step_overlapped(&g, &[0, 1, 2, 2, 4]);
+}
+
+/// A TCP peer dying mid-step must surface as a clean error naming the
+/// peer, with no partial fold applied and the step not counted.
+#[test]
+fn tcp_peer_drop_yields_clean_error() {
+    let spec = StrategySpec::Ternary { seed: 42 };
+    let mut s = overlap_session(&spec, TransportSpec::Tcp, 0);
+    let order = backprop_order();
+
+    let g = grads(0);
+    let (_, report) = s.step_overlapped(&g, &order).expect("healthy step");
+    assert_eq!(report.layers.len(), LAYERS.len());
+    assert_eq!(s.steps_done(), 1);
+
+    assert!(s.kill_transport_peer(2), "overlap-capable session accepts the kill");
+    let g = grads(1);
+    let err = s.step_overlapped(&g, &order).expect_err("killed peer must fail the step");
+    assert_eq!(err.transport, "tcp");
+    assert_eq!(err.worker, 2, "the error names the dropped peer: {err}");
+
+    // No partial fold escaped: outputs empty, report zeroed, the failed
+    // step not counted.
+    assert_eq!(s.steps_done(), 1);
+    assert!(s.reduced().iter().all(|l| l.is_empty()), "reduced must be emptied");
+    assert!(s.report().layers.is_empty());
+    assert_eq!(s.report().messages, 0);
+    assert_eq!(s.wire_moved(), None);
+}
+
+/// Custom strategies cannot be twinned onto the pool; the overlapped
+/// entry point must silently take the synchronous path and still honor
+/// the `ready_order` contract.
+#[test]
+fn custom_strategy_falls_back_without_overlap() {
+    let mut s = SyncSessionBuilder::new(WORLD)
+        .strategy(StrategySpec::Ternary { seed: 42 }.build())
+        .build();
+    assert_eq!(s.overlap_transport(), None);
+    let g = grads(0);
+    let order = backprop_order();
+    let (out, report) = s.step_overlapped(&g, &order).expect("fallback never fails");
+    assert_eq!(out.len(), LAYERS.len());
+    assert!(report.buckets.is_empty(), "fallback is the synchronous path");
+
+    let mut twin = sync_session(&StrategySpec::Ternary { seed: 42 });
+    let (t_out, _) = twin.step(&g);
+    for (a, b) in out.iter().zip(t_out.iter()) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
