@@ -13,7 +13,11 @@
 //!    where a real wire pays bandwidth, so the two columns are printed
 //!    side by side as evidence, not gated against each other; what *is*
 //!    asserted is that honest bytes and reduced bits are invariant to the
-//!    transport and the bucketing.
+//!    transport and the bucketing;
+//! 4. the parameter-server column (`sync.topology = "ps"`): α–β predicted
+//!    push/pull time per shard count vs the ring, plus a smoke check that
+//!    the PS session replays bit-identically and keeps its transport
+//!    octets equal to the claimed `WireCost`.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -212,4 +216,66 @@ fn main() {
     }
     t.print();
     println!("\n(honest bytes and reduced bits verified invariant across all\n transport × bucket-size configurations ✔)");
+
+    // ---- (4) parameter-server column ----------------------------------
+    println!("\nparameter-server topology (sync.topology = \"ps\"): α–β predicted");
+    println!("push/pull vs ring for the fused fig11 payload, and measured");
+    println!("wall-clock of one PS session step (4 sim workers, 1/64 scale):\n");
+
+    let total_bytes: u64 = layers.iter().map(|&n| n as u64).sum::<u64>() * 2; // fp16-width payload
+    let ring_ms = model.allreduce_time(Topology::Ring, world, total_bytes) * 1e3;
+    let mut t = Table::new(&[
+        "codec",
+        "shards",
+        "α–β ring ms",
+        "α–β PS ms",
+        "measured ms",
+    ]);
+    for (cname, spec) in &codecs {
+        for shards in [2usize, 4] {
+            let topo = Topology::Ps { shards, staleness: 0 };
+            let ps_ms = model.allreduce_time(topo, world, total_bytes) * 1e3;
+            let mut s = SyncSessionBuilder::new(world)
+                .spec(spec.clone())
+                .with_topology(topo)
+                .with_transport(TransportSpec::SharedMem)
+                .build();
+            let m = ob.run("ps", || {
+                s.step_checked(&grads).expect("shared-mem PS step");
+            });
+            t.row(&[
+                cname.to_string(),
+                format!("{shards}"),
+                format!("{ring_ms:.3}"),
+                format!("{ps_ms:.3}"),
+                format!("{:.3}", m.median() * 1e3),
+            ]);
+            let traffic = s.collective_traffic().expect("PS owns a transport");
+            assert_eq!(
+                traffic.octets, traffic.claimed_octets,
+                "{cname}/shards={shards}: PS octets must match the claimed WireCost"
+            );
+        }
+    }
+    t.print();
+
+    // Smoke: two identically-built PS sessions replay bit-identically.
+    let mut a = SyncSessionBuilder::new(world)
+        .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+        .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+        .build();
+    let mut b = SyncSessionBuilder::new(world)
+        .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+        .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+        .build();
+    let (ao, _) = a.step_checked(&grads).expect("in-process PS step");
+    let ao: Vec<Vec<u32>> =
+        ao.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect();
+    let (bo, _) = b.step_checked(&grads).expect("in-process PS step");
+    for (l, (al, bl)) in ao.iter().zip(bo.iter()).enumerate() {
+        for (i, (&x, &y)) in al.iter().zip(bl.iter()).enumerate() {
+            assert_eq!(x, y.to_bits(), "ps smoke layer {l} elem {i}: replay diverged");
+        }
+    }
+    println!("\n(PS replay bit-identical and wire-honest across shard counts ✔)");
 }

@@ -23,6 +23,7 @@ pub mod hierarchical;
 pub mod ring;
 
 use crate::cpd::{quantize, FpFormat, Rounding};
+use crate::sync::transport::{TransportError, TransportTraffic};
 use crate::sync::wire::{PackScratch, PackedWire};
 use crate::sync::{LayerCtx, SyncStrategy};
 
@@ -40,11 +41,17 @@ pub enum Topology {
     Ring,
     /// Hierarchical all-reduce with groups of `group_size` workers.
     Hierarchical { group_size: usize },
+    /// Parameter server: workers push gradient shards to `shards`
+    /// server shards and pull the reduced result, tolerating up to
+    /// `staleness` rounds of lag per worker (Downpour-style
+    /// non-blocking pushes; 0 = fully synchronous).
+    Ps { shards: usize, staleness: usize },
 }
 
 impl Topology {
     /// Number of communication steps (paper §4.2: ring `2(p-1)`,
-    /// hierarchical `4(k-1) + 2(p/k - 1)`).
+    /// hierarchical `4(k-1) + 2(p/k - 1)`; parameter server: one push
+    /// plus one pull, world-independent).
     pub fn steps(&self, world: usize) -> usize {
         match *self {
             Topology::Ring => 2 * (world - 1),
@@ -52,16 +59,23 @@ impl Topology {
                 assert!(world % k == 0, "world {world} not divisible by group {k}");
                 4 * (k - 1) + 2 * (world / k - 1)
             }
+            Topology::Ps { .. } => 2,
         }
     }
 
     /// Build the [`Collective`] implementing this topology over `world`
     /// workers — the bridge from the closed enum to the open trait layer.
+    /// The parameter server is built over the in-process transport here;
+    /// [`crate::sync::SyncSessionBuilder`] rebuilds it over the session's
+    /// configured transport.
     pub fn collective(&self, world: usize) -> Box<dyn Collective> {
         match *self {
             Topology::Ring => Box::new(RingCollective::new(world)),
             Topology::Hierarchical { group_size } => {
                 Box::new(HierarchicalCollective::new(world, group_size))
+            }
+            Topology::Ps { shards, staleness } => {
+                Box::new(crate::sync::ps::PsCollective::new(world, shards, staleness))
             }
         }
     }
@@ -127,6 +141,56 @@ pub trait Collective {
             strategy.decode_packed(pw, ctx, 0..out.len(), d);
         }
         self.all_reduce_sum_into(&scratch.dense, out, opts)
+    }
+
+    /// Take the fault recorded by the most recent reduce, if any.
+    /// Collectives that own a real transport (the parameter server)
+    /// record channel failures here, because the reduce methods have no
+    /// error channel; `Some` means the corresponding output was zeroed —
+    /// a partial fold never escapes. Default: faultless.
+    fn take_fault(&self) -> Option<TransportError> {
+        None
+    }
+
+    /// Measured-vs-claimed octet accounting of the collective's owned
+    /// transport, when it has one (the parameter server). Default: none.
+    fn transport_traffic(&self) -> Option<TransportTraffic> {
+        None
+    }
+
+    /// Elastic membership: include/exclude `worker`'s future
+    /// contributions (graceful join/leave with gradient re-sharding).
+    /// Returns whether the collective supports membership changes.
+    fn set_member_active(&self, _worker: usize, _active: bool) -> bool {
+        false
+    }
+
+    /// Straggler schedule: delay `worker`'s future contributions by
+    /// `rounds` logical rounds (clamped to the collective's staleness
+    /// budget). Returns whether supported.
+    fn set_arrival_delay(&self, _worker: usize, _rounds: usize) -> bool {
+        false
+    }
+
+    /// Drop `worker`'s channel on the owned transport (fault
+    /// injection). Returns whether the collective owns a transport with
+    /// real channels.
+    fn kill_transport_peer(&self, _worker: usize) -> bool {
+        false
+    }
+
+    /// Configure the owned transport's straggler patience: per-poll
+    /// read timeout (milliseconds) × tolerated consecutive timeouts.
+    /// Returns whether supported.
+    fn set_transport_patience(&self, _read_timeout_ms: u64, _max_timeouts: usize) -> bool {
+        false
+    }
+
+    /// Delay every send on `worker`'s owned-transport channel by
+    /// `delay_ms` (wall-clock straggler injection). Returns whether
+    /// supported.
+    fn inject_transport_delay(&self, _worker: usize, _delay_ms: u64) -> bool {
+        false
     }
 }
 
@@ -390,6 +454,14 @@ impl SimCluster {
             Topology::Hierarchical { group_size } => {
                 hierarchical::all_reduce(contribs, group_size, opts)
             }
+            Topology::Ps { shards, staleness } => {
+                // Fresh synchronous server (no carried staleness state):
+                // every worker's round-0 contribution arrives on time.
+                let ps = crate::sync::ps::PsCollective::new(self.world_size, shards, staleness);
+                let mut out = vec![0.0f32; n];
+                let stats = ps.all_reduce_sum_into(contribs, &mut out, &opts);
+                (out, stats)
+            }
         }
     }
 
@@ -522,5 +594,7 @@ mod tests {
         // the formula; the prose constant appears to be an arithmetic slip
         // (see DESIGN.md §discrepancies). Either way ≪ 510 ring steps.
         assert_eq!(Topology::Hierarchical { group_size: 16 }.steps(256), 90);
+        // Parameter server: one push + one pull, independent of world.
+        assert_eq!(Topology::Ps { shards: 4, staleness: 1 }.steps(256), 2);
     }
 }

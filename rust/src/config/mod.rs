@@ -79,8 +79,12 @@ impl ExperimentConfig {
 
         // [cluster]
         let world_size = doc.get("cluster", "world_size")?.as_usize()?;
+        // `sync.topology` is the canonical spelling (the topology is a
+        // property of gradient sync); `cluster.topology` stays accepted
+        // for older configs and loses when both are present.
         let topo_name = doc
-            .opt("cluster", "topology")
+            .opt("sync", "topology")
+            .or_else(|| doc.opt("cluster", "topology"))
             .map(|v| v.as_str().map(str::to_string))
             .transpose()?
             .unwrap_or_else(|| "ring".to_string());
@@ -89,10 +93,29 @@ impl ExperimentConfig {
             .map(|v| v.as_usize())
             .transpose()?
             .unwrap_or(16);
+        // [ps] — parameter-server shape, read only when selected.
+        let ps_shards = doc
+            .opt("ps", "shards")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(2);
+        let ps_staleness = doc
+            .opt("ps", "staleness")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0);
         let topology = match topo_name.as_str() {
             "ring" => Topology::Ring,
             "hierarchical" => Topology::Hierarchical { group_size },
-            other => return Err(anyhow!("unknown topology {other:?} (ring|hierarchical)")),
+            "ps" => {
+                if ps_shards == 0 {
+                    return Err(anyhow!("ps.shards must be >= 1"));
+                }
+                Topology::Ps { shards: ps_shards, staleness: ps_staleness }
+            }
+            other => {
+                return Err(anyhow!("unknown topology {other:?} (ring|hierarchical|ps)"))
+            }
         };
 
         // [sync]
@@ -376,6 +399,32 @@ steps_per_epoch = 2
         assert!(ExperimentConfig::from_toml_str(&bad_method).is_err());
         let bad_fmt = SAMPLE.replace("e4m3", "e99m1");
         assert!(ExperimentConfig::from_toml_str(&bad_fmt).is_err());
+    }
+
+    #[test]
+    fn ps_topology_parses_with_knobs_and_defaults() {
+        // `sync.topology` is canonical and wins over `cluster.topology`
+        // (SAMPLE says hierarchical there).
+        let ps = SAMPLE.replace("kahan = true", "kahan = true\ntopology = \"ps\"");
+        let cfg = ExperimentConfig::from_toml_str(&ps).unwrap();
+        assert_eq!(
+            cfg.topology,
+            Topology::Ps { shards: 2, staleness: 0 },
+            "defaults: 2 shards, fully synchronous"
+        );
+
+        // The legacy cluster-section spelling still selects PS, and the
+        // [ps] section supplies the shape.
+        let ps = SAMPLE
+            .replace("topology = \"hierarchical\"", "topology = \"ps\"")
+            .replace("group_size = 4", "group_size = 4\n\n[ps]\nshards = 8\nstaleness = 3");
+        let cfg = ExperimentConfig::from_toml_str(&ps).unwrap();
+        assert_eq!(cfg.topology, Topology::Ps { shards: 8, staleness: 3 });
+
+        let bad = SAMPLE
+            .replace("topology = \"hierarchical\"", "topology = \"ps\"")
+            .replace("group_size = 4", "group_size = 4\n\n[ps]\nshards = 0");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err(), "zero shards must error");
     }
 
     #[test]

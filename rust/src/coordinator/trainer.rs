@@ -2,6 +2,7 @@
 
 use super::Workload;
 use crate::aps::{self, HybridSchedule, SyncOptions};
+use crate::collectives::Topology;
 use crate::cpd::avg_roundoff_error;
 use crate::data::shard_range;
 use crate::metrics::{top1_accuracy, SegmentationMetrics, Series};
@@ -254,7 +255,15 @@ impl<'m> Trainer<'m> {
         }
         let overlapped = self.setup.transport != TransportSpec::InProcess
             || self.setup.bucket_bytes != 0;
-        let (reduced, report) = if overlapped {
+        let (reduced, report) = if matches!(self.setup.sync.topo, Topology::Ps { .. }) {
+            // The parameter server owns its transport and can fault
+            // mid-step (straggler past patience, dead peer); the checked
+            // path rolls the step back cleanly and surfaces the
+            // TransportError instead of applying a partial fold.
+            self.session
+                .step_checked(&worker_grads)
+                .map_err(|e| anyhow!("gradient sync failed: {e}"))?
+        } else if overlapped {
             // Backprop completion order: the last layer's gradient is
             // ready first, so its bucket ships while earlier layers are
             // still "computing". (After a hybrid strategy swap the

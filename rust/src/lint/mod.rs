@@ -170,6 +170,17 @@ impl Config {
                     "sync/transport.rs",
                     &["exchange", "serialize_frame_into", "deserialize_frame"],
                 ),
+                // Parameter-server push/pull/fold path: one round per
+                // reduce call, so these run once per layer per step.
+                hot(
+                    "sync/ps.rs",
+                    &[
+                        "all_reduce_sum_into",
+                        "all_reduce_packed_sum_into",
+                        "all_reduce_max_i8_into",
+                        "fold_due",
+                    ],
+                ),
                 // Bit-packing kernels: every BitWriter/BitReader method
                 // and every pack_*/unpack_* transcoder.
                 hot(

@@ -65,6 +65,15 @@ impl NetworkModel {
                 let bw = (2 * (k - 1)) as f64 * s + 2.0 * (m - 1.0) / m * s;
                 steps * self.alpha + bw * self.beta
             }
+            Topology::Ps { shards, .. } => {
+                // Push + pull (two α latencies regardless of p); each of
+                // the S server shards ingests p contributions of its s/S
+                // slice and fans the result back out, so the serialized
+                // bandwidth term scales with p/S — the classic PS
+                // incast bottleneck that sharding divides.
+                let sh = shards.max(1) as f64;
+                2.0 * self.alpha + s * self.beta * (2.0 * p as f64 / sh)
+            }
         }
     }
 }

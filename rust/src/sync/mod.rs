@@ -62,6 +62,7 @@
 //! bit-identity equivalence suite.
 
 pub mod feedback;
+pub mod ps;
 pub mod session;
 pub mod strategies;
 pub mod transport;
@@ -69,9 +70,10 @@ pub mod wire;
 
 pub use crate::aps::{BucketStats, LayerReport, SyncReport};
 pub use feedback::ErrorFeedback;
+pub use ps::PsCollective;
 pub use session::{SyncSession, SyncSessionBuilder};
 pub use transport::{
-    BucketPlan, Transport, TransportError, TransportSpec, TransportTraffic,
+    BucketPlan, FaultKind, Transport, TransportError, TransportSpec, TransportTraffic,
 };
 pub use strategies::{
     ApsStrategy, Fp32Strategy, LossScalingStrategy, NaiveStrategy, QsgdStrategy, TernaryStrategy,

@@ -1,0 +1,631 @@
+//! Parameter-server collective (ROADMAP open item 1): workers push
+//! packed gradient shards to `shards` server shards over a real
+//! [`Transport`] and pull the reduced result back — Downpour-style
+//! non-blocking pushes (Dean et al., *Large Scale Distributed Deep
+//! Networks*) with DGC-style tolerance of late contributions (Lin et
+//! al., *Deep Gradient Compression*), on top of the fault semantics the
+//! transport seam provides.
+//!
+//! **Rounds and staleness.** Every gradient reduce through the
+//! collective is one logical *round*. A worker with arrival delay `d`
+//! (set via [`Collective::set_arrival_delay`], clamped to the
+//! collective's staleness budget `K`) contributes its round-`t` gradient
+//! at round `t + d`; a round's output is the fold of exactly the
+//! contributions that arrive that round (zero when none do). Delays are
+//! counted in reduce calls, so for an `L`-layer model a delay of one
+//! *step* is `L` rounds — the fold asserts the shapes line up rather
+//! than silently folding one layer's stale gradient into another.
+//!
+//! **Determinism.** Arrivals are folded sorted by `(origin round,
+//! worker)` in [`FOLD_BLOCK`]-element cache blocks with the shared
+//! [`fold_step`] kernel (stack-resident Kahan lane), so a fixed arrival
+//! schedule replays bit-exactly — the contract
+//! `rust/tests/ps_topology.rs` pins across all shipped codecs. Server
+//! shards (`[s·n/S, (s+1)·n/S)` ranges, re-split whenever membership
+//! changes) only partition the iteration space: each element's fold
+//! chain is the sorted arrival order regardless of `S`, so re-sharding
+//! never changes bits.
+//!
+//! **Faults.** The reduce methods have no error channel (the
+//! [`Collective`] trait predates real transports), so a transport
+//! failure zeroes the output — a partial fold never escapes — and parks
+//! the [`TransportError`] for [`Collective::take_fault`];
+//! `SyncSession::step_checked` harvests it into a clean `Err`. Slow
+//! peers ([`super::transport::FaultKind::Slow`], a read past the
+//! patience budget) stay distinguishable from dead ones (EOF/reset) so
+//! callers can treat stragglers and losses differently.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use super::transport::{Transport, TransportError, TransportSpec, TransportTraffic};
+use super::wire::{PackScratch, PackedWire};
+use super::{LayerCtx, SyncStrategy};
+use crate::collectives::{ring, Collective, ReduceOptions, ReduceStats, FOLD_BLOCK};
+
+/// One buffered contribution: which round it was pushed in, which round
+/// it becomes foldable, and the decoded dense values.
+struct Pending {
+    origin: u64,
+    due: u64,
+    data: Vec<f32>,
+}
+
+/// Mutable server state behind the `&self` trait surface. Calls do not
+/// re-enter (the same pattern as `HierarchicalCollective`'s scratch), so
+/// the `RefCell` borrow is never contended.
+struct PsState {
+    transport: Box<dyn Transport>,
+    /// Monotone reduce-call counter (the logical round clock).
+    round: u64,
+    /// Per-worker FIFO of not-yet-folded contributions (≤ K+1 entries).
+    pending: Vec<VecDeque<Pending>>,
+    /// Recycled dense buffers, so steady-state rounds allocate nothing.
+    pool: Vec<Vec<f32>>,
+    /// Elastic membership: inactive workers' pushes are discarded.
+    active: Vec<bool>,
+    /// Per-worker arrival delay in rounds (clamped to the staleness cap).
+    delays: Vec<usize>,
+    /// Shard boundary scratch (`S+1` entries), rebuilt every fold.
+    bounds: Vec<usize>,
+    /// Due-arrival sort scratch: `(origin, worker, queue index)`.
+    order: Vec<(u64, usize, usize)>,
+    /// Reused pull-leg frames (the reduced result as raw f32 per worker).
+    pull_frames: Vec<PackedWire>,
+    /// The parked failure of the most recent faulted round, if any.
+    fault: Option<TransportError>,
+}
+
+impl PsState {
+    fn new(world: usize, transport: Box<dyn Transport>) -> PsState {
+        PsState {
+            transport,
+            round: 0,
+            pending: (0..world).map(|_| VecDeque::new()).collect(),
+            pool: Vec::new(),
+            active: vec![true; world],
+            delays: vec![0; world],
+            bounds: Vec::new(),
+            order: Vec::new(),
+            pull_frames: Vec::new(),
+            fault: None,
+        }
+    }
+}
+
+/// Server shard count actually in use: the configured count capped by
+/// the live worker population (a two-worker world gains nothing from
+/// eight shards), never zero.
+fn effective_shards(cfg: usize, active: &[bool]) -> usize {
+    let alive = active.iter().filter(|a| **a).count();
+    cfg.max(1).min(alive.max(1))
+}
+
+/// Fold every due arrival into `out` (zeroed first), sorted by
+/// `(origin, worker)`, shard range by shard range in cache blocks, then
+/// retire the folded entries to the buffer pool. The deterministic heart
+/// of the collective: a fixed arrival schedule yields a fixed fold chain
+/// per element, hence bit-exact replay.
+fn fold_due(
+    st: &mut PsState,
+    shards_cfg: usize,
+    now: u64,
+    out: &mut [f32],
+    opts: &ReduceOptions,
+) {
+    let n = out.len();
+    st.order.clear();
+    for (w, q) in st.pending.iter().enumerate() {
+        for (qi, e) in q.iter().enumerate() {
+            if e.due <= now {
+                assert_eq!(
+                    e.data.len(),
+                    n,
+                    "stale contribution shape mismatch (worker {w}): arrival delays \
+                     must be whole multiples of the model's reduce-call cycle"
+                );
+                st.order.push((e.origin, w, qi));
+            }
+        }
+    }
+    // (origin, worker) pairs are unique — one push per worker per
+    // round — so the unstable sort is fully deterministic.
+    st.order.sort_unstable();
+    out.fill(0.0);
+    if st.order.is_empty() {
+        return;
+    }
+
+    // Re-split the element space over the live shard count — the PS
+    // analogue of rebuilding the bucket plan on membership change.
+    let shards = effective_shards(shards_cfg, &st.active);
+    st.bounds.clear();
+    for s in 0..=shards {
+        st.bounds.push(s * n / shards);
+    }
+
+    let mut comp = [0.0f32; FOLD_BLOCK];
+    for s in 0..shards {
+        let lo = st.bounds[s];
+        let hi = st.bounds[s + 1];
+        if lo == hi {
+            continue;
+        }
+        let mut b0 = lo;
+        while b0 < hi {
+            let b1 = (b0 + FOLD_BLOCK).min(hi);
+            let blk = &mut out[b0..b1];
+            let mut first = true;
+            if opts.kahan {
+                let comp = &mut comp[..blk.len()];
+                comp.fill(0.0);
+                for &(_, w, qi) in st.order.iter() {
+                    let src = &st.pending[w][qi].data[b0..b1];
+                    if first {
+                        blk.copy_from_slice(src);
+                        first = false;
+                        continue;
+                    }
+                    for i in 0..blk.len() {
+                        crate::collectives::fold_step(
+                            &mut blk[i],
+                            &mut comp[i],
+                            src[i],
+                            opts.fmt,
+                            opts.mode,
+                            true,
+                        );
+                    }
+                }
+            } else {
+                let mut dummy = 0.0f32;
+                for &(_, w, qi) in st.order.iter() {
+                    let src = &st.pending[w][qi].data[b0..b1];
+                    if first {
+                        blk.copy_from_slice(src);
+                        first = false;
+                        continue;
+                    }
+                    for i in 0..blk.len() {
+                        crate::collectives::fold_step(
+                            &mut blk[i],
+                            &mut dummy,
+                            src[i],
+                            opts.fmt,
+                            opts.mode,
+                            false,
+                        );
+                    }
+                }
+            }
+            b0 = b1;
+        }
+    }
+
+    // Retire folded entries whole (recycling their buffers). Queue
+    // order is not due order when a delay shrinks mid-run, so scan.
+    for w in 0..st.pending.len() {
+        let mut i = 0;
+        while i < st.pending[w].len() {
+            if st.pending[w][i].due <= now {
+                if let Some(e) = st.pending[w].remove(i) {
+                    st.pool.push(e.data);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// The parameter-server [`Collective`]. See the module docs for the
+/// round/staleness/fault model.
+pub struct PsCollective {
+    world: usize,
+    shards: usize,
+    staleness: usize,
+    /// Whether the transport serializes — claimed octets are only
+    /// counted then, so `octets == claimed` holds for [`InProcess`]
+    /// too (0 == 0), mirroring the overlap pool's accounting.
+    count_claimed: bool,
+    state: RefCell<PsState>,
+}
+
+impl PsCollective {
+    /// A parameter server over the in-process transport (no octets on
+    /// any wire). `shards` is capped by the live worker count per fold;
+    /// `staleness` is the bound `K` on per-worker arrival delay.
+    pub fn new(world: usize, shards: usize, staleness: usize) -> PsCollective {
+        assert!(world >= 1, "a parameter server needs at least one worker");
+        assert!(shards >= 1, "a parameter server needs at least one shard");
+        PsCollective {
+            world,
+            shards,
+            staleness,
+            count_claimed: false,
+            state: RefCell::new(PsState::new(world, TransportSpec::InProcess.build(world))),
+        }
+    }
+
+    /// Rebuild over `spec`'s transport (the session builder's hook for
+    /// `sync.transport`): push/pull legs then move real serialized
+    /// octets, measured against the codecs' claimed `WireCost`.
+    pub fn with_transport(mut self, spec: TransportSpec) -> PsCollective {
+        self.count_claimed = spec != TransportSpec::InProcess;
+        {
+            let mut st = self.state.borrow_mut();
+            st.transport = spec.build(self.world);
+        }
+        self
+    }
+
+    /// Per-round traffic: each worker pushes `n` elements in the wire
+    /// format and pulls `n` reduced elements as raw f32. Identical for
+    /// the dense and packed paths, so reports stay bit-identical across
+    /// wire modes.
+    fn round_stats(&self, n: usize, opts: &ReduceOptions) -> ReduceStats {
+        let push = n as u64 * ring::wire_bytes(*opts) as u64;
+        let pull = n as u64 * 4;
+        ReduceStats { bytes_per_worker: push + pull, steps: 2 }
+    }
+}
+
+impl Collective for PsCollective {
+    fn name(&self) -> &'static str {
+        "ps"
+    }
+    fn world_size(&self) -> usize {
+        self.world
+    }
+    fn steps_per_message(&self) -> usize {
+        2 // one push + one pull, independent of world size
+    }
+
+    fn all_reduce_sum_into(
+        &self,
+        contribs: &[Vec<f32>],
+        out: &mut [f32],
+        opts: &ReduceOptions,
+    ) -> ReduceStats {
+        assert_eq!(contribs.len(), self.world, "one contribution per worker");
+        let n = out.len();
+        let stats = self.round_stats(n, opts);
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        if st.fault.is_some() {
+            // A faulted server stays down until the fault is harvested;
+            // zero output, never a partial fold.
+            out.fill(0.0);
+            return stats;
+        }
+        let now = st.round;
+        st.round += 1;
+        for (w, c) in contribs.iter().enumerate() {
+            if !st.active[w] {
+                continue;
+            }
+            assert_eq!(c.len(), n, "ragged contributions");
+            let mut buf = st.pool.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(c);
+            let due = now + st.delays[w].min(self.staleness) as u64;
+            st.pending[w].push_back(Pending { origin: now, due, data: buf });
+        }
+        fold_due(st, self.shards, now, out, opts);
+        stats
+    }
+
+    fn all_reduce_max_i8_into(&self, contribs: &[Vec<i8>], out: &mut [i8]) -> ReduceStats {
+        assert_eq!(contribs.len(), self.world, "one contribution per worker");
+        let st = self.state.borrow();
+        let n = out.len();
+        out.fill(i8::MIN);
+        for (w, c) in contribs.iter().enumerate() {
+            if !st.active[w] {
+                continue;
+            }
+            assert_eq!(c.len(), n);
+            for (o, &v) in out.iter_mut().zip(c) {
+                *o = (*o).max(v);
+            }
+        }
+        // The exponent agreement is synchronous (a stale factor would
+        // desynchronize the workers' encode scales): 1 byte per entry
+        // up to the server, 1 byte back.
+        ReduceStats { bytes_per_worker: 2 * n as u64, steps: 2 }
+    }
+
+    fn all_reduce_packed_sum_into(
+        &self,
+        packed: &[PackedWire],
+        strategy: &dyn SyncStrategy,
+        ctx: &LayerCtx,
+        out: &mut [f32],
+        opts: &ReduceOptions,
+        _scratch: &mut PackScratch,
+    ) -> ReduceStats {
+        assert_eq!(packed.len(), self.world, "one packed contribution per worker");
+        let n = out.len();
+        let stats = self.round_stats(n, opts);
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        if st.fault.is_some() {
+            out.fill(0.0);
+            return stats;
+        }
+        let now = st.round;
+        st.round += 1;
+
+        // Push leg: every worker's frame ships (a departed worker's
+        // channel still carries bytes — the server discards them on
+        // arrival), so measured octets cover exactly the frames
+        // exchanged. Contributions decode at push time, while this
+        // round's `ctx` (factor exponent, step seed) is in force.
+        match st.transport.exchange(packed) {
+            Ok(delivered) => {
+                for w in 0..self.world {
+                    if !st.active[w] {
+                        continue;
+                    }
+                    let mut buf = st.pool.pop().unwrap_or_default();
+                    buf.clear();
+                    // Pool-miss growth only: buffers recycle through
+                    // PsState::pool after every fold, so steady-state
+                    // rounds reuse their capacity.
+                    buf.resize(n, 0.0);
+                    strategy.decode_packed(&delivered[w], ctx, 0..n, &mut buf);
+                    let due = now + st.delays[w].min(self.staleness) as u64;
+                    st.pending[w].push_back(Pending { origin: now, due, data: buf });
+                }
+            }
+            Err(e) => {
+                st.fault = Some(e);
+                out.fill(0.0);
+                return stats;
+            }
+        }
+
+        fold_due(st, self.shards, now, out, opts);
+
+        // Pull leg: the reduced result returns to every worker as raw
+        // f32 — bit-exact and WireCost-honest (4n octets per worker).
+        if st.pull_frames.len() < self.world {
+            // One frame per worker, grown on the first round only;
+            // pack_raw_f32 reuses their capacity afterwards.
+            st.pull_frames.resize_with(self.world, PackedWire::default);
+        }
+        for f in st.pull_frames.iter_mut() {
+            f.pack_raw_f32(out);
+        }
+        if let Err(e) = st.transport.exchange(&st.pull_frames) {
+            st.fault = Some(e);
+            out.fill(0.0);
+        }
+        stats
+    }
+
+    fn take_fault(&self) -> Option<TransportError> {
+        self.state.borrow_mut().fault.take()
+    }
+
+    fn transport_traffic(&self) -> Option<TransportTraffic> {
+        let st = self.state.borrow();
+        Some(TransportTraffic {
+            octets: st.transport.octets_moved(),
+            claimed_octets: if self.count_claimed {
+                st.transport.moved().total_bytes()
+            } else {
+                0
+            },
+        })
+    }
+
+    fn set_member_active(&self, worker: usize, active: bool) -> bool {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        match st.active.get_mut(worker) {
+            Some(a) => {
+                *a = active;
+                if !active {
+                    // A departing worker's queued contributions drop
+                    // whole — never partially folded.
+                    while let Some(e) = st.pending[worker].pop_front() {
+                        st.pool.push(e.data);
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn set_arrival_delay(&self, worker: usize, rounds: usize) -> bool {
+        match self.state.borrow_mut().delays.get_mut(worker) {
+            Some(d) => {
+                // Clamped to the staleness budget: the bound `K` holds
+                // by construction, not by trust in the schedule.
+                *d = rounds.min(self.staleness);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn kill_transport_peer(&self, worker: usize) -> bool {
+        self.state.borrow_mut().transport.kill_peer(worker);
+        true
+    }
+
+    fn set_transport_patience(&self, read_timeout_ms: u64, max_timeouts: usize) -> bool {
+        self.state
+            .borrow_mut()
+            .transport
+            .set_patience(Duration::from_millis(read_timeout_ms), max_timeouts)
+    }
+
+    fn inject_transport_delay(&self, worker: usize, delay_ms: u64) -> bool {
+        self.state
+            .borrow_mut()
+            .transport
+            .inject_send_delay(worker, Duration::from_millis(delay_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::FpFormat;
+
+    fn contribs(world: usize, n: usize, round: usize) -> Vec<Vec<f32>> {
+        (0..world)
+            .map(|w| {
+                (0..n)
+                    .map(|i| ((w * 131 + round * 31 + i * 7) % 23) as f32 * 0.125 - 1.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Reference: fold all on-time contributions in worker order with
+    /// the shared kernel — what a zero-delay PS round must produce.
+    fn reference_fold(cs: &[Vec<f32>], opts: &ReduceOptions) -> Vec<f32> {
+        let mut out = cs[0].clone();
+        let mut dummy = 0.0f32;
+        for c in &cs[1..] {
+            for (o, &v) in out.iter_mut().zip(c) {
+                crate::collectives::fold_step(o, &mut dummy, v, opts.fmt, opts.mode, false);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn synchronous_round_folds_in_worker_order() {
+        let world = 4;
+        let n = 100;
+        let opts = ReduceOptions::low_precision(FpFormat::E5M2);
+        let ps = PsCollective::new(world, 2, 0);
+        let cs = contribs(world, n, 0);
+        let mut out = vec![0.0f32; n];
+        let stats = ps.all_reduce_sum_into(&cs, &mut out, &opts);
+        let want = reference_fold(&cs, &opts);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
+        assert_eq!(stats.steps, 2);
+        assert_eq!(stats.bytes_per_worker, n as u64 * (1 + 4));
+    }
+
+    #[test]
+    fn shard_count_never_changes_bits() {
+        let world = 4;
+        let n = 1000 + 7; // uneven splits across every shard count
+        let opts = ReduceOptions::low_precision(FpFormat::E4M3);
+        let cs = contribs(world, n, 1);
+        let mut reference = Vec::new();
+        for shards in [1usize, 2, 3, 4, 16] {
+            let ps = PsCollective::new(world, shards, 0);
+            let mut out = vec![0.0f32; n];
+            ps.all_reduce_sum_into(&cs, &mut out, &opts);
+            let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            if reference.is_empty() {
+                reference = bits;
+            } else {
+                assert_eq!(bits, reference, "shards={shards} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_delays_and_reorders_deterministically() {
+        let world = 2;
+        let n = 8;
+        let opts = ReduceOptions::fp32();
+        let ps = PsCollective::new(world, 1, 2);
+        assert!(ps.set_arrival_delay(1, 1));
+        let r0 = contribs(world, n, 0);
+        let r1 = contribs(world, n, 1);
+
+        // Round 0: only worker 0 arrives.
+        let mut out0 = vec![0.0f32; n];
+        ps.all_reduce_sum_into(&r0, &mut out0, &opts);
+        assert_eq!(out0, r0[0]);
+
+        // Round 1: worker 1's round-0 push (older origin, folds first)
+        // plus worker 0's round-1 push.
+        let mut out1 = vec![0.0f32; n];
+        ps.all_reduce_sum_into(&r1, &mut out1, &opts);
+        let want = reference_fold(&[r0[1].clone(), r1[0].clone()], &opts);
+        for (a, b) in out1.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn arrival_delay_is_clamped_to_the_staleness_budget() {
+        let world = 2;
+        let n = 4;
+        let opts = ReduceOptions::fp32();
+        let ps = PsCollective::new(world, 1, 1); // K = 1
+        assert!(ps.set_arrival_delay(1, 100)); // clamped to 1
+        let r0 = contribs(world, n, 0);
+        let r1 = contribs(world, n, 1);
+        let mut out = vec![0.0f32; n];
+        ps.all_reduce_sum_into(&r0, &mut out, &opts);
+        assert_eq!(out, r0[0], "delayed worker must miss its own round");
+        ps.all_reduce_sum_into(&r1, &mut out, &opts);
+        let want = reference_fold(&[r0[1].clone(), r1[0].clone()], &opts);
+        assert_eq!(out, want, "clamp means the push lands exactly one round late");
+    }
+
+    #[test]
+    fn no_arrivals_round_yields_zeros() {
+        let world = 2;
+        let n = 6;
+        let opts = ReduceOptions::fp32();
+        let ps = PsCollective::new(world, 1, 3);
+        for w in 0..world {
+            assert!(ps.set_arrival_delay(w, 2));
+        }
+        let mut out = vec![1.0f32; n];
+        ps.all_reduce_sum_into(&contribs(world, n, 0), &mut out, &opts);
+        assert_eq!(out, vec![0.0; n], "nothing due yet: the server hands back zeros");
+    }
+
+    #[test]
+    fn departed_member_is_excluded_and_rejoins() {
+        let world = 3;
+        let n = 16;
+        let opts = ReduceOptions::fp32();
+        let ps = PsCollective::new(world, 2, 0);
+        let cs = contribs(world, n, 2);
+        assert!(ps.set_member_active(2, false));
+        let mut out = vec![0.0f32; n];
+        ps.all_reduce_sum_into(&cs, &mut out, &opts);
+        let want = reference_fold(&cs[..2], &opts);
+        assert_eq!(out, want, "departed worker must not contribute");
+        assert!(ps.set_member_active(2, true));
+        ps.all_reduce_sum_into(&cs, &mut out, &opts);
+        let want = reference_fold(&cs, &opts);
+        assert_eq!(out, want, "rejoined worker contributes again");
+    }
+
+    #[test]
+    fn max_i8_skips_inactive_workers() {
+        let ps = PsCollective::new(3, 1, 0);
+        assert!(ps.set_member_active(1, false));
+        let contribs = vec![vec![1i8, -5], vec![99, 99], vec![-2, 7]];
+        let mut out = vec![0i8; 2];
+        let stats = ps.all_reduce_max_i8_into(&contribs, &mut out);
+        assert_eq!(out, vec![1, 7], "inactive worker's maxima must be ignored");
+        assert_eq!(stats.steps, 2);
+    }
+
+    #[test]
+    fn out_of_range_worker_hooks_return_false() {
+        let ps = PsCollective::new(2, 1, 0);
+        assert!(!ps.set_member_active(5, false));
+        assert!(!ps.set_arrival_delay(5, 1));
+    }
+}

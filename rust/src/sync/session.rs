@@ -29,7 +29,7 @@
 //! to fresh calls (pinned by `rust/tests/strategy_layer.rs`).
 
 use super::transport::{
-    auto_bucket_bytes, BucketPlan, TransportError, TransportSpec, TransportTraffic,
+    auto_bucket_bytes, BucketPlan, FaultKind, TransportError, TransportSpec, TransportTraffic,
 };
 use super::wire::{PackScratch, PackedWire, WireMode};
 use super::{ErrorFeedback, Factors, GradView, LayerCtx, StrategySpec, SyncStrategy, WireCost};
@@ -214,8 +214,17 @@ impl SyncSessionBuilder {
 
     pub fn build(self) -> SyncSession {
         let world = self.world;
-        let collective =
-            self.collective.unwrap_or_else(|| self.topology.collective(world));
+        let collective = self.collective.unwrap_or_else(|| match self.topology {
+            // The parameter server owns its transport (the push/pull
+            // legs move real octets through it), so the builder's
+            // `with_transport` choice reaches it here rather than via
+            // the overlap pool.
+            Topology::Ps { shards, staleness } => Box::new(
+                super::ps::PsCollective::new(world, shards, staleness)
+                    .with_transport(self.transport),
+            ),
+            _ => self.topology.collective(world),
+        });
         assert_eq!(collective.world_size(), world, "collective world size mismatch");
         let mut strategy = self.strategy.unwrap_or_else(|| StrategySpec::Fp32.build());
         // Idempotent: a strategy that is already error-feedback-wrapped
@@ -235,6 +244,11 @@ impl SyncSessionBuilder {
         // `decode_packed` forwards purely to the inner codec, so a
         // plain-spec twin decodes EF frames bit-identically.
         let overlap_cfg = match (&self.retained_spec, self.retained_topology, self.wire) {
+            // The PS collective is stateful across rounds (staleness
+            // queues, round clock); per-thread twins would fork that
+            // state, so PS never overlaps — `step_overlapped` falls
+            // back to the synchronous path automatically.
+            _ if matches!(self.topology, Topology::Ps { .. }) => None,
             (Some(spec), true, WireMode::Packed) => Some(OverlapCfg {
                 spec: spec.clone(),
                 topology: self.topology,
@@ -692,6 +706,7 @@ impl SyncSession {
                 first_err = Some(TransportError {
                     transport: "pool",
                     worker: b % ov.threads,
+                    kind: FaultKind::Dead,
                     detail: "overlap worker thread exited".into(),
                 });
                 break;
@@ -723,6 +738,7 @@ impl SyncSession {
                     first_err = Some(TransportError {
                         transport: "pool",
                         worker: usize::MAX,
+                        kind: FaultKind::Dead,
                         detail: "overlap worker result timed out or disconnected".into(),
                     });
                     // In-flight replies may still land in the channel;
@@ -832,7 +848,9 @@ impl SyncSession {
     /// overlap at all.
     pub fn kill_transport_peer(&mut self, worker: usize) -> bool {
         if !self.ensure_overlap() {
-            return false;
+            // No overlap pool: the collective may own a transport of
+            // its own (the parameter server does) — forward there.
+            return self.collective.kill_transport_peer(worker);
         }
         let Some(ov) = self.overlap.as_ref() else {
             return false;
@@ -841,6 +859,78 @@ impl SyncSession {
             let _ = s.send(WorkerMsg::Kill(worker));
         }
         true
+    }
+
+    /// Synchronize one step through a fault-aware collective (the
+    /// parameter server): run [`Self::step`], then harvest any transport
+    /// fault the collective parked via
+    /// [`Collective::take_fault`](crate::collectives::Collective::take_fault).
+    /// On fault the step rolls back exactly like a failed
+    /// [`Self::step_overlapped`] — reduced gradients emptied, report
+    /// zeroed, `steps_done` unchanged — so no partial fold ever escapes;
+    /// the session stays usable for the next step once the cause is
+    /// repaired. For fault-free collectives (ring/hierarchical) this is
+    /// `step()` that always returns `Ok`.
+    pub fn step_checked(
+        &mut self,
+        grads: &[Vec<Vec<f32>>],
+    ) -> Result<(&[Vec<f32>], &SyncReport), TransportError> {
+        {
+            let _ = self.step(grads);
+        }
+        if let Some(err) = self.collective.take_fault() {
+            for v in &mut self.reduced {
+                v.clear();
+            }
+            self.report.layers.clear();
+            self.report.buckets.clear();
+            self.report.payload_bytes = 0;
+            self.report.exponent_bytes = 0;
+            self.report.steps = 0;
+            self.report.messages = 0;
+            self.report.wire = WireCost::default();
+            self.moved = None;
+            // step() counted the faulted step; a rolled-back step never
+            // happened as far as replay determinism is concerned.
+            self.steps_done -= 1;
+            return Err(err);
+        }
+        Ok((&self.reduced, &self.report))
+    }
+
+    /// Cumulative octet accounting of the collective's own transport
+    /// (the parameter-server push/pull legs) — `None` for collectives
+    /// that own no transport. Complements [`Self::transport_traffic`],
+    /// which covers the overlap pool's transports.
+    pub fn collective_traffic(&self) -> Option<TransportTraffic> {
+        self.collective.transport_traffic()
+    }
+
+    /// Elastic membership: (de)activate `worker` in a membership-aware
+    /// collective (the parameter server re-shards on the next fold).
+    /// Returns false when the collective has no membership notion.
+    pub fn set_member_active(&mut self, worker: usize, active: bool) -> bool {
+        self.collective.set_member_active(worker, active)
+    }
+
+    /// Straggler schedule: delay `worker`'s contributions by `rounds`
+    /// reduce calls in a staleness-aware collective (clamped to its
+    /// staleness budget). Returns false when unsupported.
+    pub fn set_arrival_delay(&mut self, worker: usize, rounds: usize) -> bool {
+        self.collective.set_arrival_delay(worker, rounds)
+    }
+
+    /// Forward a read-patience budget (timeout per read, tolerated
+    /// consecutive timeouts) to the collective's own transport.
+    pub fn set_transport_patience(&mut self, read_timeout_ms: u64, max_timeouts: usize) -> bool {
+        self.collective.set_transport_patience(read_timeout_ms, max_timeouts)
+    }
+
+    /// Inject a per-send delay for `worker` into the collective's own
+    /// transport (a wire-level straggler, as opposed to the round-level
+    /// [`Self::set_arrival_delay`]).
+    pub fn inject_transport_delay(&mut self, worker: usize, delay_ms: u64) -> bool {
+        self.collective.inject_transport_delay(worker, delay_ms)
     }
 
     /// Cumulative serialized-octet accounting across every overlapped

@@ -46,9 +46,44 @@ use std::time::Duration;
 /// All-u64 lengths so no field can silently truncate on any target.
 pub const FRAME_HEADER_LEN: usize = 41;
 
+/// Coarse peer-failure classification. A *slow* peer stalled past the
+/// transport's patience budget (`WouldBlock`/`TimedOut` on a read) —
+/// the bytes may still arrive, so a parameter server can treat the
+/// worker as a straggler rather than lost. A *dead* peer's channel is
+/// gone (EOF, reset, closed pump): only escalation is correct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Read timed out; the peer may merely be delayed.
+    Slow,
+    /// The channel itself failed; the peer will never deliver.
+    #[default]
+    Dead,
+}
+
+impl FaultKind {
+    /// Label used in [`TransportError`]'s display form.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Slow => "slow",
+            FaultKind::Dead => "dead",
+        }
+    }
+}
+
+/// Map an I/O error to the peer classification: timeouts are *slow*
+/// (retryable by a staleness-tolerant caller), everything else — EOF,
+/// reset, refused — is *dead*.
+pub fn classify_io(e: &std::io::Error) -> FaultKind {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => FaultKind::Slow,
+        _ => FaultKind::Dead,
+    }
+}
+
 /// A transport-level failure: which transport, which worker's channel,
-/// and what went wrong. Cloneable so the session can both surface it to
-/// the caller and keep a copy in its drain bookkeeping.
+/// whether the peer looks slow or dead, and what went wrong. Cloneable
+/// so the session can both surface it to the caller and keep a copy in
+/// its drain bookkeeping.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TransportError {
     /// [`Transport::name`] of the failing transport.
@@ -56,6 +91,8 @@ pub struct TransportError {
     /// Worker index whose channel failed (`usize::MAX` when the failure
     /// is not attributable to a single worker, e.g. a dead worker pool).
     pub worker: usize,
+    /// Slow (timeout — straggler) vs dead (channel gone) peer.
+    pub kind: FaultKind,
     /// Human-readable detail (the underlying I/O error, usually).
     pub detail: String,
 }
@@ -64,8 +101,11 @@ impl std::fmt::Display for TransportError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} transport: worker {} channel failed: {}",
-            self.transport, self.worker, self.detail
+            "{} transport: worker {} channel failed ({} peer): {}",
+            self.transport,
+            self.worker,
+            self.kind.as_str(),
+            self.detail
         )
     }
 }
@@ -110,6 +150,23 @@ pub trait Transport: Send {
     /// next `exchange` touching that worker's channel must fail cleanly).
     /// Default: no-op — only transports with real channels can drop one.
     fn kill_peer(&mut self, _worker: usize) {}
+
+    /// Configure the straggler patience budget: per-poll read timeout
+    /// and how many consecutive timed-out polls a read tolerates before
+    /// surfacing a [`FaultKind::Slow`] error. Returns `true` when the
+    /// transport honors the setting (only transports with real blocking
+    /// reads can stall). Default: unsupported no-op.
+    fn set_patience(&mut self, _read_timeout: Duration, _max_timeouts: usize) -> bool {
+        false
+    }
+
+    /// Straggler injection: delay every future send on `worker`'s
+    /// channel by `delay` (fault-injection hook for slow-peer tests).
+    /// Returns `true` when the transport honors the delay. Default:
+    /// unsupported no-op.
+    fn inject_send_delay(&mut self, _worker: usize, _delay: Duration) -> bool {
+        false
+    }
 }
 
 /// Which [`Transport`] a session (or config) asks for. The closed-enum
@@ -318,6 +375,7 @@ impl Transport for SharedMem {
                 |detail| TransportError {
                     transport: "shared_mem",
                     worker: w,
+                    kind: FaultKind::Dead,
                     detail: detail.into(),
                 },
             )?;
@@ -353,12 +411,17 @@ pub struct Tcp {
     servers: Vec<TcpStream>,
     /// `try_clone`d client write ends, kept only for fault injection.
     kill_handles: Vec<TcpStream>,
-    pump_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    pump_tx: mpsc::Sender<(usize, Duration, Vec<u8>)>,
     recycle_rx: mpsc::Receiver<Vec<u8>>,
     delivered: Vec<PackedWire>,
     recv_buf: Vec<u8>,
     moved: WireCost,
     octets: u64,
+    /// Consecutive timed-out polls a read tolerates before a
+    /// [`FaultKind::Slow`] error (0 = the first timeout aborts).
+    patience: usize,
+    /// Per-worker injected send delays (straggler fault injection).
+    delays: Vec<Duration>,
 }
 
 impl Tcp {
@@ -382,7 +445,7 @@ impl Tcp {
         }
         let kill_handles =
             clients.iter().map(|c| c.try_clone()).collect::<std::io::Result<Vec<_>>>()?;
-        let (pump_tx, pump_rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let (pump_tx, pump_rx) = mpsc::channel::<(usize, Duration, Vec<u8>)>();
         let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
         // Seed the frame-buffer pool so steady-state exchanges recycle
         // instead of allocating.
@@ -391,7 +454,11 @@ impl Tcp {
         }
         std::thread::spawn(move || {
             let mut clients = clients;
-            while let Ok((w, buf)) = pump_rx.recv() {
+            while let Ok((w, delay, buf)) = pump_rx.recv() {
+                // Straggler injection: hold the frame before writing.
+                if delay > Duration::ZERO {
+                    std::thread::sleep(delay);
+                }
                 // A failed write (killed peer) is detected by the read
                 // side as EOF; the pump stays alive for other workers.
                 let _ = clients[w].write_all(&buf);
@@ -408,8 +475,48 @@ impl Tcp {
             recv_buf: Vec::new(),
             moved: WireCost::default(),
             octets: 0,
+            patience: 0,
+            delays: vec![Duration::ZERO; world],
         })
     }
+}
+
+/// `read_exact` with a stall budget: each `WouldBlock`/`TimedOut` poll
+/// counts one stall (partial progress resets the count); once
+/// `patience` consecutive stalls are exceeded the timeout error
+/// surfaces to the caller, which classifies it [`FaultKind::Slow`].
+/// Tracks the fill offset across polls, so a read that resumes after a
+/// sub-budget stall is byte-exact — no frame bytes are lost or reread.
+fn read_exact_patient(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    patience: usize,
+) -> std::io::Result<()> {
+    let mut filled = 0usize;
+    let mut stalls = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed the connection mid-frame",
+                ));
+            }
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if classify_io(&e) == FaultKind::Slow => {
+                stalls += 1;
+                if stalls > patience {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Read one frame off a socket into `out` (scratch reused across calls).
@@ -417,13 +524,14 @@ fn read_frame(
     stream: &mut TcpStream,
     scratch: &mut Vec<u8>,
     out: &mut PackedWire,
+    patience: usize,
 ) -> std::io::Result<()> {
     let mut header = [0u8; FRAME_HEADER_LEN];
-    stream.read_exact(&mut header)?;
+    read_exact_patient(stream, &mut header, patience)?;
     let (tag, elems, value_bits, index_bits, payload_len, meta_len) = parse_header(&header);
     scratch.clear();
     scratch.resize(payload_len + meta_len, 0);
-    stream.read_exact(scratch)?;
+    read_exact_patient(stream, scratch, patience)?;
     out.assign_parts(
         tag,
         elems,
@@ -435,20 +543,43 @@ fn read_frame(
     Ok(())
 }
 
+/// Default total budget for establishing one loopback connection.
+pub const CONNECT_DEADLINE: Duration = Duration::from_secs(5);
+
 /// Loopback connect with a short retry loop (the listener is already
 /// bound, but a loaded machine can still transiently refuse).
 fn connect_with_retry(addr: SocketAddr) -> std::io::Result<TcpStream> {
-    let mut last = None;
-    for _ in 0..100 {
+    connect_with_deadline(addr, CONNECT_DEADLINE)
+}
+
+/// Connect with exponential backoff (1 ms doubling, capped at 250 ms)
+/// until `deadline` of wall time has elapsed. The exhaustion error
+/// names the address and attempt count so a refused bind is debuggable
+/// from the message alone.
+fn connect_with_deadline(addr: SocketAddr, deadline: Duration) -> std::io::Result<TcpStream> {
+    let start = std::time::Instant::now();
+    let mut backoff = Duration::from_millis(1);
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                last = Some(e);
-                std::thread::sleep(Duration::from_millis(10));
+                let elapsed = start.elapsed();
+                if elapsed >= deadline {
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!(
+                            "connect to {addr} failed after {attempts} attempts \
+                             over {elapsed:?}: {e}"
+                        ),
+                    ));
+                }
+                std::thread::sleep(backoff.min(deadline.saturating_sub(elapsed)));
+                backoff = (backoff * 2).min(Duration::from_millis(250));
             }
         }
     }
-    Err(last.unwrap_or_else(|| std::io::Error::other("connect retry loop exhausted")))
 }
 
 impl Transport for Tcp {
@@ -471,21 +602,29 @@ impl Transport for Tcp {
             };
             serialize_frame_into(pw, &mut buf);
             self.octets += (buf.len() - FRAME_HEADER_LEN) as u64;
-            if self.pump_tx.send((w, buf)).is_err() {
+            let delay = self.delays.get(w).copied().unwrap_or_default();
+            if self.pump_tx.send((w, delay, buf)).is_err() {
                 return Err(TransportError {
                     transport: "tcp",
                     worker: w,
+                    kind: FaultKind::Dead,
                     detail: "socket pump thread exited".into(),
                 });
             }
         }
         for w in 0..self.world {
-            read_frame(&mut self.servers[w], &mut self.recv_buf, &mut self.delivered[w])
-                .map_err(|e| TransportError {
-                    transport: "tcp",
-                    worker: w,
-                    detail: e.to_string(),
-                })?;
+            read_frame(
+                &mut self.servers[w],
+                &mut self.recv_buf,
+                &mut self.delivered[w],
+                self.patience,
+            )
+            .map_err(|e| TransportError {
+                transport: "tcp",
+                worker: w,
+                kind: classify_io(&e),
+                detail: e.to_string(),
+            })?;
             self.moved += self.delivered[w].moved_cost();
         }
         Ok(&self.delivered)
@@ -503,6 +642,24 @@ impl Transport for Tcp {
     fn kill_peer(&mut self, worker: usize) {
         if let Some(h) = self.kill_handles.get(worker) {
             let _ = h.shutdown(std::net::Shutdown::Both);
+        }
+    }
+    fn set_patience(&mut self, read_timeout: Duration, max_timeouts: usize) -> bool {
+        for s in &self.servers {
+            if s.set_read_timeout(Some(read_timeout)).is_err() {
+                return false;
+            }
+        }
+        self.patience = max_timeouts;
+        true
+    }
+    fn inject_send_delay(&mut self, worker: usize, delay: Duration) -> bool {
+        match self.delays.get_mut(worker) {
+            Some(d) => {
+                *d = delay;
+                true
+            }
+            None => false,
         }
     }
 }
@@ -691,6 +848,54 @@ mod tests {
         let err = t.exchange(&packed).unwrap_err();
         assert_eq!(err.transport, "tcp");
         assert_eq!(err.worker, 1, "failure must name the dropped peer");
+        assert_eq!(err.kind, FaultKind::Dead, "a shut-down channel is a dead peer");
+    }
+
+    #[test]
+    fn tcp_straggler_past_patience_classifies_slow() {
+        let mut t = Tcp::new(2).unwrap();
+        assert!(t.set_patience(Duration::from_millis(10), 2));
+        assert!(t.inject_send_delay(1, Duration::from_millis(400)));
+        let packed: Vec<PackedWire> = (0..2).map(sample_packed).collect();
+        let err = t.exchange(&packed).unwrap_err();
+        assert_eq!(err.transport, "tcp");
+        assert_eq!(err.worker, 1, "failure must name the delayed peer");
+        assert_eq!(err.kind, FaultKind::Slow, "a timed-out read is a slow peer, not a dead one");
+        // The delayed frame may still be in flight; the transport is
+        // dropped here rather than reused (frames carry no sequence id,
+        // so a retry on the same sockets could desync framing).
+    }
+
+    #[test]
+    fn tcp_straggler_within_patience_recovers_exactly() {
+        let mut t = Tcp::new(2).unwrap();
+        // ~10 ms polls with a 100-stall budget (~1 s) comfortably cover
+        // the injected 50 ms delay: the read stalls, then resumes and
+        // delivers the exact frame.
+        assert!(t.set_patience(Duration::from_millis(10), 100));
+        assert!(t.inject_send_delay(1, Duration::from_millis(50)));
+        exercise(&mut t, 2);
+        // Clearing the delay returns the channel to fast-path behavior.
+        assert!(t.inject_send_delay(1, Duration::ZERO));
+        exercise(&mut t, 2);
+    }
+
+    #[test]
+    fn connect_deadline_exhaustion_names_the_address() {
+        // Bind then drop a listener so the port is (almost certainly)
+        // refusing connections.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = connect_with_deadline(addr, Duration::from_millis(50))
+            .expect_err("connect to a dropped listener must fail");
+        let msg = err.to_string();
+        assert!(
+            msg.contains(&addr.to_string()),
+            "exhaustion error must name the address: {msg}"
+        );
+        assert!(msg.contains("attempts"), "error should report the attempt count: {msg}");
     }
 
     #[test]

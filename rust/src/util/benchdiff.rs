@@ -153,6 +153,16 @@ pub fn compare(baseline: &Json, current: &Json) -> Result<DiffReport, String> {
                 cur_row.opt("elems_per_sec").and_then(|v| v.as_f64().ok()),
             ) {
                 (Some(b), Some(c)) => {
+                    if b <= 0.0 {
+                        // A non-positive baseline rate makes the floor
+                        // check vacuous (anything ≥ 0.8 × 0): say so
+                        // instead of silently passing forever.
+                        report.notes.push(format!(
+                            "{key}: baseline elems_per_sec is {b} (non-positive); \
+                             rate floor cannot gate this row — refresh the baseline"
+                        ));
+                        continue;
+                    }
                     let base_ratio = b / bn;
                     let cur_ratio = c / cn;
                     if cur_ratio < RATE_FLOOR * base_ratio {
@@ -265,6 +275,46 @@ mod tests {
         assert_eq!(r.compared, 0);
         assert_eq!(r.added.len(), 2);
         assert!(r.notes.iter().any(|n| n.contains("bootstrap")), "{}", r.render());
+    }
+
+    #[test]
+    fn zero_rate_baseline_row_notes_instead_of_vacuous_pass() {
+        // A 0.0 baseline rate makes `cur < 0.8 * 0` vacuously false —
+        // the row must surface as a note, not silently pass the gate.
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 0.0)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 1.0)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(r.ok(), "a broken baseline row is diagnosed, not failed: {}", r.render());
+        assert!(
+            r.notes.iter().any(|n| n.contains("ternary@ring") && n.contains("non-positive")),
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn zero_norm_rate_in_baseline_skips_rate_gate_with_note() {
+        // The denominator itself is 0: every ratio would be inf/NaN.
+        // Bytes stay gated; the rate gate is skipped with a diagnostic.
+        let base = record(&[(NORM_KEY, 4096.0, 0.0), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 1.0)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(r.ok(), "{}", r.render());
+        assert!(r.notes.iter().any(|n| n.contains("rate gate skipped")), "{}", r.render());
+        assert_eq!(r.compared, 2, "bytes comparison still covers every row");
+    }
+
+    #[test]
+    fn zero_norm_rate_in_current_is_a_regression() {
+        let base = record(&[(NORM_KEY, 4096.0, 1e8), ("ternary@ring", 256.0, 9e7)]);
+        let cur = record(&[(NORM_KEY, 4096.0, 0.0), ("ternary@ring", 256.0, 9e7)]);
+        let r = compare(&base, &cur).expect("well-formed");
+        assert!(!r.ok(), "{}", r.render());
+        assert!(
+            r.regressions.iter().any(|x| x.contains("normalization row")),
+            "{}",
+            r.render()
+        );
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! The parameter-server topology suite (`sync.topology = "ps"`).
+//!
+//! `PsCollective` buffers contributions in logical rounds (one reduce
+//! call = one round; an `L`-layer model advances `L` rounds per step),
+//! folds each round's due arrivals sorted by `(origin round, worker)`,
+//! and serves the result back over the transport seam. Pinned here:
+//!
+//! * **bit-exact replay** — a fixed arrival schedule replays
+//!   bit-identically across sessions for every shipped codec, reports
+//!   included, and the server shard count never changes a single bit
+//!   (shards only partition the element space; the per-element fold
+//!   chain is the sorted arrival order);
+//! * **wire-mode agreement** — at staleness 0 the packed wire and the
+//!   legacy simulated wire produce identical bits (with staleness the
+//!   modes legitimately diverge: the packed path decodes at push time
+//!   under the origin round's ctx, the dense path folds raw wire values
+//!   decoded under the fold round's ctx);
+//! * **bounded-staleness convergence** — the heterogeneous quadratic
+//!   from the error-feedback suite still trains under per-worker
+//!   arrival delays within the staleness budget `K`;
+//! * **fault taxonomy** — a straggler past the read-patience budget
+//!   surfaces as `FaultKind::Slow`, a killed peer as `FaultKind::Dead`,
+//!   both as a clean `Err` from `step_checked` with the
+//!   `step_overlapped`-style rollback (reduced emptied, report zeroed,
+//!   `steps_done` unchanged): a partial fold never escapes;
+//! * **elastic membership** — dropping and rejoining a worker mid-run
+//!   re-shards deterministically and keeps every surviving round a
+//!   complete fold;
+//! * **transport-level wire honesty** — measured channel octets equal
+//!   the claimed `WireCost` on every transport (both 0 for in-process,
+//!   which moves references).
+
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{
+    FaultKind, StrategySpec, SyncSession, SyncSessionBuilder, TransportSpec, WireMode,
+};
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+/// The same 11-codec roster the conformance and overlap suites pin.
+fn codecs() -> Vec<(&'static str, StrategySpec)> {
+    vec![
+        ("fp32", StrategySpec::Fp32),
+        ("naive/e5m2", StrategySpec::Naive { fmt: FpFormat::E5M2 }),
+        (
+            "loss_scaling/e5m2",
+            StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        ),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ternary", StrategySpec::Ternary { seed: 42 }),
+        ("topk@0.25", StrategySpec::TopK { frac: 0.25 }),
+        ("qsgd b4/32", StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 }),
+        ("ef:ternary", ef(StrategySpec::Ternary { seed: 42 })),
+        ("ef:topk", ef(StrategySpec::TopK { frac: 0.25 })),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 })),
+    ]
+}
+
+const WORLD: usize = 4;
+const LAYERS: [usize; 5] = [33, 64, 128, 7, 256];
+
+/// Deterministic mixed-scale gradients, different per worker and step.
+fn grads(step: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..WORLD)
+        .map(|w| {
+            LAYERS
+                .iter()
+                .enumerate()
+                .map(|(l, &n)| {
+                    (0..n)
+                        .map(|i| {
+                            let h = (w * 131 + l * 31 + i * 7 + step * 977) % 23;
+                            let mag = match h % 4 {
+                                0 => 1e-6,
+                                1 => 0.125,
+                                2 => 3.5,
+                                _ => 96.0,
+                            };
+                            let sign = if h % 3 == 0 { -1.0 } else { 1.0 };
+                            if h == 11 {
+                                0.0
+                            } else {
+                                sign * mag * (1.0 + (h as f32) / 23.0)
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn ps_session(spec: &StrategySpec, shards: usize, staleness: usize) -> SyncSession {
+    SyncSessionBuilder::new(WORLD)
+        .spec(spec.clone())
+        .with_topology(Topology::Ps { shards, staleness })
+        .build()
+}
+
+fn to_bits(out: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    out.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// One step of worker 1 is `L` rounds: the session makes one reduce
+/// call per layer, so per-step delays must be whole multiples of the
+/// layer count (the collective asserts this rather than folding one
+/// layer's stale gradient into another).
+const L: usize = LAYERS.len();
+
+/// Apply the canonical straggler schedule: worker 1 one step late,
+/// worker 3 two steps late (both within a staleness budget of `2·L`
+/// rounds).
+fn apply_schedule(s: &mut SyncSession) {
+    assert!(s.set_arrival_delay(1, L), "ps sessions accept delay schedules");
+    assert!(s.set_arrival_delay(3, 2 * L));
+}
+
+#[test]
+fn fixed_arrival_schedule_replays_bit_identically() {
+    for (name, spec) in codecs() {
+        let mut a = ps_session(&spec, 2, 2 * L);
+        let mut b = ps_session(&spec, 2, 2 * L);
+        apply_schedule(&mut a);
+        apply_schedule(&mut b);
+        for step in 0..4 {
+            let g = grads(step);
+            let (a_out, a_report) = a
+                .step_checked(&g)
+                .unwrap_or_else(|e| panic!("{name} step {step}: in-process PS faulted: {e}"));
+            let a_out = to_bits(a_out);
+            let a_report = a_report.clone();
+            let (b_out, b_report) = b
+                .step_checked(&g)
+                .unwrap_or_else(|e| panic!("{name} step {step}: in-process PS faulted: {e}"));
+            for (l, (al, bl)) in a_out.iter().zip(b_out.iter()).enumerate() {
+                assert_eq!(al.len(), bl.len(), "{name} step {step} layer {l}: len");
+                for (i, (&x, &y)) in al.iter().zip(bl.iter()).enumerate() {
+                    assert_eq!(
+                        x,
+                        y.to_bits(),
+                        "{name} step {step} layer {l} elem {i}: replay diverged"
+                    );
+                }
+            }
+            assert_eq!(&a_report, b_report, "{name} step {step}: reports diverged");
+        }
+        assert_eq!(a.steps_done(), 4, "{name}: every checked step counted");
+        // In-process moves references: both sides of the honesty check
+        // stay zero.
+        let t = a.collective_traffic().unwrap_or_else(|| panic!("{name}: PS owns a transport"));
+        assert_eq!((t.octets, t.claimed_octets), (0, 0), "{name}: in-process octets");
+    }
+}
+
+/// The server shard count partitions the element space; it must never
+/// change a fold chain — even mid-staleness, where arrival order does
+/// the reordering.
+#[test]
+fn re_sharding_preserves_bits_under_staleness() {
+    for (name, spec) in
+        [("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }), ("ternary", StrategySpec::Ternary { seed: 42 })]
+    {
+        let mut reference: Vec<Vec<Vec<u32>>> = Vec::new();
+        for shards in [1usize, 2, 4, 16] {
+            let mut s = ps_session(&spec, shards, 2 * L);
+            apply_schedule(&mut s);
+            let mut steps: Vec<Vec<Vec<u32>>> = Vec::new();
+            for step in 0..3 {
+                let g = grads(step);
+                let (out, _) = s
+                    .step_checked(&g)
+                    .unwrap_or_else(|e| panic!("{name}/shards={shards}: {e}"));
+                steps.push(to_bits(out));
+            }
+            if reference.is_empty() {
+                reference = steps;
+            } else {
+                assert_eq!(steps, reference, "{name}: shards={shards} changed bits");
+            }
+        }
+    }
+}
+
+/// At staleness 0 the PS is synchronous and the packed wire must agree
+/// bit-for-bit with the legacy simulated wire — same bits, same report
+/// (the collective's per-round stats are wire-mode independent by
+/// construction).
+#[test]
+fn synchronous_ps_matches_across_wire_modes() {
+    for (name, spec) in codecs() {
+        let mut packed = SyncSessionBuilder::new(WORLD)
+            .spec(spec.clone())
+            .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+            .with_wire(WireMode::Packed)
+            .build();
+        let mut sim = SyncSessionBuilder::new(WORLD)
+            .spec(spec.clone())
+            .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+            .with_wire(WireMode::Simulated)
+            .build();
+        for step in 0..2 {
+            let g = grads(step);
+            let (p_out, p_report) = packed.step_checked(&g).expect("packed PS step");
+            let p_out = to_bits(p_out);
+            let p_report = p_report.clone();
+            let (s_out, s_report) = sim.step_checked(&g).expect("simulated PS step");
+            for (l, (pl, sl)) in p_out.iter().zip(s_out.iter()).enumerate() {
+                for (i, (&x, &y)) in pl.iter().zip(sl.iter()).enumerate() {
+                    assert_eq!(
+                        x,
+                        y.to_bits(),
+                        "{name} step {step} layer {l} elem {i}: wire modes diverge"
+                    );
+                }
+            }
+            assert_eq!(&p_report, s_report, "{name} step {step}: reports diverge");
+        }
+    }
+}
+
+/// PS flavor of the conformance contract's zero-step check: after a
+/// dense synchronous round, a zero-gradient round reduces to exactly
+/// zero for every memoryless codec (no stale pending entry, no wire
+/// buffer leak). Error-feedback codecs legitimately flush residuals.
+#[test]
+fn zero_gradient_round_after_dense_is_zero() {
+    for (name, spec) in codecs() {
+        if matches!(spec, StrategySpec::ErrorFeedback { .. }) {
+            continue;
+        }
+        let mut s = ps_session(&spec, 2, 0);
+        let _ = s.step_checked(&grads(0)).expect("dense round");
+        let zeros: Vec<Vec<Vec<f32>>> =
+            (0..WORLD).map(|_| LAYERS.iter().map(|&n| vec![0.0f32; n]).collect()).collect();
+        let (out, _) = s.step_checked(&zeros).expect("zero round");
+        for (l, layer) in out.iter().enumerate() {
+            assert!(
+                layer.iter().all(|&v| v == 0.0),
+                "{name} layer {l}: zero gradients must reduce to zero"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded-staleness convergence on the error-feedback suite's
+// heterogeneous quadratic: per-worker least-squares shards with
+// zero-sum target shifts, so per-worker gradients stay large at the
+// consensus optimum and stale arrivals genuinely perturb the fold.
+// ---------------------------------------------------------------------
+
+const D: usize = 16;
+const ROWS: usize = 8;
+
+struct Quadratic {
+    x: Vec<Vec<Vec<f32>>>,
+    y: Vec<Vec<f32>>,
+}
+
+fn build_problem() -> Quadratic {
+    let mut rng = Rng::new(4242);
+    let w_true: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+    let x: Vec<Vec<Vec<f32>>> = (0..WORLD)
+        .map(|_| (0..ROWS).map(|_| (0..D).map(|_| rng.normal()).collect()).collect())
+        .collect();
+    let deltas: Vec<Vec<f32>> =
+        (0..WORLD).map(|_| (0..D).map(|_| rng.normal()).collect()).collect();
+    let mean: Vec<f32> =
+        (0..D).map(|i| deltas.iter().map(|d| d[i]).sum::<f32>() / WORLD as f32).collect();
+    let y = (0..WORLD)
+        .map(|w| {
+            x[w].iter()
+                .map(|row| {
+                    row.iter()
+                        .enumerate()
+                        .map(|(i, &v)| v * (w_true[i] + (deltas[w][i] - mean[i])))
+                        .sum()
+                })
+                .collect()
+        })
+        .collect();
+    Quadratic { x, y }
+}
+
+fn worker_grad(q: &Quadratic, w: &[f32], k: usize) -> Vec<f32> {
+    let mut g = vec![0.0f32; D];
+    for (row, &yk) in q.x[k].iter().zip(&q.y[k]) {
+        let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+        let e = (pred - yk) / ROWS as f32;
+        for (gi, &xi) in g.iter_mut().zip(row) {
+            *gi += e * xi;
+        }
+    }
+    g
+}
+
+fn loss(q: &Quadratic, w: &[f32]) -> f64 {
+    let mut tot = 0.0f64;
+    for k in 0..WORLD {
+        for (row, &yk) in q.x[k].iter().zip(&q.y[k]) {
+            let pred: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+            tot += ((pred - yk) as f64).powi(2);
+        }
+    }
+    tot / (WORLD * ROWS) as f64
+}
+
+/// Train the quadratic through a PS session with the given staleness
+/// schedule (the model has one layer, so delays are whole steps).
+fn train_ps_quadratic(
+    spec: StrategySpec,
+    staleness: usize,
+    delays: &[(usize, usize)],
+) -> f64 {
+    const STEPS: usize = 400;
+    const LR: f32 = 0.05;
+    let q = build_problem();
+    let mut w = vec![0.0f32; D];
+    let mut session = SyncSessionBuilder::new(WORLD)
+        .spec(spec)
+        .with_topology(Topology::Ps { shards: 2, staleness })
+        .build();
+    for &(worker, rounds) in delays {
+        assert!(session.set_arrival_delay(worker, rounds));
+    }
+    for _ in 0..STEPS {
+        let grads: Vec<Vec<Vec<f32>>> =
+            (0..WORLD).map(|k| vec![worker_grad(&q, &w, k)]).collect();
+        let (reduced, _) = session.step_checked(&grads).expect("in-process PS never faults");
+        for (wi, &gi) in w.iter_mut().zip(reduced[0].iter()) {
+            *wi -= LR * gi;
+        }
+        assert!(w.iter().all(|v| v.is_finite()), "stale PS training diverged");
+    }
+    loss(&q, &w)
+}
+
+#[test]
+fn bounded_staleness_converges_on_the_quadratic() {
+    let q = build_problem();
+    let initial = loss(&q, &vec![0.0f32; D]);
+    // Worker 1 one step late, worker 3 two steps late, both within K=2.
+    let schedule: &[(usize, usize)] = &[(1, 1), (3, 2)];
+    for (name, spec) in [
+        ("fp32", StrategySpec::Fp32),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+    ] {
+        let synchronous = train_ps_quadratic(spec.clone(), 0, &[]);
+        let stale = train_ps_quadratic(spec, 2, schedule);
+        assert!(
+            synchronous < 0.5 * initial,
+            "{name}: synchronous PS failed to train ({initial:.3} -> {synchronous:.3})"
+        );
+        assert!(
+            stale < 0.5 * initial,
+            "{name}: staleness-2 PS failed to train ({initial:.3} -> {stale:.3})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault taxonomy and elastic membership.
+// ---------------------------------------------------------------------
+
+/// A small single-layer model keeps the TCP fault tests fast and makes
+/// arrival delays whole steps.
+fn small_grads(step: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..WORLD)
+        .map(|w| vec![(0..64).map(|i| ((w * 13 + i * 7 + step * 31) % 17) as f32 * 0.25 - 2.0).collect()])
+        .collect()
+}
+
+fn ps_tcp_session() -> SyncSession {
+    SyncSessionBuilder::new(WORLD)
+        .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+        .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+        .with_transport(TransportSpec::Tcp)
+        .build()
+}
+
+/// Rollback contract shared by both fault flavors: the failed step is
+/// uncounted, outputs emptied, report zeroed — no partial fold escapes.
+fn assert_rolled_back(s: &SyncSession, steps_before: u64) {
+    assert_eq!(s.steps_done(), steps_before, "failed step must not count");
+    assert!(s.reduced().iter().all(|l| l.is_empty()), "reduced must be emptied");
+    assert!(s.report().layers.is_empty(), "report must be zeroed");
+    assert_eq!(s.report().messages, 0);
+    assert_eq!(s.wire_moved(), None);
+}
+
+/// A peer slower than the read-patience budget is a *straggler*: the
+/// step fails cleanly with `FaultKind::Slow` naming the worker — the
+/// caller can wait it out or drop the member, but it is not dead.
+#[test]
+fn straggler_past_patience_is_slow_not_dead() {
+    let mut s = ps_tcp_session();
+    let (_, report) = s.step_checked(&small_grads(0)).expect("healthy step");
+    assert_eq!(report.layers.len(), 1);
+    assert_eq!(s.steps_done(), 1);
+
+    assert!(s.set_transport_patience(10, 2), "PS transport accepts a patience budget");
+    assert!(s.inject_transport_delay(1, 500), "PS transport accepts send delays");
+    let err = s.step_checked(&small_grads(1)).expect_err("straggler must fail the step");
+    assert_eq!(err.kind, FaultKind::Slow, "a straggler is slow, not dead: {err}");
+    assert_eq!(err.worker, 1, "the error names the straggler: {err}");
+    assert_eq!(err.transport, "tcp");
+    assert_rolled_back(&s, 1);
+}
+
+/// A straggler within the patience budget is absorbed: the step blocks
+/// briefly and succeeds.
+#[test]
+fn sub_patience_straggler_is_absorbed() {
+    let mut s = ps_tcp_session();
+    assert!(s.set_transport_patience(250, 4));
+    assert!(s.inject_transport_delay(1, 30));
+    for step in 0..2 {
+        let _ = s.step_checked(&small_grads(step)).expect("sub-patience delay must succeed");
+    }
+    assert_eq!(s.steps_done(), 2);
+    let t = s.collective_traffic().expect("PS owns a transport");
+    assert_eq!(t.octets, t.claimed_octets, "octets must match the claimed WireCost");
+    assert!(t.octets > 0, "TCP serializes every frame");
+}
+
+/// A killed peer is *dead*: EOF/reset, not a timeout — and the same
+/// clean rollback applies.
+#[test]
+fn dead_peer_is_dead_not_slow() {
+    let mut s = ps_tcp_session();
+    let _ = s.step_checked(&small_grads(0)).expect("healthy step");
+    assert_eq!(s.steps_done(), 1);
+
+    assert!(s.kill_transport_peer(2), "the session forwards the kill to the PS transport");
+    let err = s.step_checked(&small_grads(1)).expect_err("killed peer must fail the step");
+    assert_eq!(err.kind, FaultKind::Dead, "a reset peer is dead, not slow: {err}");
+    assert_eq!(err.worker, 2, "the error names the dropped peer: {err}");
+    assert_eq!(err.transport, "tcp");
+    assert_rolled_back(&s, 1);
+}
+
+/// Elastic membership: dropping a worker mid-run excludes it from every
+/// subsequent fold (a re-shard over the survivors), rejoin restores it,
+/// and the whole schedule replays bit-identically — including across
+/// different server shard counts, since membership changes only re-split
+/// the element space.
+#[test]
+fn elastic_drop_and_rejoin_replays_deterministically() {
+    for (name, spec) in [
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 })),
+    ] {
+        let mut reference: Vec<Vec<Vec<u32>>> = Vec::new();
+        for shards in [2usize, 4] {
+            let mut s = ps_session(&spec, shards, 0);
+            let mut steps: Vec<Vec<Vec<u32>>> = Vec::new();
+            for step in 0..4 {
+                if step == 1 {
+                    assert!(s.set_member_active(1, false), "drop worker 1 mid-run");
+                }
+                if step == 3 {
+                    assert!(s.set_member_active(1, true), "rejoin worker 1");
+                }
+                let g = grads(step);
+                let (out, _) = s
+                    .step_checked(&g)
+                    .unwrap_or_else(|e| panic!("{name}/shards={shards} step {step}: {e}"));
+                // Never a partial fold: every layer comes back full-length.
+                for (l, (layer, &n)) in out.iter().zip(LAYERS.iter()).enumerate() {
+                    assert_eq!(layer.len(), n, "{name} step {step} layer {l}: truncated fold");
+                }
+                steps.push(to_bits(out));
+            }
+            if reference.is_empty() {
+                reference = steps;
+            } else {
+                assert_eq!(steps, reference, "{name}: shards={shards} changed the replay");
+            }
+        }
+    }
+}
+
+/// Transport-level wire honesty for the PS push/pull legs: on every
+/// serializing transport the measured channel octets equal the
+/// encode-side claimed bytes exactly, for every codec.
+#[test]
+fn octets_match_claimed_wire_cost_on_shared_mem() {
+    for (name, spec) in codecs() {
+        let mut s = SyncSessionBuilder::new(WORLD)
+            .spec(spec.clone())
+            .with_topology(Topology::Ps { shards: 2, staleness: 0 })
+            .with_transport(TransportSpec::SharedMem)
+            .build();
+        for step in 0..2 {
+            let _ = s.step_checked(&grads(step)).expect("shared-mem PS step");
+        }
+        let t = s.collective_traffic().unwrap_or_else(|| panic!("{name}: PS owns a transport"));
+        assert_eq!(
+            t.octets, t.claimed_octets,
+            "{name}: transport moved octets != claimed octets"
+        );
+        assert!(t.octets > 0, "{name}: serializing transport moved nothing");
+    }
+}

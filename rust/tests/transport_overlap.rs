@@ -18,7 +18,7 @@
 //!   `ready_order`, for any bucket size.
 
 use aps_cpd::cpd::FpFormat;
-use aps_cpd::sync::{StrategySpec, SyncSession, SyncSessionBuilder, TransportSpec};
+use aps_cpd::sync::{FaultKind, StrategySpec, SyncSession, SyncSessionBuilder, TransportSpec};
 
 fn ef(inner: StrategySpec) -> StrategySpec {
     StrategySpec::ErrorFeedback { inner: Box::new(inner) }
@@ -250,6 +250,7 @@ fn tcp_peer_drop_yields_clean_error() {
     let err = s.step_overlapped(&g, &order).expect_err("killed peer must fail the step");
     assert_eq!(err.transport, "tcp");
     assert_eq!(err.worker, 2, "the error names the dropped peer: {err}");
+    assert_eq!(err.kind, FaultKind::Dead, "a reset peer is dead, not slow");
 
     // No partial fold escaped: outputs empty, report zeroed, the failed
     // step not counted.
@@ -258,6 +259,88 @@ fn tcp_peer_drop_yields_clean_error() {
     assert!(s.report().layers.is_empty());
     assert_eq!(s.report().messages, 0);
     assert_eq!(s.wire_moved(), None);
+}
+
+/// A model with zero layers must be a clean no-op on both paths: no
+/// panic, no division by zero in the auto bucket sizing (total traffic
+/// is 0), empty outputs, zero buckets — and the reports identical.
+#[test]
+fn zero_layer_model_is_a_clean_noop() {
+    for bucket_bytes in [0usize, 1, 1 << 30] {
+        let spec = StrategySpec::Aps { fmt: FpFormat::E5M2 };
+        let mut sync = sync_session(&spec);
+        let mut over = overlap_session(&spec, TransportSpec::SharedMem, bucket_bytes);
+        let g: Vec<Vec<Vec<f32>>> = vec![Vec::new(); WORLD];
+        let order: Vec<usize> = Vec::new();
+
+        let (s_out, s_report) = sync.step(&g);
+        assert!(s_out.is_empty(), "bb={bucket_bytes}: no layers, no outputs");
+        let s_report = s_report.clone();
+
+        let (o_out, o_report) =
+            over.step_overlapped(&g, &order).expect("zero layers must not fail");
+        assert!(o_out.is_empty(), "bb={bucket_bytes}: no layers, no outputs");
+        assert_eq!(&s_report, o_report, "bb={bucket_bytes}: reports must match");
+        assert!(o_report.buckets.is_empty(), "bb={bucket_bytes}: nothing to bucket");
+        assert_eq!(over.steps_done(), 1, "bb={bucket_bytes}: the step still counts");
+    }
+}
+
+/// Layers that all have zero elements: total dense traffic is 0 bytes
+/// into `auto_bucket_bytes` (which must floor, not divide by zero), and
+/// the overlapped fold must stay bit-identical with `step()` — trivially
+/// empty per-layer outputs, but with every layer still covered by
+/// exactly one bucket.
+#[test]
+fn all_empty_layers_fold_cleanly() {
+    let spec = StrategySpec::Aps { fmt: FpFormat::E5M2 };
+    let g: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); 3]; WORLD];
+    let order = vec![2usize, 1, 0];
+
+    let mut sync = sync_session(&spec);
+    let (s_out, s_report) = sync.step(&g);
+    assert_eq!(s_out.len(), 3);
+    assert!(s_out.iter().all(|l| l.is_empty()));
+    let s_report = s_report.clone();
+
+    for bucket_bytes in [0usize, 1] {
+        let mut over = overlap_session(&spec, TransportSpec::SharedMem, bucket_bytes);
+        let (o_out, o_report) =
+            over.step_overlapped(&g, &order).expect("empty layers must not fail");
+        assert_eq!(o_out.len(), 3, "bb={bucket_bytes}");
+        assert!(o_out.iter().all(|l| l.is_empty()), "bb={bucket_bytes}");
+        assert_eq!(o_report.payload_bytes, s_report.payload_bytes, "bb={bucket_bytes}");
+        assert_eq!(o_report.exponent_bytes, s_report.exponent_bytes, "bb={bucket_bytes}");
+        assert_eq!(o_report.wire, s_report.wire, "bb={bucket_bytes}");
+        let covered: usize = o_report.buckets.iter().map(|b| b.layers).sum();
+        assert_eq!(covered, 3, "bb={bucket_bytes}: every empty layer in exactly one bucket");
+    }
+}
+
+/// A bucket budget smaller than any single layer's wire bytes must
+/// degenerate to one bucket per layer (every bucket holds at least one
+/// layer — no empty buckets, no infinite loop) and stay bit-identical.
+#[test]
+fn bucket_smaller_than_any_layer_degenerates_to_per_layer() {
+    let spec = StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 42 };
+    let g = grads(0);
+    let order = backprop_order();
+
+    let mut sync = sync_session(&spec);
+    let (s_out, _) = sync.step(&g);
+    let s_bits: Vec<Vec<u32>> =
+        s_out.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect();
+
+    // 4 bytes < the smallest layer's 7 * 4 dense bytes.
+    let mut over = overlap_session(&spec, TransportSpec::SharedMem, 4);
+    let (o_out, o_report) = over.step_overlapped(&g, &order).expect("tiny bucket budget");
+    assert_eq!(o_report.buckets.len(), LAYERS.len(), "one bucket per layer");
+    assert!(o_report.buckets.iter().all(|b| b.layers == 1), "no bucket fuses layers");
+    for (l, (sl, ol)) in s_bits.iter().zip(o_out.iter()).enumerate() {
+        for (i, (&sb, &o)) in sl.iter().zip(ol.iter()).enumerate() {
+            assert_eq!(sb, o.to_bits(), "layer {l} elem {i}: bits diverge");
+        }
+    }
 }
 
 /// Custom strategies cannot be twinned onto the pool; the overlapped
