@@ -187,13 +187,15 @@ fn main() {
                 let covered: usize = report.buckets.iter().map(|b| b.layers).sum();
                 assert_eq!(covered, layers.len(), "{cname}: every layer in exactly one bucket");
                 // Price each bucket's per-worker share of its honest
-                // octets on the calibrated ring; buckets are summed (the
-                // α terms are what fusing amortizes away).
+                // octets on the calibrated ring, plus the producer-side
+                // encode/pack pass over its elements; buckets are summed
+                // (the α terms are what fusing amortizes away).
                 let predicted_ms: f64 = report
                     .buckets
                     .iter()
                     .map(|b| {
-                        model.allreduce_time(Topology::Ring, world, b.bytes / world as u64)
+                        model.encode_time(b.elements as u64)
+                            + model.allreduce_time(Topology::Ring, world, b.bytes / world as u64)
                     })
                     .sum::<f64>()
                     * 1e3;

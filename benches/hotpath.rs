@@ -6,11 +6,14 @@
 //!
 //! Run with `--test` (CI does) for a single-iteration smoke pass on a
 //! small tensor that asserts the packed-traffic invariants — packed
-//! ternary must move ≤ 1/10th the bytes of the FP32 wire, and with the
+//! ternary must move ≤ 1/10th the bytes of the FP32 wire, with the
 //! parallel packed fold it must also sustain ≥ the dense simulated FP32
-//! wire in elements/sec — and emits `BENCH_packed.json` (elements/sec +
-//! bytes moved for every conformance codec × both collectives, plus the
-//! dense fp32 baseline), the perf trajectory record.
+//! wire in elements/sec, and the parallel encode fan-out must sustain ≥
+//! the serial encode loop in encode-phase elements/sec at world 8 — and
+//! emits `BENCH_packed.json` (elements/sec + bytes moved for every
+//! conformance codec × both collectives, the dense fp32 baseline, the
+//! serial/parallel encode rows, and the overlap rows' per-phase
+//! encode/transit/fold/wait breakdown), the perf trajectory record.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -153,6 +156,7 @@ fn main() {
             let mut row = BTreeMap::new();
             row.insert("bytes_moved".to_string(), Json::Num(measured_total as f64));
             row.insert("elems_per_sec".to_string(), Json::Num(elems_per_sec));
+            row.insert("encode_ns".to_string(), Json::Num(report.encode_ns as f64));
             rows.insert(key, Json::Obj(row));
         }
     }
@@ -213,6 +217,75 @@ fn main() {
             ternary_rate >= dense_elems_per_sec,
             "packed ternary must sustain ≥ dense fp32 elems/sec \
              (ternary {ternary_rate:.0} vs dense {dense_elems_per_sec:.0})"
+        );
+    }
+
+    // ---- producer-side encode: parallel twin fan-out vs serial loop ----
+    // The phase `SyncReport::encode_ns` measures — quantize → pack for
+    // all 8 workers — on one reduction-threshold-clearing layer, APS
+    // e5m2. Rates are encode-phase only (the fold is identical in both
+    // sessions), medians over several steps so the smoke gate does not
+    // ride on one-shot spawn noise. Outputs must be bit-identical: the
+    // fan-out only moves whole per-worker encode chains onto twin lanes.
+    println!("\nparallel encode (per-worker twin lanes) vs serial encode loop:");
+    let en = if smoke { 1 << 17 } else { 4 << 20 };
+    let enc_grads: Vec<Vec<Vec<f32>>> = (0..world)
+        .map(|w| {
+            vec![(0..en).map(|i| ((w * 131 + i) % 23) as f32 * 0.0625 - 0.7).collect()]
+        })
+        .collect();
+    let enc_elems = (en * world) as u64;
+    let enc_steps = if smoke { 5 } else { 9 };
+    let mut enc_rates: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut enc_outs: BTreeMap<&str, Vec<u32>> = BTreeMap::new();
+    for (label, threads) in [("encode_serial", 1usize), ("encode_parallel", 8)] {
+        let mut s = SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_encode_threads(threads)
+            .build();
+        let _ = s.step(&enc_grads); // warm the session buffers
+        let mut ns: Vec<u64> = Vec::new();
+        for _ in 0..enc_steps {
+            let (_, rep) = s.step(&enc_grads);
+            ns.push(rep.encode_ns);
+        }
+        ns.sort_unstable();
+        let med_ns = ns[ns.len() / 2].max(1);
+        let rate = enc_elems as f64 / (med_ns as f64 * 1e-9);
+        let report = s.report().clone();
+        let moved = s.wire_moved().expect("packed sessions measure moved traffic");
+        let bytes = moved.total_bytes() + report.exponent_bytes;
+        println!(
+            "  {label} ({threads} thr): encode {:.3} ms/step, {:.1} Melem/s \
+             [{} KiB/worker honest]",
+            med_ns as f64 * 1e-6,
+            rate / 1e6,
+            bytes / 1024
+        );
+        enc_rates.insert(label, rate);
+        enc_outs.insert(label, s.reduced()[0].iter().map(|x| x.to_bits()).collect());
+        let mut row = BTreeMap::new();
+        row.insert("bytes_moved".to_string(), Json::Num(bytes as f64));
+        row.insert("elems_per_sec".to_string(), Json::Num(rate));
+        row.insert("encode_ns".to_string(), Json::Num(med_ns as f64));
+        row.insert("encode_threads".to_string(), Json::Num(threads as f64));
+        rows.insert(format!("{label}@world8"), Json::Obj(row));
+    }
+    assert_eq!(
+        enc_outs["encode_serial"], enc_outs["encode_parallel"],
+        "parallel encode fan-out must be bit-identical to the serial loop"
+    );
+    println!(
+        "  parallel/serial encode throughput: {:.2}x",
+        enc_rates["encode_parallel"] / enc_rates["encode_serial"]
+    );
+    if smoke {
+        assert!(
+            enc_rates["encode_parallel"] >= enc_rates["encode_serial"],
+            "parallel encode must sustain ≥ serial encode elems/sec at world 8 \
+             (parallel {:.0} vs serial {:.0})",
+            enc_rates["encode_parallel"],
+            enc_rates["encode_serial"]
         );
     }
 
@@ -311,11 +384,23 @@ fn main() {
                 Json::Obj(o)
             })
             .collect();
+        // Per-phase breakdown summed over buckets: the encode (producer)
+        // vs exchange (transit+wait) vs fold split of the last step.
+        let (mut transit_ns, mut fold_ns, mut wait_ns) = (0u64, 0u64, 0u64);
+        for b in &report.buckets {
+            transit_ns += b.transit_ns;
+            fold_ns += b.fold_ns;
+            wait_ns += b.wait_ns;
+        }
         let mut row = BTreeMap::new();
         row.insert("bytes_moved".to_string(), Json::Num(measured_total as f64));
         row.insert("elems_per_sec".to_string(), Json::Num(rate));
         row.insert("transport".to_string(), Json::Str(tname.to_string()));
         row.insert("bucket_bytes".to_string(), Json::Str("auto".to_string()));
+        row.insert("encode_ns".to_string(), Json::Num(report.encode_ns as f64));
+        row.insert("transit_ns".to_string(), Json::Num(transit_ns as f64));
+        row.insert("fold_ns".to_string(), Json::Num(fold_ns as f64));
+        row.insert("wait_ns".to_string(), Json::Num(wait_ns as f64));
         row.insert("buckets".to_string(), Json::Arr(buckets));
         rows.insert(format!("overlap_ternary@{tname}"), Json::Obj(row));
     }

@@ -186,13 +186,18 @@ pub struct SyncReport {
     /// Per-bucket timing from the overlapped path (empty for
     /// [`crate::sync::SyncSession::step`]). Excluded from equality.
     pub buckets: Vec<BucketStats>,
+    /// Wall-clock nanoseconds of the per-worker encode→pack phase for
+    /// the whole step (the overlapped path reports the sum of its
+    /// buckets' [`BucketStats::encode_ns`]). Observability only —
+    /// excluded from equality like the bucket timings.
+    pub encode_ns: u64,
 }
 
 /// Timing-free equality: every accounting field must match, but
-/// `buckets` carries wall-clock measurements that legitimately differ
-/// between the synchronous and overlapped paths (and between runs), so
-/// the packed/simulated/overlapped bit-identity suites can compare
-/// whole reports with `assert_eq!`.
+/// `buckets` and `encode_ns` carry wall-clock measurements that
+/// legitimately differ between the synchronous and overlapped paths (and
+/// between runs), so the packed/simulated/overlapped bit-identity suites
+/// can compare whole reports with `assert_eq!`.
 impl PartialEq for SyncReport {
     fn eq(&self, other: &Self) -> bool {
         self.layers == other.layers
@@ -239,19 +244,44 @@ pub fn ldexp_f32(x: f32, e: i32) -> f32 {
     (x as f64 * (e as f64).exp2()) as f32
 }
 
+/// Fixed tree block for the max-magnitude prepare scan: per-block maxima
+/// combined in ascending block order. Compile-time so the combine tree
+/// is a function of the layer length alone — never of the thread count.
+const MAX_ABS_BLOCK: usize = 4096;
+
+/// Leaf of the max-magnitude tree: `max |g|` over one block. `>` skips
+/// NaN; ±INF propagates, so divergent layers still map to `None` below.
+fn abs_block_max(blk: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &g in blk {
+        let a = g.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    m
+}
+
 /// Algorithm 1 lines 3–4: a worker's local `max_exp` for one layer,
 /// already inflated by `world_size` (the `grad * world_size` term that
 /// makes the Eq. 2 bound hold for the *summed* gradient).
 ///
+/// The scan is a fixed-block tree reduction: threads engage on huge
+/// layers (intra-layer parallel prepare), and because exact max is
+/// associative and the block boundaries are compile-time, the result is
+/// the serial scan's bit-for-bit at every thread count
+/// (`rust/tests/encode_parallel.rs` pins the equivalence).
+///
 /// Returns `None` when the layer's gradient is all zero (nothing to scale).
 pub fn local_max_exp(grad: &[f32], world_size: usize) -> Option<i32> {
-    let mut max_abs = 0.0f32;
-    for &g in grad {
-        let a = g.abs();
-        if a > max_abs {
-            max_abs = a;
-        }
-    }
+    let max_abs = crate::util::par::par_block_reduce(
+        grad,
+        MAX_ABS_BLOCK,
+        crate::util::par::reduce_threads(grad.len()),
+        abs_block_max,
+        |a, b| if b > a { b } else { a },
+    )
+    .unwrap_or(0.0);
     if max_abs == 0.0 || !max_abs.is_finite() {
         return None;
     }

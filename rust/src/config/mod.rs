@@ -45,6 +45,17 @@ pub struct ExperimentConfig {
     /// bytes (`sync.bucket_bytes`; 0 — the default — picks an automatic
     /// size from the model's total traffic and the pool width).
     pub bucket_bytes: usize,
+    /// Consumer-side (packed fold) thread count
+    /// (`sync.threads = { fold = K, … }`, or the older flat
+    /// `sync.fold_threads` spelling; 0 — the default — auto-sizes per
+    /// layer). Feeds `SyncSessionBuilder::with_fold_threads`.
+    pub fold_threads: usize,
+    /// Producer-side (per-worker encode fan-out) thread count
+    /// (`sync.threads = { encode = K, … }`, or flat
+    /// `sync.encode_threads`; 0 — the default — auto-sizes per layer,
+    /// 1 keeps the serial encode loop). Feeds
+    /// `SyncSessionBuilder::with_encode_threads`.
+    pub encode_threads: usize,
     pub kahan: bool,
     pub fp32_last_layer: bool,
     pub hybrid: Option<HybridSchedule>,
@@ -223,6 +234,38 @@ impl ExperimentConfig {
             .map(|v| v.as_usize())
             .transpose()?
             .unwrap_or(0);
+        // `sync.threads = { fold = K, encode = K }` is the canonical
+        // spelling for the session's two thread budgets; the flat
+        // `sync.fold_threads` / `sync.encode_threads` keys stay accepted
+        // as aliases for older configs and lose when the table names the
+        // same side.
+        let mut fold_threads = doc
+            .opt("sync", "fold_threads")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0);
+        let mut encode_threads = doc
+            .opt("sync", "encode_threads")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0);
+        if let Some(v) = doc.opt("sync", "threads") {
+            let table = v.as_table().map_err(|e| anyhow!("sync.threads: {e}"))?;
+            for (key, val) in table {
+                let n = val
+                    .as_usize()
+                    .map_err(|e| anyhow!("sync.threads.{key}: {e}"))?;
+                match key.as_str() {
+                    "fold" => fold_threads = n,
+                    "encode" => encode_threads = n,
+                    other => {
+                        return Err(anyhow!(
+                            "unknown sync.threads key {other:?} (fold|encode)"
+                        ))
+                    }
+                }
+            }
+        }
         let kahan = doc.opt("sync", "kahan").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
         let fp32_last_layer = doc
             .opt("sync", "fp32_last_layer")
@@ -313,6 +356,8 @@ impl ExperimentConfig {
             wire,
             transport,
             bucket_bytes,
+            fold_threads,
+            encode_threads,
             kahan,
             fp32_last_layer,
             hybrid,
@@ -521,6 +566,45 @@ steps_per_epoch = 2
         assert_eq!(cfg.bucket_bytes, 65536);
         let bad = SAMPLE.replace("kahan = true", "kahan = true\ntransport = \"carrier_pigeon\"");
         assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn thread_budgets_parse_table_and_flat_aliases() {
+        // Defaults: both sides auto-size.
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!((cfg.fold_threads, cfg.encode_threads), (0, 0));
+
+        // Canonical inline-table spelling, either side or both.
+        let t = SAMPLE
+            .replace("kahan = true", "kahan = true\nthreads = { fold = 4, encode = 2 }");
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        assert_eq!((cfg.fold_threads, cfg.encode_threads), (4, 2));
+        let t = SAMPLE.replace("kahan = true", "kahan = true\nthreads = { encode = 8 }");
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        assert_eq!((cfg.fold_threads, cfg.encode_threads), (0, 8));
+
+        // The flat aliases still parse…
+        let t = SAMPLE
+            .replace("kahan = true", "kahan = true\nfold_threads = 3\nencode_threads = 5");
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        assert_eq!((cfg.fold_threads, cfg.encode_threads), (3, 5));
+
+        // …and lose to the table when it names the same side, while an
+        // un-named side keeps the alias value.
+        let t = SAMPLE.replace(
+            "kahan = true",
+            "kahan = true\nfold_threads = 3\nencode_threads = 5\nthreads = { encode = 1 }",
+        );
+        let cfg = ExperimentConfig::from_toml_str(&t).unwrap();
+        assert_eq!((cfg.fold_threads, cfg.encode_threads), (3, 1));
+
+        // Unknown table keys and non-integer values error loudly.
+        let bad = SAMPLE.replace("kahan = true", "kahan = true\nthreads = { decode = 4 }");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+        let bad = SAMPLE.replace("kahan = true", "kahan = true\nthreads = { fold = \"all\" }");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err());
+        let bad = SAMPLE.replace("kahan = true", "kahan = true\nthreads = 4");
+        assert!(ExperimentConfig::from_toml_str(&bad).is_err(), "scalar threads must error");
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct TrainerSetup {
     /// Bucket fusion threshold (honest wire bytes) for the overlapped
     /// path; 0 picks an automatic size.
     pub bucket_bytes: usize,
+    /// Consumer-side (packed fold) thread budget; 0 auto-sizes per layer.
+    pub fold_threads: usize,
+    /// Producer-side (encode fan-out) thread budget; 0 auto-sizes per
+    /// layer, 1 keeps the serial encode loop.
+    pub encode_threads: usize,
     pub optimizer: OptimizerKind,
     pub schedule: LrSchedule,
     pub epochs: usize,
@@ -59,6 +64,8 @@ impl TrainerSetup {
             wire: WireMode::default(),
             transport: TransportSpec::default(),
             bucket_bytes: 0,
+            fold_threads: 0,
+            encode_threads: 0,
             optimizer: OptimizerKind::Sgd { momentum: 0.9, weight_decay: 1e-4, nesterov: false },
             schedule: LrSchedule::Constant { lr: 0.05 },
             epochs: 2,
@@ -153,6 +160,8 @@ impl<'m> Trainer<'m> {
             .with_wire(setup.wire)
             .with_transport(setup.transport)
             .with_bucket_bytes(setup.bucket_bytes)
+            .with_fold_threads(setup.fold_threads)
+            .with_encode_threads(setup.encode_threads)
             .build();
         Ok(Trainer { model, setup, workload, session, low_spec, current_spec, params, optimizer })
     }

@@ -159,10 +159,19 @@ impl Config {
             hot: vec![
                 // The per-step session path (static complement to the
                 // counting-allocator test), including the overlapped
-                // bucket pipeline's per-bucket encode/fold entry points.
+                // bucket pipeline's per-bucket encode/fold entry points
+                // and the parallel encode fan-out's per-layer twin-lane
+                // entry points.
                 hot(
                     "sync/session.rs",
-                    &["step", "step_overlapped", "encode_bucket_layers", "overlap_worker"],
+                    &[
+                        "step",
+                        "step_overlapped",
+                        "encode_bucket_layers",
+                        "overlap_worker",
+                        "encode_layer_packed",
+                        "encode_layer_dense",
+                    ],
                 ),
                 // Transport frame path: runs once per layer per worker
                 // per step on the serializing transports.

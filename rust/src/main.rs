@@ -74,6 +74,8 @@ fn train(args: &Args) -> Result<()> {
     setup.wire = cfg.wire;
     setup.transport = cfg.transport;
     setup.bucket_bytes = cfg.bucket_bytes;
+    setup.fold_threads = cfg.fold_threads;
+    setup.encode_threads = cfg.encode_threads;
     setup.hybrid = cfg.hybrid;
     setup.optimizer = cfg.optimizer;
     setup.schedule = cfg.schedule.clone();

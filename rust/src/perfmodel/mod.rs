@@ -30,6 +30,12 @@ pub struct NetworkModel {
     /// Cast/scale compute overhead per element, seconds (APS pays this
     /// twice: scale+cast down, cast+unscale up).
     pub cast_per_elem: f64,
+    /// Producer-side encode/pack overhead per element, seconds — the
+    /// quantize→pack pass that runs before any byte reaches the wire.
+    /// Every method pays it once per element (it models the session's
+    /// encode phase, `SyncReport::encode_ns`), so it shifts absolute
+    /// times without flattering either side of a speedup ratio.
+    pub encode_per_elem: f64,
 }
 
 impl NetworkModel {
@@ -38,12 +44,20 @@ impl NetworkModel {
     /// kernel costs ~2.3 ns/element — the overhead visible as the gray +
     /// orange split in the paper's bars.
     pub fn v100_nccl() -> Self {
-        NetworkModel { alpha: 12e-6, beta: 5e-9, cast_per_elem: 2.3e-9 }
+        NetworkModel { alpha: 12e-6, beta: 5e-9, cast_per_elem: 2.3e-9, encode_per_elem: 0.3e-9 }
     }
 
     /// A slower commodity-ethernet profile (25 GbE-ish) for sweeps.
     pub fn ethernet_25g() -> Self {
-        NetworkModel { alpha: 30e-6, beta: 3.2e-10 * 8.0, cast_per_elem: 2e-11 }
+        NetworkModel { alpha: 30e-6, beta: 3.2e-10 * 8.0, cast_per_elem: 2e-11, encode_per_elem: 5e-11 }
+    }
+
+    /// Producer-side encode/pack time for one worker's `elems` gradient
+    /// elements (the α–β model's mirror of the session's measured
+    /// `SyncReport::encode_ns`).
+    pub fn encode_time(&self, elems: u64) -> f64 {
+        // apslint: allow(lossy_cast) -- element counts stay far below 2^53 for any realistic model
+        elems as f64 * self.encode_per_elem
     }
 
     /// Time for one all-reduce of `bytes` across `p` workers.
@@ -118,17 +132,23 @@ pub fn sync_time(
     fused: bool,
 ) -> f64 {
     let total_elems: u64 = layers.iter().map(|l| l.elements).sum();
+    // Producer-side encode/pack pass — every method quantizes/lays out
+    // its wire image once per element before communicating, so the term
+    // is common to both arms (it moves absolute times, never the APS-vs-
+    // plain ratio's direction).
+    let encode = net.encode_time(total_elems);
     match method {
         CommMethod::PlainAllReduce { bits } => {
             let per_elem = bits as u64 / 8;
-            if fused {
+            let payload = if fused {
                 net.allreduce_time(topo, p, total_elems * per_elem)
             } else {
                 layers
                     .iter()
                     .map(|l| net.allreduce_time(topo, p, l.elements * per_elem))
                     .sum()
-            }
+            };
+            encode + payload
         }
         CommMethod::Aps { fmt } => {
             let per_elem = (fmt.total_bits() as u64).div_ceil(8);
@@ -147,7 +167,7 @@ pub fn sync_time(
                     .map(|l| net.allreduce_time(topo, p, l.elements * per_elem))
                     .sum()
             };
-            exp_phase + cast + payload
+            encode + exp_phase + cast + payload
         }
     }
 }
@@ -277,6 +297,44 @@ mod tests {
         );
         assert!(aps > plain8, "APS pays the exponent phase on top");
         assert!(aps < plain8 * 1.5, "…but it must stay trivial (paper's claim)");
+    }
+
+    #[test]
+    fn encode_term_is_common_to_both_methods() {
+        // The producer-side term is paid once per element by plain and
+        // APS alike: subtracting it from both recovers the pure
+        // communication times, and its presence cannot flip a speedup.
+        let net = NetworkModel::v100_nccl();
+        let layers = fig11_layers();
+        let total: u64 = layers.iter().map(|l| l.elements).sum();
+        let enc = net.encode_time(total);
+        assert!(enc > 0.0);
+        for fused in [false, true] {
+            let plain = sync_time(
+                &net,
+                Topology::Ring,
+                32,
+                &layers,
+                CommMethod::PlainAllReduce { bits: 16 },
+                fused,
+            );
+            let aps = sync_time(
+                &net,
+                Topology::Ring,
+                32,
+                &layers,
+                CommMethod::Aps { fmt: FpFormat::E5M2 },
+                fused,
+            );
+            assert!(plain > enc && aps > enc, "fused={fused}");
+            // With the common term removed, APS still beats FP16 on the
+            // wire — the encode pass shrinks but never reverses Fig 11.
+            assert!(aps - enc < plain - enc, "fused={fused}");
+        }
+        // World 1 communicates nothing but still encodes.
+        let solo =
+            sync_time(&net, Topology::Ring, 1, &layers, CommMethod::PlainAllReduce { bits: 16 }, true);
+        assert_eq!(solo, enc, "world 1 communicates nothing but still encodes");
     }
 
     #[test]

@@ -208,6 +208,18 @@ impl<S: SyncStrategy> SyncStrategy for ErrorFeedback<S> {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         self.inner.parallel_decoder()
     }
+    /// An encode twin is a fresh `ErrorFeedback` around the inner
+    /// codec's own twin. Its residual store starts empty — exactly the
+    /// state of a fresh serial wrapper — and because the session pins
+    /// worker `w`'s every encode to twin `w` from the first step on,
+    /// each twin's `residual[w]` history evolves identically to what the
+    /// serial wrapper's slot `w` would hold. Opt-in requires the inner
+    /// codec's opt-in.
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        self.inner
+            .parallel_encoder()
+            .map(|inner| Box::new(ErrorFeedback::new(inner)) as Box<dyn SyncStrategy + Send>)
+    }
 }
 
 #[cfg(test)]

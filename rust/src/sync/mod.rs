@@ -363,51 +363,81 @@ pub trait SyncStrategy {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         None
     }
+
+    /// Opt into the parallel encode fan-out: return a fresh *encode
+    /// twin* — an independently owned strategy configured identically to
+    /// `self` (same format, seed, sparsity, …) with empty scratch. The
+    /// session builds one twin per worker and pins worker `w`'s entire
+    /// encode→[`SyncStrategy::encode_packed`] chain to twin `w` forever,
+    /// so per-worker codec state (error-feedback residuals, the QSGD
+    /// encode→pack coupling, selection scratch) lives in exactly one
+    /// object and evolves independently of how twins are scheduled onto
+    /// threads — outputs are bit-identical at any encode thread count
+    /// (`rust/tests/encode_parallel.rs` pins this at 0/1/2/4/8 threads).
+    ///
+    /// The default is `None`: third-party codecs keep the
+    /// single-threaded encode loop unless they explicitly opt in. All
+    /// built-in strategies opt in.
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        None
+    }
 }
 
-/// Forwarding impl so boxed strategies compose (e.g.
+/// Forwarding impls so boxed strategies compose (e.g.
 /// `ErrorFeedback<Box<dyn SyncStrategy>>`, which is what
-/// [`StrategySpec::build`] produces for `ef:`-prefixed specs).
-impl SyncStrategy for Box<dyn SyncStrategy> {
-    fn name(&self) -> &'static str {
-        (**self).name()
-    }
-    fn wire_format(&self) -> FpFormat {
-        (**self).wire_format()
-    }
-    fn prepare(
-        &mut self,
-        grads: &GradView,
-        collective: &dyn Collective,
-        factors: &mut Factors,
-    ) -> ReduceStats {
-        (**self).prepare(grads, collective, factors)
-    }
-    fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
-        (**self).encode(src, ctx, out)
-    }
-    fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
-        (**self).decode(reduced, ctx)
-    }
-    fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
-        (**self).wire_cost(encoded, ctx)
-    }
-    fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
-        (**self).encode_packed(encoded, ctx, out)
-    }
-    fn decode_packed(
-        &self,
-        packed: &PackedWire,
-        ctx: &LayerCtx,
-        range: Range<usize>,
-        out: &mut [f32],
-    ) {
-        (**self).decode_packed(packed, ctx, range, out)
-    }
-    fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
-        (**self).parallel_decoder()
-    }
+/// [`StrategySpec::build`] produces for `ef:`-prefixed specs, and
+/// `ErrorFeedback<Box<dyn SyncStrategy + Send>>`, which is what its
+/// [`SyncStrategy::parallel_encoder`] twin wraps).
+macro_rules! forward_sync_strategy {
+    ($ty:ty) => {
+        impl SyncStrategy for $ty {
+            fn name(&self) -> &'static str {
+                (**self).name()
+            }
+            fn wire_format(&self) -> FpFormat {
+                (**self).wire_format()
+            }
+            fn prepare(
+                &mut self,
+                grads: &GradView,
+                collective: &dyn Collective,
+                factors: &mut Factors,
+            ) -> ReduceStats {
+                (**self).prepare(grads, collective, factors)
+            }
+            fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
+                (**self).encode(src, ctx, out)
+            }
+            fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
+                (**self).decode(reduced, ctx)
+            }
+            fn wire_cost(&self, encoded: &[f32], ctx: &LayerCtx) -> WireCost {
+                (**self).wire_cost(encoded, ctx)
+            }
+            fn encode_packed(&mut self, encoded: &[f32], ctx: &LayerCtx, out: &mut PackedWire) {
+                (**self).encode_packed(encoded, ctx, out)
+            }
+            fn decode_packed(
+                &self,
+                packed: &PackedWire,
+                ctx: &LayerCtx,
+                range: Range<usize>,
+                out: &mut [f32],
+            ) {
+                (**self).decode_packed(packed, ctx, range, out)
+            }
+            fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
+                (**self).parallel_decoder()
+            }
+            fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+                (**self).parallel_encoder()
+            }
+        }
+    };
 }
+
+forward_sync_strategy!(Box<dyn SyncStrategy>);
+forward_sync_strategy!(Box<dyn SyncStrategy + Send>);
 
 /// Undo the power-of-two shift and apply data-parallel averaging —
 /// bit-identical to the pre-trait `aps::synchronize` epilogue (f64

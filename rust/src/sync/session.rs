@@ -36,6 +36,7 @@ use super::{ErrorFeedback, Factors, GradView, LayerCtx, StrategySpec, SyncStrate
 use crate::aps::{BucketStats, LayerReport, SyncOptions, SyncReport};
 use crate::collectives::{Collective, ReduceOptions, ReduceStats, Topology};
 use crate::cpd::{FpFormat, Rounding};
+use crate::util::par;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -54,6 +55,7 @@ pub struct SyncSessionBuilder {
     error_feedback: bool,
     wire: WireMode,
     fold_threads: usize,
+    encode_threads: usize,
     transport: TransportSpec,
     bucket_bytes: usize,
     /// The spec behind `strategy`, kept when the strategy came from
@@ -84,6 +86,7 @@ impl SyncSessionBuilder {
             error_feedback: false,
             wire: WireMode::default(),
             fold_threads: 0,
+            encode_threads: 0,
             transport: TransportSpec::InProcess,
             bucket_bytes: 0,
             retained_spec: None,
@@ -187,8 +190,35 @@ impl SyncSessionBuilder {
     /// are bit-identical for every value (the split only regroups whole
     /// ring chunks / hierarchical groups onto threads; each element's fold
     /// chain is unchanged — pinned by `rust/tests/packed_parallel.rs`).
+    ///
+    /// The consumer-side half of the thread budget; the producer side is
+    /// [`Self::with_encode_threads`]. In config files the pair is spelled
+    /// `sync.threads = { fold, encode }` (the old flat `sync.fold_threads`
+    /// key is still parsed as an alias).
     pub fn with_fold_threads(mut self, k: usize) -> Self {
         self.fold_threads = k;
+        self
+    }
+
+    /// Cap the per-worker encode fan-out thread count — the producer-side
+    /// mirror of [`Self::with_fold_threads`]. `0` (default) sizes the
+    /// fan-out automatically per layer (single-threaded below the
+    /// reduction-scan threshold), `1` forces the classic serial encode
+    /// loop byte-for-byte (no twin pool is built at all), and `k > 1`
+    /// forces a `k`-way split over workers even on small layers.
+    ///
+    /// Parallel encoding routes every worker's encode→
+    /// [`SyncStrategy::encode_packed`] chain through that worker's
+    /// dedicated *encode twin* (see [`SyncStrategy::parallel_encoder`]) —
+    /// the whole chain stays on one thread and worker `w` maps to twin
+    /// `w` forever, so stateful codecs (error-feedback residuals, QSGD
+    /// draws) evolve exactly as in the serial loop and results are
+    /// bit-identical at every thread count (pinned by
+    /// `rust/tests/encode_parallel.rs`). Strategies that return `None`
+    /// from [`SyncStrategy::parallel_encoder`] (third-party codecs that
+    /// have not opted in) keep the serial loop regardless of this knob.
+    pub fn with_encode_threads(mut self, k: usize) -> Self {
+        self.encode_threads = k;
         self
     }
 
@@ -256,6 +286,7 @@ impl SyncSessionBuilder {
             }),
             _ => None,
         };
+        let encode = build_encode_pool(strategy.as_ref(), world, self.encode_threads);
         SyncSession {
             strategy,
             collective,
@@ -270,6 +301,8 @@ impl SyncSessionBuilder {
             stage: Vec::new(),
             packed: Vec::new(),
             pack_scratch: PackScratch { max_threads: self.fold_threads, ..PackScratch::default() },
+            encode,
+            encode_threads: self.encode_threads,
             moved: None,
             reduced: Vec::new(),
             report: SyncReport::default(),
@@ -313,6 +346,14 @@ pub struct SyncSession {
     packed: Vec<PackedWire>,
     /// Unpack scratch the collectives borrow during packed reductions.
     pack_scratch: PackScratch,
+    /// The per-worker encode-twin lanes ([`SyncSessionBuilder::with_encode_threads`]);
+    /// `None` keeps the classic serial encode loop (explicit
+    /// `encode_threads == 1`, world 1, or a strategy that does not opt
+    /// into [`SyncStrategy::parallel_encoder`]).
+    encode: Option<EncodePool>,
+    /// The builder's encode-thread knob, kept so [`Self::set_strategy`]
+    /// can rebuild the pool for the replacement codec.
+    encode_threads: usize,
     /// Measured packed traffic of the last step (None in simulated mode).
     moved: Option<WireCost>,
     /// Per-layer reduced gradients (the step output).
@@ -420,6 +461,184 @@ struct EncodeAccum {
     bytes: u64,
 }
 
+/// One worker's private encode pipeline: its encode twin (state-
+/// equivalent to the session strategy, see
+/// [`SyncStrategy::parallel_encoder`]) plus a session-owned stage buffer
+/// and the per-layer accounting the merge reads back. Worker `w` owns
+/// lane `w` for the session's lifetime, so stateful codecs (error-
+/// feedback residuals, QSGD's encode→pack coupling) see exactly the
+/// per-worker call history the serial loop would give them.
+struct EncodeLane {
+    twin: Box<dyn SyncStrategy + Send>,
+    /// This lane's dense f32 staging buffer (the packed path's analogue
+    /// of the session's shared `stage`; grows to the largest layer once).
+    stage: Vec<f32>,
+    /// Honest wire cost of the last layer this lane encoded.
+    cost: WireCost,
+    /// Measured packed traffic of the last layer (zero in simulated mode).
+    moved: WireCost,
+    nonzero_in: usize,
+    zero_out: usize,
+    inf_out: usize,
+}
+
+impl EncodeLane {
+    fn new(twin: Box<dyn SyncStrategy + Send>) -> Self {
+        EncodeLane {
+            twin,
+            stage: Vec::new(),
+            cost: WireCost::default(),
+            moved: WireCost::default(),
+            nonzero_in: 0,
+            zero_out: 0,
+            inf_out: 0,
+        }
+    }
+}
+
+/// The parallel-encode fan-out: one [`EncodeLane`] per worker, split
+/// over threads with [`par::par_chunks_mut_pair`] so each lane is paired
+/// with that worker's output buffer (packed bytes or dense wire). The
+/// thread count only regroups whole lanes onto threads — every worker's
+/// encode→pack chain runs start-to-finish on one thread with its own
+/// twin and stage, so outputs are bit-identical at any thread count
+/// (`rust/tests/encode_parallel.rs` pins 0/1/2/4/8 against the serial
+/// loop).
+struct EncodePool {
+    lanes: Vec<EncodeLane>,
+    /// The builder knob: 0 = auto (per-layer, gated like the prepare
+    /// scans), explicit k honored exactly.
+    threads: usize,
+}
+
+/// Per-layer totals merged from the lanes in ascending worker order —
+/// integer sums and [`WireCost`] addition are order-independent, but the
+/// fixed order makes the merge trivially the serial loop's.
+#[derive(Default)]
+struct EncodeTotals {
+    wire_cost: WireCost,
+    moved: WireCost,
+    /// Σ over workers of that worker's packed `total_bytes()` — the
+    /// per-worker rounding the bucket path claims to its transport.
+    claimed_octets: u64,
+    nonzero_in: usize,
+    zero_out: usize,
+    inf_out: usize,
+}
+
+impl EncodePool {
+    /// Thread budget for one layer of `n` elements: the explicit knob if
+    /// set, else the same auto gate as the prepare-phase reduction scans
+    /// ([`par::reduce_threads`]) — encode does real per-element work, so
+    /// the scan threshold is the right floor for spawn bookkeeping too.
+    fn layer_threads(&self, n: usize) -> usize {
+        if self.threads != 0 {
+            self.threads
+        } else {
+            par::reduce_threads(n)
+        }
+    }
+
+    /// Fan one layer's per-worker encode→pack chains over the lanes
+    /// (packed wire). `ctx.worker` is ignored on entry; each lane sets
+    /// its own.
+    fn encode_layer_packed(&mut self, view: &GradView, ctx: &LayerCtx, packed: &mut [PackedWire]) {
+        let threads = self.layer_threads(view.layer_len(ctx.layer));
+        let base_ctx = *ctx;
+        par::par_chunks_mut_pair(&mut self.lanes, packed, 1, threads, |start, lanes, packs| {
+            for (i, (lane, pw)) in lanes.iter_mut().zip(packs.iter_mut()).enumerate() {
+                let mut ctx = base_ctx;
+                ctx.worker = start + i;
+                let src = view.layer_of(ctx.worker, ctx.layer);
+                // apslint: allow(alloc_in_hot_path) -- grows only when the model gains layers; steady state reuses the lane stages, pinned by rust/tests/session_alloc.rs
+                lane.stage.resize(src.len(), 0.0);
+                lane.twin.encode(src, &ctx, &mut lane.stage);
+                lane.cost = lane.twin.wire_cost(&lane.stage, &ctx);
+                count_quantization(src, &lane.stage, lane);
+                lane.twin.encode_packed(&lane.stage, &ctx, pw);
+                lane.moved = pw.moved_cost();
+            }
+        });
+    }
+
+    /// [`Self::encode_layer_packed`] for the simulated wire: each lane
+    /// encodes straight into its worker's dense wire buffer (no pack
+    /// step, no measured traffic).
+    fn encode_layer_dense(&mut self, view: &GradView, ctx: &LayerCtx, wire: &mut [Vec<f32>]) {
+        let threads = self.layer_threads(view.layer_len(ctx.layer));
+        let base_ctx = *ctx;
+        par::par_chunks_mut_pair(&mut self.lanes, wire, 1, threads, |start, lanes, bufs| {
+            for (i, (lane, buf)) in lanes.iter_mut().zip(bufs.iter_mut()).enumerate() {
+                let mut ctx = base_ctx;
+                ctx.worker = start + i;
+                let src = view.layer_of(ctx.worker, ctx.layer);
+                // apslint: allow(alloc_in_hot_path) -- grows only when the model gains layers; steady state reuses the wire buffers, pinned by rust/tests/session_alloc.rs
+                buf.resize(src.len(), 0.0);
+                lane.twin.encode(src, &ctx, buf);
+                lane.cost = lane.twin.wire_cost(buf, &ctx);
+                count_quantization(src, buf, lane);
+                lane.moved = WireCost::default();
+            }
+        });
+    }
+
+    /// Merge the lanes' per-worker accounting for the layer just encoded.
+    fn totals(&self) -> EncodeTotals {
+        let mut t = EncodeTotals::default();
+        for lane in &self.lanes {
+            t.wire_cost += lane.cost;
+            t.moved += lane.moved;
+            t.claimed_octets += lane.moved.total_bytes();
+            t.nonzero_in += lane.nonzero_in;
+            t.zero_out += lane.zero_out;
+            t.inf_out += lane.inf_out;
+        }
+        t
+    }
+}
+
+/// The underflow/overflow census of the serial encode loop, verbatim:
+/// one extra read pass comparing the raw gradient against its wire image.
+fn count_quantization(src: &[f32], quantized: &[f32], lane: &mut EncodeLane) {
+    lane.nonzero_in = 0;
+    lane.zero_out = 0;
+    lane.inf_out = 0;
+    for (&x, &q) in src.iter().zip(quantized.iter()) {
+        if x != 0.0 {
+            lane.nonzero_in += 1;
+            if q == 0.0 {
+                lane.zero_out += 1;
+            }
+        }
+        if q.is_infinite() {
+            lane.inf_out += 1;
+        }
+    }
+}
+
+/// Build the per-worker encode-twin pool: one lane per worker, each
+/// owning a fresh state-equivalent twin from
+/// [`SyncStrategy::parallel_encoder`]. Returns `None` — and the session
+/// keeps the serial encode loop byte-for-byte — when the caller forced
+/// `encode_threads == 1`, when there is only one worker, or when the
+/// strategy does not opt in (third-party codecs stay serial by default).
+/// All-or-nothing: once a pool exists, *every* encode routes through the
+/// twins, so stateful codecs never see a mixed call history.
+fn build_encode_pool(
+    strategy: &dyn SyncStrategy,
+    world: usize,
+    encode_threads: usize,
+) -> Option<EncodePool> {
+    if encode_threads == 1 || world <= 1 {
+        return None;
+    }
+    let mut lanes = Vec::with_capacity(world);
+    for _ in 0..world {
+        lanes.push(EncodeLane::new(strategy.parallel_encoder()?));
+    }
+    Some(EncodePool { lanes, threads: encode_threads })
+}
+
 impl SyncSession {
     /// Synchronize one training step's gradients (`grads[w][l]` = worker
     /// `w`'s layer-`l` gradient). Returns the reduced per-layer gradients
@@ -438,6 +657,7 @@ impl SyncSession {
         self.report.exponent_bytes = 0;
         self.report.steps = 0;
         self.report.messages = if self.fused { 1 } else { num_layers };
+        self.report.encode_ns = 0;
         // Honest per-worker wire cost, summed over workers and layers here
         // and averaged into the report at the end of the step — and, on
         // the packed path, the independently measured packed traffic that
@@ -485,39 +705,63 @@ impl SyncSession {
             let mut nonzero_in = 0usize;
             let mut zero_out = 0usize;
             let mut inf_out = 0usize;
-            for w in 0..world {
-                ctx.worker = w;
-                let src = view.layer_of(w, l);
-                // Packed mode stages each worker's f32 wire values in one
-                // shared buffer: the only dense copy is transient, and the
-                // per-worker storage is the packed bytes.
-                let buf: &mut Vec<f32> =
-                    if packed_mode { &mut self.stage } else { &mut self.wire[w] };
-                buf.resize(n, 0.0);
-                self.strategy.encode(src, &ctx, buf);
-                // One extra read pass for sparse codecs (nnz counting);
-                // dense costs are O(1). Kept as a trait call so the
-                // session never assumes how a codec maps zeros.
-                wire_cost += self.strategy.wire_cost(buf, &ctx);
-                for (&x, &q) in src.iter().zip(buf.iter()) {
-                    if x != 0.0 {
-                        nonzero_in += 1;
-                        if q == 0.0 {
-                            zero_out += 1;
+            // apslint: allow(nondeterminism) -- wall-clock feeds SyncReport::encode_ns observability only; results are pinned bit-identical by rust/tests/encode_parallel.rs
+            let enc0 = Instant::now();
+            if let Some(pool) = self.encode.as_mut() {
+                // Parallel fan-out: each worker's encode→pack chain runs
+                // on its dedicated twin lane; the merge below reproduces
+                // the serial loop's accounting in worker order.
+                if packed_mode {
+                    pool.encode_layer_packed(&view, &ctx, &mut self.packed);
+                } else {
+                    pool.encode_layer_dense(&view, &ctx, &mut self.wire);
+                }
+                let t = pool.totals();
+                wire_cost += t.wire_cost;
+                moved += t.moved;
+                nonzero_in = t.nonzero_in;
+                zero_out = t.zero_out;
+                inf_out = t.inf_out;
+                // Leave ctx exactly as the serial loop does: the fold and
+                // decode below run with the last worker's ctx.
+                ctx.worker = world - 1;
+            } else {
+                for w in 0..world {
+                    ctx.worker = w;
+                    let src = view.layer_of(w, l);
+                    // Packed mode stages each worker's f32 wire values in
+                    // one shared buffer: the only dense copy is transient,
+                    // and the per-worker storage is the packed bytes.
+                    let buf: &mut Vec<f32> =
+                        if packed_mode { &mut self.stage } else { &mut self.wire[w] };
+                    buf.resize(n, 0.0);
+                    self.strategy.encode(src, &ctx, buf);
+                    // One extra read pass for sparse codecs (nnz counting);
+                    // dense costs are O(1). Kept as a trait call so the
+                    // session never assumes how a codec maps zeros.
+                    wire_cost += self.strategy.wire_cost(buf, &ctx);
+                    for (&x, &q) in src.iter().zip(buf.iter()) {
+                        if x != 0.0 {
+                            nonzero_in += 1;
+                            if q == 0.0 {
+                                zero_out += 1;
+                            }
+                        }
+                        if q.is_infinite() {
+                            inf_out += 1;
                         }
                     }
-                    if q.is_infinite() {
-                        inf_out += 1;
+                    if packed_mode {
+                        // Fused encode → pack: transcode this worker's
+                        // wire values into its packed buffer and count the
+                        // bytes that will actually move through the
+                        // reduction.
+                        self.strategy.encode_packed(&self.stage, &ctx, &mut self.packed[w]);
+                        moved += self.packed[w].moved_cost();
                     }
                 }
-                if packed_mode {
-                    // Fused encode → pack: transcode this worker's wire
-                    // values into its packed buffer and count the bytes
-                    // that will actually move through the reduction.
-                    self.strategy.encode_packed(&self.stage, &ctx, &mut self.packed[w]);
-                    moved += self.packed[w].moved_cost();
-                }
             }
+            self.report.encode_ns += enc0.elapsed().as_nanos() as u64;
 
             let ropts = ReduceOptions { fmt: layer_fmt, mode: self.rounding, kahan: self.kahan };
             let out = &mut self.reduced[l];
@@ -611,6 +855,7 @@ impl SyncSession {
         self.report.steps = 0;
         self.report.messages = if self.fused { 1 } else { num_layers };
         self.report.buckets.clear();
+        self.report.encode_ns = 0;
         let mut wire_cost = WireCost::default();
         let mut moved = WireCost::default();
         let mut claimed_octets = 0u64;
@@ -667,6 +912,7 @@ impl SyncSession {
             let t0 = Instant::now();
             encode_bucket_layers(
                 self.strategy.as_mut(),
+                self.encode.as_mut(),
                 &mut self.stage,
                 &view,
                 ov.plan.bucket(b),
@@ -681,12 +927,14 @@ impl SyncSession {
             wire_cost += acc.wire_cost;
             moved += acc.moved;
             claimed_octets += acc.claimed_octets;
+            let encode_ns = t0.elapsed().as_nanos() as u64;
+            self.report.encode_ns += encode_ns;
             self.report.buckets[b] = BucketStats {
                 bucket: b,
                 layers: ov.plan.bucket(b).len(),
                 elements: acc.elements,
                 bytes: acc.bytes,
-                encode_ns: t0.elapsed().as_nanos() as u64,
+                encode_ns,
                 transit_ns: 0,
                 fold_ns: 0,
                 wait_ns: 0,
@@ -769,6 +1017,7 @@ impl SyncSession {
             self.report.exponent_bytes = 0;
             self.report.steps = 0;
             self.report.messages = 0;
+            self.report.encode_ns = 0;
             self.report.wire = WireCost::default();
             self.moved = None;
             if poison {
@@ -888,6 +1137,7 @@ impl SyncSession {
             self.report.exponent_bytes = 0;
             self.report.steps = 0;
             self.report.messages = 0;
+            self.report.encode_ns = 0;
             self.report.wire = WireCost::default();
             self.moved = None;
             // step() counted the faulted step; a rolled-back step never
@@ -970,6 +1220,14 @@ impl SyncSession {
     /// afterwards — results are identical either way.
     pub fn set_strategy(&mut self, strategy: Box<dyn SyncStrategy>) {
         self.strategy = strategy;
+        // Fresh twins for the replacement codec (or back to the serial
+        // loop if it does not opt in) — stale lanes would replay the old
+        // codec's state.
+        self.encode = build_encode_pool(
+            self.strategy.as_ref(),
+            self.collective.world_size(),
+            self.encode_threads,
+        );
         self.overlap_cfg = None;
         self.overlap = None;
     }
@@ -1017,6 +1275,7 @@ impl SyncSession {
 #[allow(clippy::too_many_arguments)]
 fn encode_bucket_layers(
     strategy: &mut dyn SyncStrategy,
+    mut pool: Option<&mut EncodePool>,
     stage: &mut Vec<f32>,
     view: &GradView,
     layers: &[usize],
@@ -1051,28 +1310,43 @@ fn encode_bucket_layers(
         let mut nonzero_in = 0usize;
         let mut zero_out = 0usize;
         let mut inf_out = 0usize;
-        for w in 0..params.world {
-            ctx.worker = w;
-            let src = view.layer_of(w, l);
-            stage.resize(n, 0.0);
-            strategy.encode(src, &ctx, stage);
-            acc.wire_cost += strategy.wire_cost(stage, &ctx);
-            for (&x, &q) in src.iter().zip(stage.iter()) {
-                if x != 0.0 {
-                    nonzero_in += 1;
-                    if q == 0.0 {
-                        zero_out += 1;
+        if let Some(pool) = pool.as_deref_mut() {
+            // Same fan-out as the synchronous step: one twin lane per
+            // worker, merged in worker order.
+            pool.encode_layer_packed(view, &ctx, &mut packed);
+            let t = pool.totals();
+            acc.wire_cost += t.wire_cost;
+            acc.moved += t.moved;
+            acc.claimed_octets += t.claimed_octets;
+            acc.bytes += t.claimed_octets;
+            nonzero_in = t.nonzero_in;
+            zero_out = t.zero_out;
+            inf_out = t.inf_out;
+            ctx.worker = params.world - 1;
+        } else {
+            for w in 0..params.world {
+                ctx.worker = w;
+                let src = view.layer_of(w, l);
+                stage.resize(n, 0.0);
+                strategy.encode(src, &ctx, stage);
+                acc.wire_cost += strategy.wire_cost(stage, &ctx);
+                for (&x, &q) in src.iter().zip(stage.iter()) {
+                    if x != 0.0 {
+                        nonzero_in += 1;
+                        if q == 0.0 {
+                            zero_out += 1;
+                        }
+                    }
+                    if q.is_infinite() {
+                        inf_out += 1;
                     }
                 }
-                if q.is_infinite() {
-                    inf_out += 1;
-                }
+                strategy.encode_packed(stage, &ctx, &mut packed[w]);
+                let cost = packed[w].moved_cost();
+                acc.moved += cost;
+                acc.claimed_octets += cost.total_bytes();
+                acc.bytes += cost.total_bytes();
             }
-            strategy.encode_packed(stage, &ctx, &mut packed[w]);
-            let cost = packed[w].moved_cost();
-            acc.moved += cost;
-            acc.claimed_octets += cost.total_bytes();
-            acc.bytes += cost.total_bytes();
         }
         // ctx.worker is now world - 1, exactly the fold-time ctx step()
         // passes to the packed reduction and to decode.

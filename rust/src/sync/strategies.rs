@@ -16,6 +16,7 @@ use super::{unscale_in_place, Factors, GradView, LayerCtx, SyncStrategy, WireCos
 use crate::aps::local_max_exp;
 use crate::collectives::{Collective, ReduceStats};
 use crate::cpd::{quantize_shifted_slice_into, FpFormat};
+use crate::util::par;
 use core::ops::Range;
 
 /// Shared phase-2 encode of the four paper methods: shift by the agreed
@@ -71,6 +72,9 @@ impl SyncStrategy for Fp32Strategy {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
     }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(*self))
+    }
 }
 
 /// Cast to the low-precision wire format with no scaling (the paper's
@@ -113,6 +117,9 @@ impl SyncStrategy for NaiveStrategy {
     }
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
+    }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(*self))
     }
 }
 
@@ -166,6 +173,9 @@ impl SyncStrategy for LossScalingStrategy {
     }
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
+    }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(*self))
     }
 }
 
@@ -239,6 +249,9 @@ impl SyncStrategy for ApsStrategy {
     }
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
+    }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(*self))
     }
 }
 
@@ -415,24 +428,31 @@ impl SyncStrategy for TernaryStrategy {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
     }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(*self))
+    }
 }
 
 /// Top-k magnitude sparsification (Deep Gradient Compression-style).
 ///
 /// Each worker keeps its `frac` largest-magnitude elements per layer
-/// (at least one) at full FP32 precision and zeroes the rest; the dense
-/// sum then averages as usual. Dropped elements show up in the
-/// [`crate::aps::SyncReport`] as wire underflow — exactly what they are
-/// from the optimizer's point of view. Deterministic (threshold
-/// selection, no RNG), so sessions replay bit-identically. The simulated
-/// reduction runs over dense FP32 buffers; the `(index, value)` pairs a
-/// real deployment ships are accounted by [`SyncStrategy::wire_cost`]
-/// (32 value bits plus `⌈log2 n⌉` index bits per survivor).
+/// (at least one; magnitude ties break to the lowest index) at full FP32
+/// precision and zeroes the rest; the dense sum then averages as usual.
+/// Dropped elements show up in the [`crate::aps::SyncReport`] as wire
+/// underflow — exactly what they are from the optimizer's point of view.
+/// Deterministic (total-order selection, no RNG), so sessions replay
+/// bit-identically. The simulated reduction runs over dense FP32
+/// buffers; the `(index, value)` pairs a real deployment ships are
+/// accounted by [`SyncStrategy::wire_cost`] (32 value bits plus
+/// `⌈log2 n⌉` index bits per survivor).
 #[derive(Clone, Debug)]
 pub struct TopKStrategy {
     frac: f32,
-    /// |src| scratch for threshold selection (reused across steps).
-    scratch: Vec<f32>,
+    /// `(|value|, index)` pairs for survivor selection, reused across
+    /// steps. Selecting on pairs pins the survivor *set* directly, so
+    /// encode does one fill + one select + one k-element scatter instead
+    /// of fill + select + a full-layer threshold re-scan.
+    scratch: Vec<(f32, u32)>,
 }
 
 impl TopKStrategy {
@@ -450,11 +470,11 @@ impl SyncStrategy for TopKStrategy {
         FpFormat::FP32
     }
     fn encode(&mut self, src: &[f32], ctx: &LayerCtx, out: &mut [f32]) {
-        out.copy_from_slice(src);
         if ctx.fp32_passthrough {
             // fp32-last-layer policy: the protected layer stays dense
             // (top-k's wire is FP32 everywhere, so the explicit flag is
             // the only way to see the policy).
+            out.copy_from_slice(src);
             return;
         }
         let n = src.len();
@@ -463,17 +483,20 @@ impl SyncStrategy for TopKStrategy {
         }
         let k = ((self.frac as f64 * n as f64).ceil() as usize).clamp(1, n);
         if k == n {
+            out.copy_from_slice(src);
             return;
         }
+        // One fill + one select on (magnitude, index) pairs. The index
+        // tiebreak makes the comparator a total order with no equal
+        // elements, so the k survivors are a pure function of the input
+        // (not of selection internals) and replay stays bit-stable.
         self.scratch.clear();
-        self.scratch.extend(src.iter().map(|x| x.abs()));
-        // k-th largest magnitude as the keep threshold (ties all kept).
-        self.scratch.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
-        let thresh = self.scratch[k - 1];
-        for o in out.iter_mut() {
-            if o.abs() < thresh {
-                *o = 0.0;
-            }
+        self.scratch.extend(src.iter().enumerate().map(|(i, &x)| (x.abs(), i as u32)));
+        self.scratch
+            .select_nth_unstable_by(k - 1, |a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        out.fill(0.0);
+        for &(_, i) in &self.scratch[..k] {
+            out[i as usize] = src[i as usize];
         }
     }
     fn decode(&mut self, reduced: &mut [f32], ctx: &LayerCtx) {
@@ -553,6 +576,38 @@ impl SyncStrategy for TopKStrategy {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
     }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(TopKStrategy::new(self.frac)))
+    }
+}
+
+/// Fixed tree block for the QSGD bucket-norm scan: per-block finite
+/// maxima combined in ascending block order. Compile-time so the combine
+/// tree is a function of the data layout alone — never of the thread
+/// count or the configured bucket size.
+const QSGD_NORM_BLOCK: usize = 1024;
+
+/// Leaf of the bucket-norm tree: max `|x|` over the block's *finite*
+/// entries (non-finite values carry no representable magnitude).
+fn finite_block_max(blk: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in blk {
+        let a = x.abs();
+        if a.is_finite() && a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// Exact, associative max combine — no rounding, so the tree reduction
+/// equals the serial scan bit-for-bit at any thread count.
+fn exact_max(a: f32, b: f32) -> f32 {
+    if b > a {
+        b
+    } else {
+        a
+    }
 }
 
 /// QSGD-style bucketed stochastic quantization (Alistarh et al.).
@@ -628,14 +683,18 @@ impl SyncStrategy for QsgdStrategy {
             src.chunks(self.bucket).zip(out.chunks_mut(self.bucket)).enumerate()
         {
             let base = b * self.bucket;
-            // Bucket scale: max magnitude over the *finite* entries.
-            let mut max_abs = 0.0f32;
-            for &x in seg {
-                let a = x.abs();
-                if a.is_finite() && a > max_abs {
-                    max_abs = a;
-                }
-            }
+            // Bucket scale: max magnitude over the *finite* entries, as
+            // a fixed-block tree reduction (threads engage only on huge
+            // buckets; either way the result is the serial scan's,
+            // bit-for-bit, because exact max is associative).
+            let max_abs = par::par_block_reduce(
+                seg,
+                QSGD_NORM_BLOCK,
+                par::reduce_threads(seg.len()),
+                finite_block_max,
+                exact_max,
+            )
+            .unwrap_or(0.0);
             self.pack_scales.push(max_abs);
             if max_abs == 0.0 {
                 // Nothing representable: ship zeros, propagate divergence.
@@ -758,6 +817,9 @@ impl SyncStrategy for QsgdStrategy {
     fn parallel_decoder(&self) -> Option<&(dyn SyncStrategy + Sync)> {
         Some(self)
     }
+    fn parallel_encoder(&self) -> Option<Box<dyn SyncStrategy + Send>> {
+        Some(Box::new(QsgdStrategy::new(self.bits, self.bucket, self.seed)))
+    }
 }
 
 #[cfg(test)]
@@ -869,6 +931,45 @@ mod tests {
         t.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
         assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 1);
         assert_eq!(out[2], 3.0);
+    }
+
+    #[test]
+    fn topk_breaks_magnitude_ties_to_the_lowest_index() {
+        // Four elements, k = 2, with a three-way magnitude tie: the
+        // index tiebreak keeps exactly k survivors — the lowest-indexed
+        // ties — as a pure function of the input.
+        let mut t = TopKStrategy::new(0.5);
+        let src = vec![1.0f32, -1.0, 1.0, 0.5];
+        let mut out = vec![9.0f32; 4];
+        t.encode(&src, &ctx(FpFormat::FP32, 0, 2), &mut out);
+        assert_eq!(out, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn qsgd_norm_tree_matches_serial_scan() {
+        // The fixed-block tree over a nasty bucket (non-finites, exact
+        // ties, subnormals) must reproduce the serial finite-max scan.
+        let seg: Vec<f32> = (0..5000)
+            .map(|i| match i % 7 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => -1e-40,
+                _ => ((i * 37) % 101) as f32 * 0.125 - 6.0,
+            })
+            .collect();
+        let mut serial = 0.0f32;
+        for &x in &seg {
+            let a = x.abs();
+            if a.is_finite() && a > serial {
+                serial = a;
+            }
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let tree =
+                par::par_block_reduce(&seg, QSGD_NORM_BLOCK, threads, finite_block_max, exact_max)
+                    .unwrap();
+            assert_eq!(tree.to_bits(), serial.to_bits(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -13,6 +13,26 @@ pub fn num_threads() -> usize {
 /// Minimum elements per thread before parallelism is worth spawning.
 pub const PAR_THRESHOLD: usize = 16 * 1024;
 
+/// Minimum elements before an intra-layer *reduction scan* (max-abs,
+/// bucket norms) is worth spawning threads for. Deliberately higher than
+/// [`PAR_THRESHOLD`]: a scan does one read per element (the fold kernels
+/// do several), and the prepare phase runs once per worker × layer per
+/// step, so spawn bookkeeping would dominate on mid-sized layers.
+pub const REDUCE_PAR_THRESHOLD: usize = 64 * 1024;
+
+/// Thread budget for a reduction scan over `n` elements: the host's
+/// [`num_threads`] once `n` clears [`REDUCE_PAR_THRESHOLD`], else 1.
+/// Only *where* blocks run depends on this — [`par_block_reduce`]'s
+/// combine tree is fixed by the block size alone, so the result never
+/// does.
+pub fn reduce_threads(n: usize) -> usize {
+    if n >= REDUCE_PAR_THRESHOLD {
+        num_threads()
+    } else {
+        1
+    }
+}
+
 /// Run `f(chunk_start_index, chunk)` over disjoint chunks of `data` in
 /// parallel. Falls back to a single call when the slice is small.
 ///
@@ -119,6 +139,120 @@ pub fn par_chunks_mut_with_scratch<T: Send, S: Send, F>(
     });
 }
 
+/// Split two equal-length slices with one schedule and run
+/// `f(start, a_chunk, b_chunk)` over the paired chunks in parallel. The
+/// split arithmetic is exactly [`par_chunks_mut_with`]'s, so the
+/// schedule-obliviousness contract is the same; the pairing exists for
+/// lane-style fan-outs where each index owns state in two parallel
+/// arrays (e.g. a per-worker encode twin and that worker's wire buffer).
+pub fn par_chunks_mut_pair<A: Send, B: Send, F>(
+    a: &mut [A],
+    b: &mut [B],
+    min_chunk: usize,
+    max_threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "par_chunks_mut_pair: slice lengths differ");
+    let n = a.len();
+    if n == 0 {
+        return;
+    }
+    let threads = max_threads.min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut start = 0usize;
+        for _ in 0..threads {
+            if rest_a.is_empty() {
+                break;
+            }
+            let take = chunk.min(rest_a.len());
+            let (head_a, tail_a) = rest_a.split_at_mut(take);
+            let (head_b, tail_b) = rest_b.split_at_mut(take);
+            let fref = &f;
+            s.spawn(move || fref(start, head_a, head_b));
+            start += take;
+            rest_a = tail_a;
+            rest_b = tail_b;
+        }
+    });
+}
+
+/// Upper bound on threads a block reduction will spawn. Bounds the
+/// stack-allocated partials array so the reduction never heap-allocates.
+const MAX_REDUCE_FANOUT: usize = 32;
+
+/// Fixed-block tree reduction over a shared slice: `leaf` maps each
+/// `block`-sized block (the last may be short) to a partial, and
+/// `combine` folds the partials in ascending block order. Threads take
+/// contiguous runs of *whole* blocks, so block boundaries — and hence
+/// every `leaf` call — are a function of `block` alone, never of the
+/// thread count. For an associative `combine` the result is therefore
+/// identical at every `max_threads`, including 1; callers must pass an
+/// associative combine (exact max/min/bit-or — not float addition).
+/// Returns `None` only for an empty slice. Never allocates.
+pub fn par_block_reduce<T, R, L, C>(
+    xs: &[T],
+    block: usize,
+    max_threads: usize,
+    leaf: L,
+    combine: C,
+) -> Option<R>
+where
+    T: Sync,
+    R: Send,
+    L: Fn(&[T]) -> R + Sync,
+    C: Fn(R, R) -> R + Sync,
+{
+    assert!(block > 0, "par_block_reduce: block size must be positive");
+    let nblocks = xs.len().div_ceil(block);
+    if nblocks == 0 {
+        return None;
+    }
+    let threads = max_threads.min(MAX_REDUCE_FANOUT).min(nblocks).max(1);
+    if threads == 1 {
+        let mut it = xs.chunks(block).map(&leaf);
+        let first = it.next()?;
+        return Some(it.fold(first, &combine));
+    }
+    let run_len = nblocks.div_ceil(threads) * block;
+    let mut partials: [Option<R>; MAX_REDUCE_FANOUT] = core::array::from_fn(|_| None);
+    std::thread::scope(|s| {
+        let mut rest = xs;
+        for slot in partials.iter_mut().take(threads) {
+            if rest.is_empty() {
+                break;
+            }
+            let take = run_len.min(rest.len());
+            let (head, tail) = rest.split_at(take);
+            let leaf = &leaf;
+            let combine = &combine;
+            s.spawn(move || {
+                let mut it = head.chunks(block).map(leaf);
+                let first = it.next().expect("runs hold at least one block");
+                *slot = Some(it.fold(first, combine));
+            });
+            rest = tail;
+        }
+    });
+    let mut acc: Option<R> = None;
+    for slot in partials.into_iter().take(threads) {
+        acc = match (acc, slot) {
+            (Some(a), Some(b)) => Some(combine(a, b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+    }
+    acc
+}
+
 /// Parallel map over an index range, collecting results in order.
 pub fn par_map<T: Send, F>(count: usize, f: F) -> Vec<T>
 where
@@ -207,6 +341,76 @@ mod tests {
             slots_seen.dedup();
             assert_eq!(slots_seen.len(), with_scratch.len(), "n={n}: scratch slot reused");
         }
+    }
+
+    #[test]
+    fn pair_variant_matches_plain_split() {
+        // Same (n, min_chunk, max_threads) → the paired variant sees
+        // exactly the chunks the plain variant sees, on both slices.
+        for &(n, min_chunk, max_threads) in
+            &[(100_000usize, 1024usize, 8usize), (10, 1024, 8), (7, 1, 3), (8, 1, 3), (0, 4, 4)]
+        {
+            let mut plain: Vec<(usize, usize)> = Vec::new();
+            let mut v = vec![0u8; n];
+            {
+                let log = std::sync::Mutex::new(&mut plain);
+                par_chunks_mut_with(&mut v, min_chunk, max_threads, |start, c| {
+                    log.lock().unwrap().push((start, c.len()));
+                });
+            }
+            let mut paired: Vec<(usize, usize, usize)> = Vec::new();
+            let mut a = vec![0u8; n];
+            let mut b = vec![0u16; n];
+            {
+                let log = std::sync::Mutex::new(&mut paired);
+                par_chunks_mut_pair(&mut a, &mut b, min_chunk, max_threads, |start, ca, cb| {
+                    log.lock().unwrap().push((start, ca.len(), cb.len()));
+                });
+            }
+            plain.sort_unstable();
+            paired.sort_unstable();
+            assert_eq!(plain.len(), paired.len(), "n={n}");
+            for (p, q) in plain.iter().zip(&paired) {
+                assert_eq!((p.0, p.1), (q.0, q.1), "n={n}");
+                assert_eq!(q.1, q.2, "n={n}: paired chunks misaligned");
+            }
+        }
+    }
+
+    #[test]
+    fn block_reduce_matches_serial_fold_for_every_thread_count() {
+        // Exact max is associative, so every thread count must reproduce
+        // the single-threaded fold bit-for-bit — including short tails
+        // and blocks that don't divide the length.
+        let xs: Vec<f32> = (0..200_001)
+            .map(|i| {
+                let v = ((i * 2_654_435_761u64 as usize) % 10_007) as f32 - 5_003.0;
+                v * 1e-3
+            })
+            .collect();
+        let leaf = |blk: &[f32]| {
+            let mut m = 0.0f32;
+            for &x in blk {
+                let a = x.abs();
+                if a > m {
+                    m = a;
+                }
+            }
+            m
+        };
+        let combine = |a: f32, b: f32| if b > a { b } else { a };
+        for &block in &[1usize, 7, 4096, 1 << 20] {
+            let serial = par_block_reduce(&xs, block, 1, leaf, combine).unwrap();
+            for &threads in &[2usize, 3, 8, 64] {
+                let par = par_block_reduce(&xs, block, threads, leaf, combine).unwrap();
+                assert_eq!(
+                    par.to_bits(),
+                    serial.to_bits(),
+                    "block={block} threads={threads}: tree result diverged"
+                );
+            }
+        }
+        assert!(par_block_reduce(&[] as &[f32], 4096, 8, leaf, combine).is_none());
     }
 
     #[test]

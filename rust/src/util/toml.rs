@@ -1,10 +1,10 @@
 //! The TOML subset used by `configs/*.toml`.
 //!
 //! Supports: `[section]` headers, `key = value` with string / integer /
-//! float / boolean / array-of-scalar values, `#` comments, and blank
-//! lines. (No nested tables, dotted keys, or multi-line strings — the
-//! experiment configs don't need them, and unknown syntax errors out
-//! loudly rather than being silently misread.)
+//! float / boolean / array-of-scalar / inline-table-of-scalar values,
+//! `#` comments, and blank lines. (No nested tables, dotted keys, or
+//! multi-line strings — the experiment configs don't need them, and
+//! unknown syntax errors out loudly rather than being silently misread.)
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -17,6 +17,8 @@ pub enum TomlValue {
     Float(f64),
     Bool(bool),
     Arr(Vec<TomlValue>),
+    /// Inline table of scalars, e.g. `threads = { fold = 4, encode = 2 }`.
+    Table(BTreeMap<String, TomlValue>),
 }
 
 impl TomlValue {
@@ -53,6 +55,12 @@ impl TomlValue {
         match self {
             TomlValue::Bool(b) => Ok(*b),
             _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+    pub fn as_table(&self) -> Result<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Ok(t),
+            _ => bail!("expected inline table, got {self:?}"),
         }
     }
 }
@@ -166,6 +174,26 @@ fn parse_value(s: &str) -> Result<TomlValue> {
             .collect::<Result<Vec<_>>>()?;
         return Ok(TomlValue::Arr(items));
     }
+    if let Some(rest) = s.strip_prefix('{') {
+        let inner = rest
+            .strip_suffix('}')
+            .ok_or_else(|| anyhow!("unterminated inline table {s:?}"))?
+            .trim();
+        let mut table = BTreeMap::new();
+        if !inner.is_empty() {
+            for pair in inner.split(',') {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("expected key = value in inline table {s:?}"))?;
+                let key = k.trim();
+                if key.is_empty() {
+                    bail!("empty key in inline table {s:?}");
+                }
+                table.insert(key.to_string(), parse_value(v.trim())?);
+            }
+        }
+        return Ok(TomlValue::Table(table));
+    }
     let cleaned = s.replace('_', "");
     if let Ok(i) = cleaned.parse::<i64>() {
         return Ok(TomlValue::Int(i));
@@ -235,5 +263,22 @@ big = 1_000_000
     fn negative_usize_rejected() {
         let d = TomlDoc::parse("k = -3").unwrap();
         assert!(d.get("", "k").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn inline_table_of_scalars() {
+        let d = TomlDoc::parse("threads = { fold = 4, encode = 2 }").unwrap();
+        let t = d.get("", "threads").unwrap().as_table().unwrap();
+        assert_eq!(t.get("fold").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(t.get("encode").unwrap().as_usize().unwrap(), 2);
+        let d = TomlDoc::parse("empty = {}").unwrap();
+        assert!(d.get("", "empty").unwrap().as_table().unwrap().is_empty());
+        // Scalars reject as_table and vice versa.
+        assert!(TomlDoc::parse("k = 1").unwrap().get("", "k").unwrap().as_table().is_err());
+        assert!(d.get("", "empty").unwrap().as_usize().is_err());
+        // Malformed tables error loudly.
+        assert!(TomlDoc::parse("k = { fold = 4").is_err());
+        assert!(TomlDoc::parse("k = { fold }").is_err());
+        assert!(TomlDoc::parse("k = { = 4 }").is_err());
     }
 }

@@ -298,6 +298,52 @@ fn transport_setup_is_cold() {
     );
 }
 
+// ---- parallel-encode hot set ------------------------------------------
+//
+// The parallel-encode PR widened the hot set again: the twin-lane pool's
+// per-layer fan-out entry points (`encode_layer_packed`,
+// `encode_layer_dense` in sync/session.rs) run once per layer per step.
+// Pin that the default config covers them for the alloc rule, that the
+// `encode` nd-prefix auto-scopes them for nondeterminism, and that pool
+// construction (build()/set_strategy() time) stays cold.
+
+#[test]
+fn repo_default_covers_parallel_encode_entry_points() {
+    for name in ["encode_layer_packed", "encode_layer_dense"] {
+        let src = format!("fn {name}() {{ let v: Vec<u8> = Vec::new(); drop(v); }}\n");
+        assert_eq!(
+            fatal_rules("rust/src/sync/session.rs", &src, &Config::repo_default()),
+            ["alloc_in_hot_path"],
+            "{name} must be in the repo-default hot set"
+        );
+    }
+}
+
+#[test]
+fn parallel_encode_entry_points_are_nd_scoped() {
+    // `encode_*` under sync/ is already nondeterminism scope, so a
+    // thread-count dependency inside the fan-out fires without any
+    // hot-set listing.
+    let src = "fn encode_layer_packed(n: usize) -> usize { crate::util::par::num_threads().min(n) }\n";
+    assert_eq!(
+        fatal_rules("rust/src/sync/session.rs", src, &Config::repo_default()),
+        ["nondeterminism"],
+        "encode_layer_packed must be nondeterminism-scoped via the encode prefix"
+    );
+}
+
+#[test]
+fn encode_pool_construction_is_cold() {
+    // Building the twin pool allocates by design (one lane per worker);
+    // it runs at build()/set_strategy() time, never per step.
+    let src =
+        "fn build_encode_pool(world: usize) { let v: Vec<u8> = Vec::with_capacity(world); drop(v); }\n";
+    assert!(
+        fatal_rules("rust/src/sync/session.rs", src, &Config::repo_default()).is_empty(),
+        "pool construction must stay out of the hot set"
+    );
+}
+
 // ---- waiver syntax ----------------------------------------------------
 
 #[test]

@@ -1,0 +1,355 @@
+//! The parallel-encode suite: the producer-side mirror of
+//! `packed_parallel.rs` — encode parallelism may repartition which
+//! thread runs a worker's encode→pack chain, never the arithmetic.
+//!
+//! * **schedule independence** — for every conformance codec (the same
+//!   11 the codec contract covers), sessions fanning the per-worker
+//!   encode out over 2/4/8 encode threads (and the auto setting)
+//!   produce bit-identical reduced gradients, `SyncReport`s and measured
+//!   wire traffic to the serial encode loop (`with_encode_threads(1)`,
+//!   which builds no twin pool at all) and the simulated-wire baseline,
+//!   on hostile `nasty_f32` inputs, across ring, hierarchical and
+//!   parameter-server collectives. Explicit `with_encode_threads(k > 1)`
+//!   forces a k-way split even on layers below the auto threshold, so
+//!   the permutation coverage is real on every layer shape here,
+//!   including the 9-element tail. Stateful codecs are the hard cases
+//!   pinned: error-feedback twins accumulate per-worker residuals across
+//!   both steps, and QSGD's encode→`encode_packed` coupling stays on one
+//!   lane.
+//! * **opt-in closure** — every built-in strategy (and its
+//!   error-feedback wrapper) returns an encode twin from
+//!   `parallel_encoder`, so the session's parallel path actually covers
+//!   the whole family; the trait default (`None`, third-party codecs
+//!   stay serial) is also pinned.
+//! * **tree-reduction prepare** — `aps::local_max_exp` is now a
+//!   fixed-block tree reduction; a property test pins it to the plain
+//!   serial max-abs scan at sizes straddling the reduction threshold
+//!   (the combine tree is fixed by the block size, never the host's
+//!   thread count), and a large-layer session sweep pins the whole
+//!   prepare→encode→fold pipeline above the threshold end to end.
+//!
+//! The `nondeterminism`/`alloc_in_hot_path` waivers on the encode-pool
+//! entry points in `sync/session.rs` cite this suite as their evidence.
+
+use aps_cpd::aps::local_max_exp;
+use aps_cpd::collectives::Topology;
+use aps_cpd::cpd::FpFormat;
+use aps_cpd::data::Rng;
+use aps_cpd::sync::{StrategySpec, SyncSessionBuilder, SyncStrategy, WireMode};
+use aps_cpd::util::ptest::generators;
+
+fn ef(inner: StrategySpec) -> StrategySpec {
+    StrategySpec::ErrorFeedback { inner: Box::new(inner) }
+}
+
+/// The same 11-codec family the conformance contract pins.
+fn specs() -> Vec<(&'static str, StrategySpec)> {
+    vec![
+        ("fp32", StrategySpec::Fp32),
+        ("naive/e5m2", StrategySpec::Naive { fmt: FpFormat::E5M2 }),
+        (
+            "loss_scaling/e5m2",
+            StrategySpec::LossScaling { fmt: FpFormat::E5M2, factor_exp: 4 },
+        ),
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("aps/e4m3", StrategySpec::Aps { fmt: FpFormat::E4M3 }),
+        ("ternary", StrategySpec::Ternary { seed: 9 }),
+        ("topk@0.25", StrategySpec::TopK { frac: 0.25 }),
+        ("qsgd b4/32", StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 }),
+        ("ef:ternary", ef(StrategySpec::Ternary { seed: 9 })),
+        ("ef:topk", ef(StrategySpec::TopK { frac: 0.25 })),
+        ("ef:qsgd", ef(StrategySpec::Qsgd { bits: 4, bucket: 32, seed: 9 })),
+    ]
+}
+
+/// Hostile per-worker gradients from the shared `nasty_f32` stream.
+fn nasty_grads(rng: &mut Rng, world: usize, layers: &[usize]) -> Vec<Vec<Vec<f32>>> {
+    (0..world)
+        .map(|_| {
+            layers
+                .iter()
+                .map(|&n| (0..n).map(|_| generators::nasty_f32(rng)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// One (world, topology) cell of the encode-schedule matrix: run the
+/// serial-encode packed session, the serial-encode simulated session,
+/// one packed session per encode-thread setting, and one parallel
+/// simulated session, all in lockstep over two steps, asserting every
+/// step's reduced gradients, reports and measured traffic agree
+/// bit-for-bit. Two steps matter: error-feedback residuals in the twin
+/// lanes must match the serial wrapper's per-worker slots *after* they
+/// have accumulated history.
+fn check_encode_cell(label: &str, spec: &StrategySpec, world: usize, topo: Topology) {
+    // One layer above typical chunk sizes plus small and odd tails, so
+    // forced splits exercise uneven lane chunks at every world size.
+    let layers = [33usize, 4096, 9];
+    let mut rng = Rng::new(0xE4C0DE ^ world as u64 ^ label.len() as u64);
+    let build = |encode_threads: usize, wire: WireMode| {
+        SyncSessionBuilder::new(world)
+            .spec(spec.clone())
+            .with_topology(topo)
+            .with_encode_threads(encode_threads)
+            .with_wire(wire)
+            .build()
+    };
+    // The reference: the classic serial encode loop (no twin pool).
+    let mut base = build(1, WireMode::Packed);
+    let mut sim = build(1, WireMode::Simulated);
+    // 0 = auto sizing; 2/4/8 = forced lane splits (distinct schedules
+    // even on the 9-element layer and at world 1, where the pool is
+    // skipped entirely).
+    let encode_threads = [0usize, 2, 4, 8];
+    let mut par: Vec<_> =
+        encode_threads.iter().map(|&k| build(k, WireMode::Packed)).collect();
+    let mut par_sim = build(4, WireMode::Simulated);
+    for step in 0..2 {
+        let grads = nasty_grads(&mut rng, world, &layers);
+        let (bo, br) = base.step(&grads);
+        let bo = bo.to_vec();
+        let br = br.clone();
+        let bm = base.wire_moved();
+        let (so, sr) = sim.step(&grads);
+        for (l, (a, b)) in bo.iter().zip(so.iter()).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                     packed(serial encode) {x:e} vs simulated {y:e}"
+                );
+            }
+        }
+        assert_eq!(&br, sr, "{label}/{topo:?} w{world} step {step}: packed vs simulated report");
+        for (session, &k) in par.iter_mut().zip(encode_threads.iter()) {
+            let (po, pr) = session.step(&grads);
+            let po = po.to_vec();
+            let pr = pr.clone();
+            for (l, (a, b)) in po.iter().zip(bo.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                         {k} encode threads {x:e} vs serial encode {y:e}"
+                    );
+                }
+            }
+            assert_eq!(
+                pr, br,
+                "{label}/{topo:?} w{world} step {step}: report diverged at {k} encode threads"
+            );
+            assert_eq!(
+                session.wire_moved(),
+                bm,
+                "{label}/{topo:?} w{world} step {step}: moved traffic diverged at {k} \
+                 encode threads"
+            );
+        }
+        // The dense-wire fan-out (`encode_layer_dense`) against the
+        // serial simulated session.
+        let (qo, qr) = par_sim.step(&grads);
+        for (l, (a, b)) in qo.iter().zip(bo.iter()).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{label}/{topo:?} w{world} step {step} layer {l} elem {i}: \
+                     simulated 4-thread encode {x:e} vs serial {y:e}"
+                );
+            }
+        }
+        assert_eq!(
+            qr, &br,
+            "{label}/{topo:?} w{world} step {step}: simulated parallel-encode report diverged"
+        );
+        assert_eq!(
+            par_sim.wire_moved(),
+            None,
+            "{label}/{topo:?} w{world}: simulated sessions measure no packed traffic"
+        );
+    }
+}
+
+#[test]
+fn parallel_encode_is_schedule_independent_on_the_ring() {
+    for (label, spec) in &specs() {
+        for world in [1usize, 2, 4, 8] {
+            check_encode_cell(label, spec, world, Topology::Ring);
+        }
+    }
+}
+
+#[test]
+fn parallel_encode_is_schedule_independent_hierarchically() {
+    for (label, spec) in &specs() {
+        for (world, group_size) in [(2usize, 2usize), (4, 2), (8, 4), (8, 2)] {
+            check_encode_cell(label, spec, world, Topology::Hierarchical { group_size });
+        }
+    }
+}
+
+#[test]
+fn parallel_encode_is_schedule_independent_through_the_parameter_server() {
+    for (label, spec) in &specs() {
+        for (world, shards) in [(4usize, 2usize), (8, 4)] {
+            check_encode_cell(label, spec, world, Topology::Ps { shards, staleness: 0 });
+        }
+    }
+}
+
+#[test]
+fn every_built_in_codec_returns_an_encode_twin() {
+    for (label, spec) in &specs() {
+        let strategy = spec.build();
+        let twin = strategy.parallel_encoder();
+        assert!(
+            twin.is_some(),
+            "{label}: built-in strategies must opt into the parallel encode fan-out"
+        );
+        let twin = twin.unwrap();
+        assert_eq!(
+            twin.name(),
+            strategy.name(),
+            "{label}: the twin must be the same codec, configured identically"
+        );
+        assert_eq!(
+            twin.wire_format(),
+            strategy.wire_format(),
+            "{label}: the twin must share the strategy's wire format"
+        );
+    }
+}
+
+#[test]
+fn third_party_codecs_stay_serial_by_default() {
+    /// A minimal custom codec that does not override `parallel_encoder`.
+    struct Identity;
+    impl SyncStrategy for Identity {
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+        fn wire_format(&self) -> FpFormat {
+            FpFormat::FP32
+        }
+        fn encode(&mut self, src: &[f32], _ctx: &aps_cpd::sync::LayerCtx, out: &mut [f32]) {
+            out.copy_from_slice(src);
+        }
+        fn decode(&mut self, _data: &mut [f32], _ctx: &aps_cpd::sync::LayerCtx) {}
+    }
+    assert!(
+        Identity.parallel_encoder().is_none(),
+        "the trait default must keep third-party codecs on the serial encode loop"
+    );
+    // A session built around it still works — it just never builds a
+    // twin pool, whatever the knob says.
+    let g: Vec<Vec<Vec<f32>>> = (0..2).map(|w| vec![vec![w as f32 + 0.5; 8]]).collect();
+    let mut s = SyncSessionBuilder::new(2)
+        .strategy(Box::new(Identity))
+        .with_encode_threads(8)
+        .with_wire(WireMode::Simulated)
+        .build();
+    let (out, _) = s.step(&g);
+    assert_eq!(out[0][0], 1.0, "0.5 and 1.5 average to 1.0");
+}
+
+/// The serial reference `local_max_exp` replaced: a plain left-to-right
+/// max-abs scan over the raw f32s, with the same zero/non-finite
+/// handling.
+fn serial_local_max_exp(grad: &[f32], world_size: usize) -> Option<i32> {
+    let mut max_abs = 0.0f32;
+    for &x in grad {
+        let a = x.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return None;
+    }
+    let v = max_abs as f64 * world_size as f64;
+    Some(v.log2().ceil() as i32)
+}
+
+#[test]
+fn tree_reduction_prepare_matches_the_serial_scan() {
+    // Sizes straddling every interesting boundary: empty, one block,
+    // ragged multi-block, and well past the reduction-parallelism
+    // threshold (64 Ki), where the host actually spawns threads. The
+    // combine tree is fixed by the block size, so whatever the machine's
+    // thread count, the tree result must equal the serial scan exactly.
+    let mut rng = Rng::new(0x7EE_5CA2);
+    for &n in &[0usize, 1, 63, 4096, 4097, 20_000, (64 << 10) + 17, 150_001] {
+        for world in [1usize, 8, 256] {
+            // Finite-only stream (the session's prepare contract).
+            let xs: Vec<f32> = (0..n)
+                .map(|_| {
+                    let mut v = generators::nasty_f32(&mut rng);
+                    if !v.is_finite() {
+                        v = 1.5e-3;
+                    }
+                    v
+                })
+                .collect();
+            assert_eq!(
+                local_max_exp(&xs, world),
+                serial_local_max_exp(&xs, world),
+                "n={n} world={world}: tree max-abs diverged from the serial scan"
+            );
+        }
+        // Zeros → None, and a planted ±INF (divergent layer) → None,
+        // regardless of where in the block structure it lands.
+        let zeros = vec![0.0f32; n];
+        assert_eq!(local_max_exp(&zeros, 8), None, "n={n}: all-zero layer");
+        if n > 0 {
+            let mut inf = vec![1.0f32; n];
+            inf[n / 2] = f32::INFINITY;
+            assert_eq!(local_max_exp(&inf, 8), None, "n={n}: divergent layer");
+        }
+    }
+}
+
+#[test]
+fn large_layer_pipeline_is_encode_thread_independent_above_the_scan_threshold() {
+    // One layer past REDUCE_PAR_THRESHOLD: the APS prepare scan and the
+    // auto encode fan-out both actually go parallel here, and a
+    // large-bucket QSGD pins the bucket-norm tree at a size where it
+    // spans many blocks. Two steps, bit-compared against the serial
+    // encode loop.
+    let layers = [(64usize << 10) + 257];
+    let world = 4;
+    for (label, spec) in [
+        ("aps/e5m2", StrategySpec::Aps { fmt: FpFormat::E5M2 }),
+        ("qsgd big-bucket", StrategySpec::Qsgd { bits: 4, bucket: 1 << 17, seed: 9 }),
+    ] {
+        let mut rng = Rng::new(0xB16_1A7E5 ^ label.len() as u64);
+        let mut serial = SyncSessionBuilder::new(world)
+            .spec(spec.clone())
+            .with_encode_threads(1)
+            .build();
+        let mut auto = SyncSessionBuilder::new(world).spec(spec.clone()).build();
+        let mut forced = SyncSessionBuilder::new(world)
+            .spec(spec.clone())
+            .with_encode_threads(8)
+            .build();
+        for step in 0..2 {
+            let grads = nasty_grads(&mut rng, world, &layers);
+            let (so, sr) = serial.step(&grads);
+            let so = so.to_vec();
+            let sr = sr.clone();
+            for (pname, session) in [("auto", &mut auto), ("8-thread", &mut forced)] {
+                let (po, pr) = session.step(&grads);
+                for (i, (x, y)) in so[0].iter().zip(po[0].iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label} step {step} elem {i}: serial vs {pname} encode"
+                    );
+                }
+                assert_eq!(pr, &sr, "{label} step {step}: {pname} report diverged");
+            }
+        }
+    }
+}

@@ -18,12 +18,14 @@
 //! Everything runs inside a single `#[test]` so no concurrently-running
 //! test can pollute the counter. The single-threaded cases keep tensor
 //! sizes below the parallelism threshold so the collectives spawn no
-//! threads; the parallel packed-fold cases at the end run
-//! `with_fold_threads(4)` on a larger model under a budget that admits
-//! per-step thread-spawn bookkeeping (`std::thread` allocates a few
-//! hundred bytes per spawn) but stays far below one element buffer —
-//! pinning that the per-thread unpack chunks are session-owned, not
-//! re-allocated per step.
+//! threads (the default auto encode pool also stays inline there); the
+//! parallel packed-fold and parallel-encode cases at the end run
+//! `with_fold_threads(4)` / `with_encode_threads(4)` on a larger model
+//! under a budget that admits per-step thread-spawn bookkeeping
+//! (`std::thread` allocates a few hundred bytes per spawn) but stays far
+//! below one element buffer — pinning that the per-thread unpack chunks
+//! and the per-worker encode-twin lanes (stages, residuals, top-k
+//! selection scratch) are session-owned, not re-allocated per step.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -165,6 +167,17 @@ fn steady_state_steps_allocate_no_element_storage() {
         budget,
     );
 
+    // Top-k sparsification: the selection now runs on session-owned
+    // (|value|, index) scratch — one fill + one select per encode, no
+    // per-call temporaries. A per-encode scratch rebuild (8 B x 1024
+    // elements x 8 workers x 4 steps) would blow this budget ~20x over.
+    assert_steady_state(
+        "ring/topk",
+        SyncSessionBuilder::new(world).spec(StrategySpec::TopK { frac: 0.25 }).build(),
+        &layers,
+        budget,
+    );
+
     // The legacy simulated wire keeps the same guarantee (packed is the
     // default above; this pins the explicit opt-out too).
     assert_steady_state(
@@ -203,6 +216,37 @@ fn steady_state_steps_allocate_no_element_storage() {
             .spec(StrategySpec::Ternary { seed: 5 })
             .with_fold_threads(4)
             .with_topology(Topology::Hierarchical { group_size: 4 })
+            .build(),
+        &par_layers,
+        par_budget,
+    );
+
+    // Parallel encode fan-out, forced 4-way (fold kept single-threaded
+    // so the window isolates the producer side): every layer takes the
+    // twin-lane entry points, so the measured steps cover the per-lane
+    // stage buffers and the twins' own scratch (error-feedback residuals,
+    // top-k selection pairs). All of it is session-owned and warm after
+    // warmup; what remains per step is encode-side thread-spawn
+    // bookkeeping (12 spawns/step here), the same order the parallel-fold
+    // cases above admit.
+    assert_steady_state(
+        "ring/aps parallel-encode",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::Aps { fmt: FpFormat::E5M2 })
+            .with_encode_threads(4)
+            .with_fold_threads(1)
+            .build(),
+        &par_layers,
+        par_budget,
+    );
+    assert_steady_state(
+        "ring/ef:topk parallel-encode",
+        SyncSessionBuilder::new(world)
+            .spec(StrategySpec::ErrorFeedback {
+                inner: Box::new(StrategySpec::TopK { frac: 0.25 }),
+            })
+            .with_encode_threads(4)
+            .with_fold_threads(1)
             .build(),
         &par_layers,
         par_budget,
